@@ -1,0 +1,64 @@
+"""Shared benchmark infrastructure.
+
+Tiers follow the paper's memory-hierarchy design remapped to the TPU
+target (DESIGN.md §3); REPRO_BENCH_SCALE (default 0.125 for the CPU
+container) scales key counts, REPRO_BENCH_QUERIES the query batch.
+All timings are best-of-3 wall times of jitted, blocked calls.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+import repro  # noqa: F401
+from repro.data import distributions, tables
+
+SCALE = float(os.environ.get("REPRO_BENCH_SCALE", "0.125"))
+N_QUERIES = int(os.environ.get("REPRO_BENCH_QUERIES", "100000"))
+SEED = 7
+
+TIERS = {k: max(1024, int(v * SCALE)) for k, v in tables.TIERS.items()}
+DATASETS = distributions.DATASETS
+
+
+_table_cache = {}
+
+
+def bench_tables(datasets=DATASETS, tiers=None):
+    key = (tuple(datasets), tuple((tiers or TIERS).items()))
+    if key not in _table_cache:
+        _table_cache[key] = tables.make_bench_tables(
+            datasets=datasets, tiers=tiers or TIERS, seed=SEED
+        )
+    return _table_cache[key]
+
+
+def queries_for(table: np.ndarray, n: int = None) -> np.ndarray:
+    return tables.make_queries(table, n or N_QUERIES, seed=SEED)
+
+
+def time_fn(fn, *args, reps: int = 3, warmup: int = 1) -> float:
+    """Best-of-reps wall seconds for a jitted call."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.tree_util.tree_map(
+            lambda x: x.block_until_ready() if hasattr(x, "block_until_ready") else x, out
+        )
+    best = np.inf
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.tree_util.tree_map(
+            lambda x: x.block_until_ready() if hasattr(x, "block_until_ready") else x, out
+        )
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.6g},{derived}")

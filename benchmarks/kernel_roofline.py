@@ -1,0 +1,85 @@
+"""Kernel-level roofline terms for the Pallas kernels (TPU v5e targets).
+
+Wall-clock on this CPU container is meaningless for the TPU kernels, so
+per DESIGN.md §7 each kernel's analytic HBM/VMEM traffic and FLOPs are
+derived from its BlockSpec tiling and reported as v5e roofline seconds,
+alongside the measured XLA-path wall time (the production fallback) for
+a like-for-like functional check.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import as_table, search
+from repro.core.rmi import build_rmi
+from repro.kernels import ops
+
+from .common import emit, time_fn
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+
+
+def run():
+    rng = np.random.default_rng(3)
+    n = 1 << 20
+    table = as_table(rng.integers(0, 2**64 - 1, size=int(n * 1.2), dtype=np.uint64))[:n]
+    nq = 65536
+    qs = rng.choice(table, nq).astype(np.uint64)
+
+    # ---- fused RMI search ----
+    m = build_rmi(table, b=4096)
+    kidx = ops.prepare_rmi_kernel_index(m, table)
+    # traffic per query: u(4) + q limbs(8) + leaf params(3 gathers ~24B)
+    # + window gathers: steps x 8B limb pairs + result(4)
+    traffic = nq * (4 + 8 + 24 + kidx.steps * 8 + 4)
+    t_mem = traffic / HBM_BW
+    emit("kernel/rmi_search/v5e_mem_bound", t_mem / nq * 1e6, f"steps={kidx.steps};bytes/q={traffic / nq:.0f}")
+    xla = jax.jit(lambda t, q: m.predecessor(t, q))
+    dt = time_fn(xla, jnp.asarray(table), jnp.asarray(qs))
+    emit("kernel/rmi_search/xla_cpu", dt / nq * 1e6, "functional fallback")
+
+    # ---- lane-wide k-ary ----
+    steps = max(1, math.ceil(math.log(n, 128)))
+    traffic = nq * (8 + steps * 128 * 8 + 4)
+    emit("kernel/kary128/v5e_mem_bound", traffic / HBM_BW / nq * 1e6, f"steps={steps}")
+    xla = jax.jit(lambda t, q: search.kbfs(t, q, k=128))
+    dt = time_fn(xla, jnp.asarray(table), jnp.asarray(qs))
+    emit("kernel/kary128/xla_cpu", dt / nq * 1e6, "")
+
+    # binary-search baseline traffic: ceil(log2 n) dependent 8B gathers
+    steps_b = math.ceil(math.log2(n))
+    emit("kernel/bfs_baseline/v5e_mem_bound", nq * (8 + steps_b * 8 + 4) / HBM_BW / nq * 1e6, f"steps={steps_b}")
+
+    # ---- embedding bag ----
+    v, d, items, bags = 4096, 128, 8192, 1024
+    table_f = rng.normal(size=(v, d)).astype(np.float32)
+    ids = rng.integers(0, v, items).astype(np.int32)
+    seg = np.sort(rng.integers(0, bags, items)).astype(np.int32)
+    w = rng.normal(size=items).astype(np.float32)
+    flops = 2.0 * items * v * d / 512 * 512  # one-hot matmuls dominate
+    t_cmp = (2.0 * items * v + 2.0 * bags * items * d) / PEAK_FLOPS
+    t_memb = (v * d * 4 + items * (4 + 4 + 4) + bags * d * 4) / HBM_BW
+    emit("kernel/embedding_bag/v5e_bound", max(t_cmp, t_memb) * 1e6, f"dominant={'compute' if t_cmp > t_memb else 'memory'}")
+    from repro.kernels import ref
+
+    xla = jax.jit(lambda t, i, s, ww: ref.embedding_bag_ref(t, i, s, ww, bags))
+    dt = time_fn(xla, jnp.asarray(table_f), jnp.asarray(ids), jnp.asarray(seg), jnp.asarray(w))
+    emit("kernel/embedding_bag/xla_cpu", dt * 1e6, f"items={items}")
+
+    # ---- flash decode ----
+    b, hq, hkv, dh, s = 8, 32, 8, 128, 32768
+    flops = 2.0 * b * hq * s * dh * 2
+    bytes_ = b * s * hkv * dh * 2 * 2  # stream K and V once (bf16)
+    t_cmp = flops / PEAK_FLOPS
+    t_memd = bytes_ / HBM_BW
+    emit(
+        "kernel/decode_attention/v5e_bound",
+        max(t_cmp, t_memd) * 1e6,
+        f"dominant={'memory' if t_memd > t_cmp else 'compute'};arith_int={flops / bytes_:.2f}",
+    )

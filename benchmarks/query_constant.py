@@ -1,0 +1,63 @@
+"""Paper Figures 5-6 (+supp 2-6): constant-space models on Sorted Table
+Search procedures.
+
+Grid per (dataset x tier): procedures {BFS, BBS, BFE, K-BFS(6), IBS} with
+no model, then models {L, Q, C, KO(15)} with branch-free and branchy
+epilogues.  Reports avg query time and the model's reduction factor.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import build_index, model_reduction_factor, search
+
+from .common import bench_tables, emit, queries_for, time_fn
+
+
+def run(tiers=None, datasets=None):
+    results = []
+    for bt in bench_tables(datasets=datasets or ("amzn64", "osm"), tiers=tiers):
+        table = bt.table
+        qs = queries_for(table)
+        tj, qj = jnp.asarray(table), jnp.asarray(qs)
+        nq = len(qs)
+
+        # --- plain procedures ---
+        layout, ranks, h = search.eytzinger_layout(table)
+        lj, rj = jnp.asarray(layout), jnp.asarray(ranks)
+        plain = {
+            "BFS": jax.jit(lambda t, q: search.bfs(t, q)),
+            "BBS": jax.jit(lambda t, q: search.bbs(t, q)),
+            "K-BFS6": jax.jit(lambda t, q: search.kbfs(t, q, k=6)),
+            "IBS": jax.jit(lambda t, q: search.ibs(t, q)),
+        }
+        for name, fn in plain.items():
+            dt = time_fn(fn, tj, qj)
+            emit(f"query_const/{bt.name}/{name}", dt / nq * 1e6, "rf=0")
+            results.append((bt.name, name, dt / nq))
+        dt = time_fn(jax.jit(lambda l, r, q: search.bfe(l, r, q, height=h, n=len(table))), lj, rj, qj)
+        emit(f"query_const/{bt.name}/BFE", dt / nq * 1e6, "rf=0")
+        results.append((bt.name, "BFE", dt / nq))
+
+        # --- learned constant-space models ---
+        for kind, params, label in [
+            ("L", {}, "L"),
+            ("Q", {}, "Q"),
+            ("C", {}, "C"),
+            ("KO", {"k": 15}, "15O"),
+        ]:
+            m = build_index(kind, table, **params)
+            rf = model_reduction_factor(m, table, qs[:2000])
+            fn_bf = jax.jit(lambda t, q: m.predecessor(t, q))
+            dt = time_fn(fn_bf, tj, qj)
+            emit(f"query_const/{bt.name}/{label}-BFS", dt / nq * 1e6, f"rf={rf:.2f}")
+            results.append((bt.name, f"{label}-BFS", dt / nq))
+            if kind == "KO":  # branchy epilogue variant (paper's KO-BBS)
+                fn_bb = jax.jit(lambda t, q: m.predecessor(t, q, branchy=True))
+                dt = time_fn(fn_bb, tj, qj)
+                emit(f"query_const/{bt.name}/{label}-BBS", dt / nq * 1e6, f"rf={rf:.2f}")
+                results.append((bt.name, f"{label}-BBS", dt / nq))
+    return results

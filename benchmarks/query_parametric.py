@@ -1,0 +1,62 @@
+"""Paper Figures 7-8 (+supp 8-12): parametric-space models in small space.
+
+Per (dataset x tier): SY-RMI and bi-criteria PGM_M at 0.05% / 0.7% / 2%
+space budgets, plus best-under-10% RMI / PGM / RS / B+-tree, with BBS and
+BFS baselines — query time vs model space.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import build_index, search
+from repro.core.sy_rmi import cdfshop_sweep, mine_ub, build_sy_rmi
+
+from .common import bench_tables, emit, queries_for, time_fn
+
+SPACE_PCTS = (0.05, 0.7, 2.0)
+
+
+def run(tiers=None, datasets=None):
+    results = []
+    for bt in bench_tables(datasets=datasets or ("amzn64", "osm"), tiers=tiers):
+        table = bt.table
+        n = len(table)
+        table_bytes = n * 8
+        qs = queries_for(table)
+        tj, qj = jnp.asarray(table), jnp.asarray(qs)
+        nq = len(qs)
+
+        for name, fn in [
+            ("BBS", jax.jit(lambda t, q: search.bbs(t, q))),
+            ("BFS", jax.jit(lambda t, q: search.bfs(t, q))),
+        ]:
+            dt = time_fn(fn, tj, qj)
+            emit(f"query_param/{bt.name}/{name}", dt / nq * 1e6, "space=0")
+            results.append((bt.name, name, dt / nq, 0))
+
+        sweep = cdfshop_sweep(table, max_models=6)
+        ub = mine_ub(sweep)
+
+        models = []
+        for pct in SPACE_PCTS:
+            models.append((f"SY-RMI{pct}%", build_sy_rmi(table, pct, ub)))
+            budget = int(pct / 100 * table_bytes)
+            models.append((f"PGM_M{pct}%", build_index("PGM_M", table, space_budget_bytes=budget)))
+        # best-under-10% from the sweep + classic indexes
+        under10 = [m for m in sweep if m.space_bytes() <= 0.1 * table_bytes]
+        if under10:
+            best = min(under10, key=lambda m: m.max_eps)
+            models.append(("RMI<=10%", best))
+        models.append(("RS", build_index("RS", table, eps=64, r_bits=10)))
+        models.append(("BTree", build_index("BTREE", table, fanout=16)))
+
+        for label, m in models:
+            fn = jax.jit(lambda t, q, m=m: m.predecessor(t, q))
+            dt = time_fn(fn, tj, qj)
+            pct = 100.0 * m.space_bytes() / table_bytes
+            emit(f"query_param/{bt.name}/{label}", dt / nq * 1e6, f"space={pct:.4f}%")
+            results.append((bt.name, label, dt / nq, pct))
+    return results

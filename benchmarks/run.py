@@ -1,0 +1,49 @@
+"""Benchmark harness entry: one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--only NAME]``
+prints ``name,us_per_call,derived`` CSV lines (common.emit).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="substring filter on benchmark module")
+    args = ap.parse_args()
+
+    from . import (
+        kernel_roofline,
+        query_constant,
+        query_parametric,
+        sy_rmi_mining,
+        synoptic,
+        training_time,
+    )
+
+    suites = [
+        ("training_time", training_time.run),  # paper Tables 2-5
+        ("query_constant", query_constant.run),  # paper Figs 5-6
+        ("query_parametric", query_parametric.run),  # paper Figs 7-8
+        ("sy_rmi_mining", sy_rmi_mining.run),  # paper Fig 4
+        ("synoptic", synoptic.run),  # paper supp Table 6
+        ("kernel_roofline", kernel_roofline.run),  # TPU kernel terms
+    ]
+    for name, fn in suites:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.perf_counter()
+        print(f"# === {name} ===", flush=True)
+        try:
+            fn()
+        except Exception as e:  # keep the harness going; report the failure
+            print(f"# {name} FAILED: {e!r}", file=sys.stderr, flush=True)
+        print(f"# === {name} done in {time.perf_counter() - t0:.1f}s ===", flush=True)
+
+
+if __name__ == "__main__":
+    main()

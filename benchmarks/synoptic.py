@@ -1,0 +1,47 @@
+"""Paper Supplementary Table 6: synoptic space / time / reduction-factor
+table, normalised against the best query-time model per tier."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import build_index, model_reduction_factor
+from repro.core.sy_rmi import cdfshop_sweep, mine_ub, build_sy_rmi
+
+from .common import TIERS, bench_tables, emit, queries_for, time_fn
+
+
+def run():
+    for tier in TIERS:
+        bts = [bt for bt in bench_tables(datasets=("amzn64", "osm", "wiki")) if bt.tier == tier]
+        agg = {}
+        for bt in bts:
+            table = bt.table
+            qs = queries_for(table, 20_000)
+            tj, qj = jnp.asarray(table), jnp.asarray(qs)
+            sweep = cdfshop_sweep(table, max_models=4)
+            ub = mine_ub(sweep)
+            models = [("BestRMI", min(sweep, key=lambda m: m.max_eps))]
+            for pct in (0.05, 0.7, 2.0):
+                models.append((f"SY-RMI{pct}", build_sy_rmi(table, pct, ub)))
+                budget = int(pct / 100 * len(table) * 8)
+                models.append((f"PGM{pct}", build_index("PGM_M", table, space_budget_bytes=budget)))
+            models.append(("RS", build_index("RS", table, eps=64)))
+            models.append(("BTree", build_index("BTREE", table, fanout=16)))
+            for label, m in models:
+                fn = jax.jit(lambda t, q, m=m: m.predecessor(t, q))
+                dt = time_fn(fn, tj, qj, reps=2) / len(qs)
+                rf = model_reduction_factor(m, table, qs[:2000])
+                agg.setdefault(label, []).append((dt, m.space_bytes(), rf))
+
+        best_label = min(agg, key=lambda k: np.mean([r[0] for r in agg[k]]))
+        bt_, bs_, brf = (np.mean([r[i] for r in agg[best_label]]) for i in range(3))
+        for label, rows in sorted(agg.items()):
+            t, s, rf = (np.mean([r[i] for r in rows]) for i in range(3))
+            emit(
+                f"synoptic/{tier}/{label}",
+                t * 1e6,
+                f"time_ratio={t / bt_:.3g};space_ratio={s / bs_:.3g};rf={rf:.2f};best={best_label}",
+            )

@@ -1,0 +1,47 @@
+"""Paper Tables 2-5: model training (build) time per element.
+
+Columns mirror the paper: L, Q, C, 15O-BFS, SY-RMI 2%, RMI sweep (SOSD
+analogue: avg over the CDFShop grid), RS, PGM — per dataset x tier,
+reported in seconds per table element.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import build_index
+from repro.core.sy_rmi import cdfshop_sweep, mine_ub, build_sy_rmi
+
+from .common import bench_tables, emit
+
+
+def run(tiers=None):
+    rows = []
+    for bt in bench_tables(tiers=tiers):
+        n = len(bt.table)
+        times = {}
+        for kind, params, label in [
+            ("L", {}, "L"),
+            ("Q", {}, "Q"),
+            ("C", {}, "C"),
+            ("KO", {"k": 15}, "15O-BFS"),
+            ("RS", {"eps": 32}, "RS"),
+            ("PGM", {"eps": 64}, "PGM"),
+        ]:
+            m = build_index(kind, bt.table, **params)
+            times[label] = m.build_time / n
+
+        t0 = time.perf_counter()
+        sweep = cdfshop_sweep(bt.table, max_models=6)
+        times["RMI-sweep"] = (time.perf_counter() - t0) / (len(sweep) * n)
+        ub = mine_ub(sweep)
+        t0 = time.perf_counter()
+        build_sy_rmi(bt.table, space_pct=2.0, ub=ub)
+        times["SY-RMI2%"] = (time.perf_counter() - t0) / n
+
+        for label, t in times.items():
+            emit(f"train_time/{bt.name}/{label}", t * 1e6, f"n={n}")
+        rows.append((bt.name, times))
+    return rows

@@ -1,0 +1,64 @@
+"""Serve a small LM with batched requests through the continuous-
+batching decode engine (paper-integration: the paged KV pool's page
+table is a learned index).
+
+    PYTHONPATH=src python examples/serve_lm.py --requests 12
+"""
+
+import argparse
+import time
+
+import numpy as np
+import jax
+
+import repro  # noqa: F401
+from repro.dist.sharding import single_device_ctx
+from repro.models import transformer
+from repro.models.transformer import LMConfig
+from repro.serve.engine import DecodeEngine, Request
+from repro.serve.kvcache import PagedPool
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = LMConfig(
+        name="serve-demo", n_layers=4, d_model=128, n_heads=4, n_kv_heads=2,
+        head_dim=32, d_ff=512, vocab=4096, dtype="float32",
+    )
+    ctx = single_device_ctx()
+    params = transformer.init(jax.random.key(0), cfg)
+    engine = DecodeEngine(params, cfg, ctx, batch_slots=4, max_seq=128)
+
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(rid=i, prompt=rng.integers(0, cfg.vocab, rng.integers(3, 10)).astype(np.int32),
+                max_new_tokens=args.max_new)
+        for i in range(args.requests)
+    ]
+    for r in reqs:
+        engine.submit(r)
+
+    t0 = time.time()
+    ticks = engine.run_until_drained()
+    dt = time.time() - t0
+    total_toks = sum(len(r.out_tokens) for r in reqs)
+    print(f"[serve_lm] {len(reqs)} requests, {total_toks} tokens in {ticks} ticks / {dt:.1f}s "
+          f"({total_toks / dt:.1f} tok/s, continuous batching over 4 slots)")
+    assert all(r.done for r in reqs)
+
+    # paged KV pool with learned-index page table (integration point 5)
+    pool = PagedPool(n_pages=64, n_layers=cfg.n_layers, page_size=16,
+                     n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim)
+    pool.add_sequence(0)
+    pool.ensure_capacity(0, 100)
+    pages, offs = pool.position_lookup(0, np.array([0, 15, 16, 99]))
+    print(f"[serve_lm] paged-KV learned lookup: positions [0,15,16,99] -> pages {np.asarray(pages)}, "
+          f"offsets {np.asarray(offs)}; pool util {pool.utilization():.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""End-to-end LM training driver: data pipeline -> sharded train loop ->
+checkpoints -> restart, on the framework's real code paths.
+
+    PYTHONPATH=src python examples/train_lm.py --preset cpu --steps 200
+    PYTHONPATH=src python examples/train_lm.py --preset 100m   # real HW
+
+The ``cpu`` preset (~8M params) finishes a few hundred steps in minutes
+on this container; ``100m`` is the same driver at ~100M params for a
+real accelerator.  Loss is expected to drop from ~ln(V) as the model
+memorises the synthetic Zipf corpus.
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+import repro  # noqa: F401
+from repro.data import pipeline
+from repro.dist.sharding import single_device_ctx
+from repro.models import transformer
+from repro.models.transformer import LMConfig
+from repro.train import TrainConfig, init_train_state, loop, make_train_step
+
+PRESETS = {
+    "cpu": dict(
+        cfg=LMConfig(
+            name="demo-8m", n_layers=4, d_model=128, n_heads=4, n_kv_heads=2,
+            head_dim=32, d_ff=512, vocab=8192, q_chunk=128, dtype="float32",
+        ),
+        batch=8, seq=128,
+    ),
+    "100m": dict(
+        cfg=LMConfig(
+            name="demo-100m", n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+            head_dim=64, d_ff=2048, vocab=32000, q_chunk=512,
+        ),
+        batch=32, seq=1024,
+    ),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="cpu", choices=list(PRESETS))
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--lr", type=float, default=3e-3)
+    args = ap.parse_args()
+
+    p = PRESETS[args.preset]
+    cfg = p["cfg"]
+    ctx = single_device_ctx()
+
+    print(f"[train_lm] {cfg.name}: ~{cfg.params_count/1e6:.1f}M params")
+    corpus = pipeline.synth_corpus(vocab_size=cfg.vocab, n_docs=512, mean_len=256, seed=0)
+    batcher = pipeline.TokenBatcher(corpus, batch_size=p["batch"], seq_len=p["seq"], seed=0)
+
+    tcfg = TrainConfig(lr=args.lr, warmup=20, total_steps=args.steps, schedule="warmup_cosine")
+    loss_fn = lambda prm, b: transformer.loss_fn(prm, b, cfg, ctx)
+    step_fn = jax.jit(make_train_step(loss_fn, tcfg))
+    state = init_train_state(jax.random.key(0), lambda r: transformer.init(r, cfg), tcfg)
+
+    t0 = time.time()
+    state, report = loop.run(
+        step_fn, state, batcher.batch_at,
+        loop.LoopConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir, ckpt_every=50, log_every=10),
+    )
+    dt = time.time() - t0
+    toks = args.steps * p["batch"] * p["seq"]
+    print(
+        f"[train_lm] {report.steps_run} steps in {dt:.1f}s "
+        f"({toks / dt:.0f} tok/s); loss {report.losses[0]:.3f} -> {report.losses[-1]:.3f}; "
+        f"stragglers: {len(report.straggler_steps)}"
+    )
+    assert report.losses[-1] < report.losses[0], "loss should decrease"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""repro — Learned Sorted Table Search and Static Indexes in Small Model Space.
+
+Faithful JAX reproduction + TPU-native production framework around the
+learned static indexes of Amato, Lo Bosco & Giancarlo (2021).
+
+x64 is enabled globally: the paper's tables hold 64-bit integer keys and
+CDF regression needs f64 precision. All *model* code (transformers, GNN,
+recsys) uses explicit bf16/f32/int32 dtypes and is unaffected.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+__version__ = "1.0.0"

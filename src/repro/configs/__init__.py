@@ -1,0 +1,4 @@
+"""Architecture configs: repro.configs.get("<arch-id>") -> ArchSpec."""
+
+from . import archs  # noqa: F401  (registers the 10 archs)
+from .base import ArchSpec, ShapeCell, get, list_archs

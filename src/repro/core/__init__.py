@@ -1,0 +1,18 @@
+"""Core library: the paper's learned static indexes as composable JAX modules.
+
+Hierarchy (paper §3.2): constant-space atomic models (L/Q/C) and KO-BFS;
+parametric-space two-level RMIs and the synoptic SY-RMI; CDF-approximation
+controlled PGM (+ bi-criteria) and RadixSpline; B+-tree and plain Sorted
+Table Search procedures as baselines.
+"""
+
+from . import atomic, btree, builder, cdf, kbfs, pgm, radix_spline, rmi, search, sy_rmi
+from .builder import KINDS, build_index, model_reduction_factor
+from .cdf import as_table, reduction_factor, true_ranks
+
+__all__ = [
+    "atomic", "btree", "builder", "cdf", "kbfs", "pgm", "radix_spline",
+    "rmi", "search", "sy_rmi",
+    "KINDS", "build_index", "model_reduction_factor",
+    "as_table", "reduction_factor", "true_ranks",
+]

@@ -1,0 +1,142 @@
+"""Atomic models (paper §3.2, first class): L / Q / C regression of the CDF.
+
+A single polynomial (degree 1, 2, 3) fit to the key->rank curve via least
+squares — constant space.  The verified error bound is *exact*: we bound
+the polynomial between consecutive keys through its critical points, so
+the predicted window provably contains the predecessor (the paper relies
+on empirically-measured max error; we tighten that to a guarantee so the
+downstream bounded search never needs a fallback).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import search
+from .cdf import keys_to_unit, POS_DTYPE
+
+
+def poly_fit(u: np.ndarray, y: np.ndarray, degree: int) -> np.ndarray:
+    """Least-squares polynomial fit, ascending coefficients, padded to 4."""
+    # Vandermonde least squares in f64; np.polyfit returns descending.
+    coef_desc = np.polyfit(u, y, degree)
+    coef_asc = coef_desc[::-1]
+    out = np.zeros(4, dtype=np.float64)
+    out[: degree + 1] = coef_asc
+    return out
+
+
+def poly_eval_np(coef: np.ndarray, u: np.ndarray) -> np.ndarray:
+    return ((coef[3] * u + coef[2]) * u + coef[1]) * u + coef[0]
+
+
+def poly_eval_jnp(coef, u):
+    return ((coef[..., 3] * u + coef[..., 2]) * u + coef[..., 1]) * u + coef[..., 0]
+
+
+def poly_crit_points(coef: np.ndarray) -> np.ndarray:
+    """Real roots of p' (ascending coef, padded-cubic) — where p can turn."""
+    # p'(u) = c1 + 2 c2 u + 3 c3 u^2
+    c1, c2, c3 = coef[1], 2.0 * coef[2], 3.0 * coef[3]
+    if c3 != 0.0:
+        disc = c2 * c2 - 4.0 * c3 * c1
+        if disc < 0:
+            return np.empty(0)
+        s = np.sqrt(disc)
+        return np.array([(-c2 - s) / (2 * c3), (-c2 + s) / (2 * c3)])
+    if c2 != 0.0:
+        return np.array([-c1 / c2])
+    return np.empty(0)
+
+
+def poly_exact_eps(
+    coef: np.ndarray,
+    u_keys: np.ndarray,
+    ranks: np.ndarray,
+    u_lo: float,
+    u_hi: float,
+) -> int:
+    """Exact bound on max |p(x) - pred_rank(x)| for x in [u_lo, u_hi].
+
+    Polynomial extremes between consecutive keys occur at interval
+    endpoints or critical points of p; evaluating both and adding the
+    rank-slack of 1 yields a guaranteed window half-width.
+    """
+    preds = poly_eval_np(coef, u_keys)
+    eps_keys = float(np.max(np.abs(preds - ranks))) if len(ranks) else 0.0
+    eps_crit = 0.0
+    for uc in poly_crit_points(coef):
+        if u_lo < uc < u_hi:
+            j = int(np.searchsorted(u_keys, uc, side="right")) - 1
+            j = min(max(j, 0), len(ranks) - 1)
+            pc = float(poly_eval_np(coef, np.array([uc]))[0])
+            eps_crit = max(eps_crit, abs(pc - ranks[j]), abs(pc - (ranks[j] + 1 if j + 1 < len(ranks) else ranks[j])))
+    return int(np.ceil(max(eps_keys, eps_crit))) + 1
+
+
+@dataclass
+class AtomicModel:
+    """L (degree=1) / Q (2) / C (3) regression over the whole table."""
+
+    degree: int
+    coef: jnp.ndarray  # (4,) f64 ascending
+    kmin: jnp.ndarray  # scalar f64
+    inv_span: jnp.ndarray  # scalar f64
+    eps: int
+    n: int
+    build_time: float = 0.0
+    name: str = field(default="")
+
+    def intervals(self, table, q):
+        u = (q.astype(jnp.float64) - self.kmin) * self.inv_span
+        u = jnp.clip(u, 0.0, 1.0)  # out-of-domain queries clamp to the span
+        p = jnp.clip(poly_eval_jnp(self.coef, u), -4.0e15, 4.0e15)
+        lo = jnp.floor(p).astype(POS_DTYPE) - self.eps
+        hi = jnp.ceil(p).astype(POS_DTYPE) + self.eps
+        return jnp.clip(lo, 0, self.n - 1), jnp.clip(hi, 0, self.n - 1)
+
+    @property
+    def max_window(self) -> int:
+        return min(2 * self.eps + 3, self.n)
+
+    def predecessor(self, table, q):
+        lo, hi = self.intervals(table, q)
+        return search.bounded_bfs(table, q, lo, hi, max_window=self.max_window)
+
+    def space_bytes(self) -> int:
+        # coefficients actually used + kmin/span + eps: constant space.
+        return 8 * (self.degree + 1) + 16 + 8
+
+
+def build_atomic(table_np: np.ndarray, degree: int = 1) -> AtomicModel:
+    t0 = time.perf_counter()
+    n = len(table_np)
+    kmin, kmax = table_np[0], table_np[-1]
+    span = np.float64(kmax - kmin)
+    inv_span_np = np.float64(1.0) / span if span > 0 else np.float64(1.0)
+    # same expression as the query path (multiply by reciprocal)
+    u = (table_np.astype(np.float64) - np.float64(kmin)) * inv_span_np
+    ranks = np.arange(n, dtype=np.float64)
+    if n <= degree + 1:
+        coef = np.zeros(4)
+        coef[0] = 0.0
+        coef[1] = float(n - 1) if n > 1 else 0.0
+        eps = n
+    else:
+        coef = poly_fit(u, ranks, degree)
+        eps = poly_exact_eps(coef, u, ranks, 0.0, 1.0)
+    dt = time.perf_counter() - t0
+    return AtomicModel(
+        degree=degree,
+        coef=jnp.asarray(coef),
+        kmin=jnp.float64(np.float64(kmin)),
+        inv_span=jnp.float64(inv_span_np),
+        eps=int(min(eps, 1 << 40)),  # NEVER clip to n: the window math needs the true bound
+        n=n,
+        build_time=dt,
+        name={1: "L", 2: "Q", 3: "C"}[degree],
+    )

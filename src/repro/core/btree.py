@@ -1,0 +1,95 @@
+"""Static array-packed B+-tree baseline (paper §3.1, Classic Indexes).
+
+Built bottom-up over the sorted table: each internal level holds the
+first key of every fanout-F group of the level below, padded with the
+max key.  Query: descend with a vectorised F-way fence compare per level
+(cache-conscious CSS-tree style — the natural static B+-tree on a vector
+machine), then a bounded branch-free search inside the final leaf block.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import search
+from .cdf import POS_DTYPE
+
+
+@dataclass
+class BTreeModel:
+    fanout: int
+    levels: list  # root-first list of jnp uint64 arrays, padded to F multiples
+    valid: list  # real (non-pad) entry count per level
+    n: int
+    build_time: float = 0.0
+    name: str = "BTree"
+
+    def intervals(self, table, q):
+        f = self.fanout
+        if not self.levels:  # degenerate: table no larger than one block
+            z = jnp.zeros(q.shape, dtype=POS_DTYPE)
+            return z, z + (self.n - 1)
+        node = jnp.zeros(q.shape, dtype=POS_DTYPE)  # node index at current level
+        for keys, nv in zip(self.levels, self.valid):
+            base = node * f
+            fence = base[..., None] + jnp.arange(f, dtype=POS_DTYPE)
+            v = jnp.take(keys, fence, mode="clip")
+            child = jnp.sum((v <= q[..., None]).astype(POS_DTYPE), axis=-1)
+            child = jnp.maximum(child - 1, 0)  # child i covers [key_i, key_{i+1})
+            # clamp into the real entries: q == max-key pads otherwise
+            # walk into padding and break the final block window
+            node = jnp.minimum(base + child, nv - 1)
+        node = jnp.minimum(node, (self.n + f - 1) // f - 1)
+        lo = node * f
+        hi = jnp.minimum(lo + f - 1, self.n - 1)
+        lo = jnp.maximum(lo - 1, 0)  # predecessor may sit one block left
+        return lo, hi
+
+    @property
+    def max_window(self) -> int:
+        return min(self.fanout + 1, self.n)
+
+    def predecessor(self, table, q):
+        lo, hi = self.intervals(table, q)
+        return search.bounded_bfs(table, q, lo, hi, max_window=self.max_window)
+
+    def space_bytes(self) -> int:
+        return sum(int(l.shape[0]) for l in self.levels) * 8 + 8
+
+
+def build_btree(table_np: np.ndarray, fanout: int = 16) -> BTreeModel:
+    t0 = time.perf_counter()
+    n = len(table_np)
+    f = max(2, fanout)
+    maxk = np.iinfo(np.uint64).max
+
+    levels = []
+    valid = []
+    cur = table_np
+    while len(cur) > f:
+        first = cur[::f]
+        n_groups = len(first)
+        padded_len = ((n_groups + f - 1) // f) * f
+        lvl = np.full(padded_len, maxk, dtype=np.uint64)
+        lvl[:n_groups] = first
+        levels.append(lvl)
+        valid.append(n_groups)
+        cur = first
+
+    levels.reverse()  # root first (empty if the table fits in one block)
+    valid.reverse()
+    # NOTE: level l holds first-keys of groups of level l+1; the *leaf*
+    # level's groups index directly into the table.
+    dt = time.perf_counter() - t0
+    return BTreeModel(
+        fanout=f,
+        levels=[jnp.asarray(l) for l in levels],
+        valid=valid,
+        n=n,
+        build_time=dt,
+        name=f"BTree[f={f}]",
+    )

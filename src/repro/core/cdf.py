@@ -1,0 +1,67 @@
+"""CDF / rank utilities shared by every learned index model.
+
+A sorted table ``A[0..n)`` of (unsigned) 64-bit keys induces the empirical
+CDF ``rank(x) = #{i : A[i] <= x}``.  Predecessor search returns
+``rank(x) - 1``, i.e. the largest ``j`` with ``A[j] <= x`` (``-1`` if
+``x < A[0]``).  Every model in :mod:`repro.core` predicts an interval
+``[lo, hi]`` guaranteed to contain the predecessor; the reduction factor
+(paper §2) measures how much of the table a prediction discards.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+# Keys are stored as uint64.  For regression they are mapped into f64 via a
+# per-model affine rescaling; uint64 -> f64 loses bits below 2^-11 of the
+# range, which is absorbed into the model's verified error bound.
+KEY_DTYPE = np.uint64
+POS_DTYPE = np.int64
+
+
+def as_table(keys) -> np.ndarray:
+    """Sorted, deduplicated uint64 table (host side)."""
+    arr = np.asarray(keys, dtype=KEY_DTYPE)
+    arr = np.unique(arr)  # sorts and dedups
+    return arr
+
+
+def keys_to_unit(keys: np.ndarray, kmin: np.uint64, kmax: np.uint64) -> np.ndarray:
+    """Map keys into [0, 1] f64 for regression (host side)."""
+    span = np.float64(kmax - kmin)
+    if span == 0:
+        span = 1.0
+    return (keys.astype(np.float64) - np.float64(kmin)) / span
+
+
+def keys_to_unit_jnp(keys, kmin, inv_span):
+    """Same mapping, jittable.  ``inv_span`` precomputed as 1/(kmax-kmin)."""
+    return (keys.astype(jnp.float64) - kmin.astype(jnp.float64)) * inv_span
+
+
+def true_ranks(table: np.ndarray, queries: np.ndarray) -> np.ndarray:
+    """Oracle predecessor ranks via numpy (testing / reduction factor)."""
+    return np.searchsorted(table, queries, side="right").astype(POS_DTYPE) - 1
+
+
+def reduction_factor(interval_lo, interval_hi, n: int) -> float:
+    """Paper §2: avg % of the table discarded by the model's predictions.
+
+    ``interval_lo/hi`` are inclusive bounds per query (device or host
+    arrays).  Empty or clipped intervals count their clipped length.
+    """
+    lo = np.asarray(interval_lo, dtype=np.float64)
+    hi = np.asarray(interval_hi, dtype=np.float64)
+    lengths = np.clip(hi - lo + 1.0, 1.0, float(n))
+    return float(100.0 * (1.0 - lengths.mean() / float(n)))
+
+
+def verified_max_error(predictions: np.ndarray, ranks: np.ndarray) -> int:
+    """Max |prediction - rank| over the table's own keys (build-time)."""
+    return int(np.max(np.abs(np.round(predictions) - ranks)))
+
+
+def ceil_log2(n: int) -> int:
+    n = max(int(n), 1)
+    return max(1, int(np.ceil(np.log2(n)))) if n > 1 else 1

@@ -1,0 +1,162 @@
+"""KO-BFS / KO-BBS — the paper's first new model (§3.2, class 2).
+
+Two-level hybrid, constant space: partition the *table* into ``k``
+equal-rank segments (k <= 20), fit all three atomic models per segment,
+keep the one with the best reduction factor (for fixed-window atomic
+models, RF ordering == error-bound ordering, so we pick the smallest
+exact eps).  Query: sequential fence scan (k is a small constant) ->
+per-segment polynomial predict -> bounded branch-free (KO-BFS) or
+branchy (KO-BBS) search.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import search
+from .atomic import poly_fit, poly_exact_eps, poly_eval_jnp
+from .cdf import keys_to_unit, POS_DTYPE
+
+
+@dataclass
+class KOModel:
+    k: int
+    fences: jnp.ndarray  # (k-1,) uint64 — first key of segments 1..k-1
+    coef: jnp.ndarray  # (k, 4) f64 ascending, per-segment
+    kmin_seg: jnp.ndarray  # (k,) f64
+    inv_span_seg: jnp.ndarray  # (k,) f64
+    eps: jnp.ndarray  # (k,) int64
+    seg_start: jnp.ndarray  # (k+1,) int64 rank fences
+    max_eps: int
+    max_width: int
+    n: int
+    build_time: float = 0.0
+    name: str = "KO"
+
+    def _segment(self, q):
+        # Sequential-scan semantics of the paper: k-1 fence compares.
+        return jnp.sum(
+            (q[..., None] >= self.fences[None, :]).astype(POS_DTYPE), axis=-1
+        )
+
+    def intervals(self, table, q):
+        s = self._segment(q)
+        coef = jnp.take(self.coef, s, axis=0)
+        kmin = jnp.take(self.kmin_seg, s)
+        inv_span = jnp.take(self.inv_span_seg, s)
+        eps = jnp.take(self.eps, s)
+        u = (q.astype(jnp.float64) - kmin) * inv_span
+        u = jnp.clip(u, 0.0, 1.0)
+        p = jnp.clip(poly_eval_jnp(coef, u), -4.0e15, 4.0e15)
+        lo = jnp.floor(p).astype(POS_DTYPE) - eps
+        hi = jnp.ceil(p).astype(POS_DTYPE) + eps
+        # The fence scan proves pred in [seg_start[s]-1, seg_start[s+1]-1]:
+        # clamp the window into that range (handles model blow-ups).
+        b_lo = jnp.maximum(jnp.take(self.seg_start, s) - 1, 0)
+        b_hi = jnp.take(self.seg_start, s + 1) - 1
+        lo = jnp.clip(lo, b_lo, b_hi)
+        hi = jnp.clip(hi, b_lo, b_hi)
+        return lo, hi
+
+    @property
+    def max_window(self) -> int:
+        return min(2 * self.max_eps + 3, self.max_width + 2, self.n)
+
+    def predecessor(self, table, q, *, branchy: bool = False):
+        lo, hi = self.intervals(table, q)
+        if branchy:  # KO-BBS epilogue
+            return _bounded_bbs(table, q, lo, hi)
+        return search.bounded_bfs(table, q, lo, hi, max_window=self.max_window)
+
+    def space_bytes(self) -> int:
+        # fences + coeffs + rescale + eps per segment: O(k) = constant.
+        return self.k * (8 + 32 + 16 + 4) + 8
+
+
+def _bounded_bbs(table, q, lo, hi):
+    """Branchy bounded epilogue (for KO-BBS): early-exit while_loop."""
+    import jax.lax as lax
+
+    res0 = jnp.full(q.shape, -1, dtype=POS_DTYPE)
+    active0 = jnp.ones(q.shape, dtype=bool)
+
+    def cond(state):
+        return jnp.any(state[3])
+
+    def body(state):
+        lo, hi, res, active = state
+        mid = (lo + hi) >> 1
+        v = jnp.take(table, mid, mode="clip")
+        found = active & (v == q)
+        res = jnp.where(found, mid, res)
+        go_right = v < q
+        lo_n = jnp.where(active & go_right, mid + 1, lo)
+        hi_n = jnp.where(active & ~go_right, mid - 1, hi)
+        res = jnp.where(active & ~found & (lo_n > hi_n), hi_n, res)
+        active = active & ~found & (lo_n <= hi_n)
+        return lo_n, hi_n, res, active
+
+    import jax.lax as lax
+
+    _, _, res, _ = lax.while_loop(cond, body, (lo, hi, res0, active0))
+    return res
+
+
+def build_ko(table_np: np.ndarray, k: int = 15) -> KOModel:
+    """Fit L/Q/C per segment, keep the best (smallest exact eps)."""
+    t0 = time.perf_counter()
+    n = len(table_np)
+    k = max(1, min(k, n))
+    seg_start = (np.arange(k + 1, dtype=np.int64) * n) // k
+    fences = table_np[seg_start[1:k]]
+
+    coefs = np.zeros((k, 4), dtype=np.float64)
+    kmins = np.zeros(k, dtype=np.float64)
+    inv_spans = np.ones(k, dtype=np.float64)
+    epss = np.zeros(k, dtype=np.int64)
+
+    for s in range(k):
+        a, b = int(seg_start[s]), int(seg_start[s + 1])
+        # extended range for the boundary-safe error bound
+        ea, eb = max(a - 1, 0), min(b + 1, n)
+        keys = table_np[ea:eb]
+        ranks = np.arange(ea, eb, dtype=np.float64)
+        kmin, kmax = table_np[a], table_np[min(b, n - 1) if b < n else n - 1]
+        span = np.float64(kmax - kmin)
+        inv = 1.0 / span if span > 0 else 1.0
+        u = (keys.astype(np.float64) - np.float64(kmin)) * inv
+        best = None
+        if b - a < 8:
+            coef = np.zeros(4)
+            coef[0] = float(a)
+            best = (b - a + 2, coef)
+        else:
+            for deg in (1, 2, 3):
+                coef = poly_fit(u, ranks, deg)
+                eps = poly_exact_eps(coef, u, ranks, float(u[0]), float(u[-1]))
+                if best is None or eps < best[0]:
+                    best = (eps, coef)
+        epss[s] = min(best[0], 1 << 40)
+        coefs[s] = best[1]
+        kmins[s] = np.float64(kmin)
+        inv_spans[s] = inv
+
+    dt = time.perf_counter() - t0
+    return KOModel(
+        k=k,
+        fences=jnp.asarray(fences),
+        coef=jnp.asarray(coefs),
+        kmin_seg=jnp.asarray(kmins),
+        inv_span_seg=jnp.asarray(inv_spans),
+        eps=jnp.asarray(epss),
+        seg_start=jnp.asarray(seg_start),
+        max_eps=int(epss.max()),
+        max_width=int(np.max(np.diff(seg_start))),
+        n=n,
+        build_time=dt,
+        name=f"{k}O",
+    )

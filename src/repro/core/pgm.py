@@ -1,0 +1,217 @@
+"""PGM index (paper §3.2, class 4) — ε-controlled piecewise linear model.
+
+Build: streaming anchored-cone greedy PLA (the FSW corridor — each
+segment anchors at its first (key, rank) point and maintains the feasible
+slope cone; a new segment starts when the cone empties).  The scan is
+vectorised: per segment we grow a chunked window and locate the first
+cone violation with running max/min, so total work is O(n) numpy with a
+Python loop only over *segments*.  Levels recurse bottom-up over segment
+first-keys until one segment remains, exactly as in Ferragina &
+Vinciguerra's PGM.
+
+Query: top-down; at each level the prediction is refined with an exact
+bounded branch-free search of width 2(ε+1)+1 over that level's keys.
+
+``build_pgm_bicriteria`` implements the paper's PGM_M_a: given a space
+budget, bisect ε in [ε_m, ε_M] with ε_m = a · 2 · cls/size (cls
+re-derived for the TPU gather granularity, see DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import List
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import search
+from .cdf import POS_DTYPE
+
+_CHUNK = 4096
+
+
+def pla_segments(keys_f64: np.ndarray, eps: int):
+    """Anchored-cone greedy ε-PLA over (key, rank) pairs.
+
+    Returns (starts, slopes): segment start indices (int64) and slopes
+    (f64, >= 0) such that for every i in segment s,
+    |rank_start[s] + slope[s] * (x_i - x_start[s]) - i| <= eps.
+    """
+    n = len(keys_f64)
+    starts: List[int] = []
+    slopes: List[float] = []
+    s = 0
+    while s < n:
+        starts.append(s)
+        x0 = keys_f64[s]
+        lo, hi = 0.0, np.inf
+        e = s + 1
+        # grow in chunks, tracking the running cone
+        while e < n:
+            e2 = min(e + _CHUNK, n)
+            dx = keys_f64[e:e2] - x0  # > 0: keys dedup'd
+            dy = np.arange(e, e2, dtype=np.float64) - s
+            hi_run = np.minimum.accumulate((dy + eps) / dx)
+            lo_run = np.maximum.accumulate((dy - eps) / dx)
+            hi_run = np.minimum(hi_run, hi)
+            lo_run = np.maximum(lo_run, lo)
+            bad = lo_run > hi_run
+            if bad.any():
+                k = int(np.argmax(bad))
+                if k > 0:
+                    lo = float(lo_run[k - 1])
+                    hi = float(hi_run[k - 1])
+                e = e + k
+                break
+            lo = float(lo_run[-1])
+            hi = float(hi_run[-1])
+            e = e2
+        if e == s + 1:  # single-point segment
+            slopes.append(max(lo, 0.0) if np.isfinite(lo) else 0.0)
+            s = e
+            continue
+        hi_f = hi if np.isfinite(hi) else max(lo, 0.0) + 1.0
+        slopes.append(max(0.5 * (max(lo, 0.0) + max(hi_f, 0.0)), 0.0))
+        s = e
+    return np.asarray(starts, dtype=np.int64), np.asarray(slopes, dtype=np.float64)
+
+
+@dataclass
+class PGMModel:
+    eps: int
+    # levels stored root-first; level arrays concatenated
+    level_keys: list  # list of jnp uint64 arrays, root..leaf-level
+    level_slope: list  # list of jnp f64
+    level_rank0: list  # list of jnp int64 (start rank of each segment)
+    level_sizes: list  # python ints: #segments per level
+    n: int
+    n_segments_l0: int
+    build_time: float = 0.0
+    name: str = "PGM"
+
+    def intervals(self, table, q):
+        """Predicted window in the table for each query."""
+        eps = self.eps
+        qf = q.astype(jnp.float64)
+        # descend levels: maintain current segment index per query
+        seg = jnp.zeros(q.shape, dtype=POS_DTYPE)
+        for lvl in range(len(self.level_keys)):
+            keys = self.level_keys[lvl]
+            slope = self.level_slope[lvl]
+            rank0 = self.level_rank0[lvl]  # (size+1,) incl. sentinel
+            x0 = jnp.take(keys, seg).astype(jnp.float64)
+            a = jnp.take(slope, seg)
+            r0 = jnp.take(rank0, seg)
+            pred = r0.astype(jnp.float64) + a * jnp.maximum(qf - x0, 0.0)
+            pred = jnp.clip(pred, -1.0, 4.0e15)  # overflow-safe int cast
+            # segment s of this level covers entries [r0[s], r0[s+1]) of
+            # the next level, so the predecessor entry is guaranteed in
+            # [r0[s]-1, r0[s+1]-1]: clamp the window into that range
+            # (kills gap-extrapolation blow-ups).
+            b_lo = jnp.maximum(r0 - 1, 0)
+            b_hi = jnp.take(rank0, seg + 1) - 1
+            lo = jnp.clip(jnp.floor(pred).astype(POS_DTYPE) - (eps + 1), b_lo, b_hi)
+            hi = jnp.clip(jnp.ceil(pred).astype(POS_DTYPE) + (eps + 1), b_lo, b_hi)
+            if lvl + 1 < len(self.level_keys):
+                nxt = self.level_keys[lvl + 1]
+                nxt_n = self.level_sizes[lvl + 1]
+                length = jnp.maximum(hi - lo + 1, 1)
+                ub = search.bounded_upper_bound(
+                    nxt, q, lo, length, steps=search.ceil_log2(2 * (eps + 2) + 3)
+                )
+                seg = jnp.clip(ub - 1, 0, nxt_n - 1)
+            else:
+                return jnp.clip(lo, 0, self.n - 1), jnp.clip(hi, 0, self.n - 1)
+        raise AssertionError("unreachable")
+
+    @property
+    def max_window(self) -> int:
+        return min(2 * (self.eps + 2) + 3, self.n)
+
+    def predecessor(self, table, q):
+        lo, hi = self.intervals(table, q)
+        return search.bounded_bfs(table, q, lo, hi, max_window=self.max_window)
+
+    def space_bytes(self) -> int:
+        # key (8) + slope (8) + rank0 (8) per segment, all levels.
+        return sum(self.level_sizes) * 24 + 16
+
+
+def build_pgm(table_np: np.ndarray, eps: int = 64) -> PGMModel:
+    t0 = time.perf_counter()
+    n = len(table_np)
+    eps = max(int(eps), 1)
+
+    keys = table_np.astype(np.float64)
+    level_keys, level_slope, level_rank0, level_sizes = [], [], [], []
+
+    cur_keys_u64 = table_np
+    cur_keys = keys
+    while True:
+        starts, slopes = pla_segments(cur_keys, eps)
+        # rank0 with sentinel: segment s covers [rank0[s], rank0[s+1])
+        rank0 = np.concatenate([starts, [len(cur_keys)]]).astype(np.int64)
+        level_keys.append(jnp.asarray(cur_keys_u64[starts]))
+        level_slope.append(jnp.asarray(slopes))
+        level_rank0.append(jnp.asarray(rank0))
+        level_sizes.append(len(starts))
+        if len(starts) <= 1:
+            break
+        cur_keys_u64 = cur_keys_u64[starts]
+        cur_keys = cur_keys[starts]
+
+    # root-first ordering
+    level_keys.reverse()
+    level_slope.reverse()
+    level_rank0.reverse()
+    level_sizes.reverse()
+
+    dt = time.perf_counter() - t0
+    return PGMModel(
+        eps=eps,
+        level_keys=level_keys,
+        level_slope=level_slope,
+        level_rank0=level_rank0,
+        level_sizes=level_sizes,
+        n=n,
+        n_segments_l0=level_sizes[-1],
+        build_time=dt,
+        name=f"PGM[eps={eps}]",
+    )
+
+
+# TPU gather granularity stands in for the cache line (DESIGN.md §7):
+# one VREG row of 64 keys x 8 B = 512 B vs the paper's cls = 64 B.
+TPU_CLS_BYTES = 512
+KEY_BYTES = 8
+
+
+def build_pgm_bicriteria(
+    table_np: np.ndarray,
+    space_budget_bytes: int,
+    a: float = 1.0,
+    cls_bytes: int = TPU_CLS_BYTES,
+    max_iters: int = 16,
+) -> PGMModel:
+    """Bi-criteria PGM_M_a: smallest ε whose model fits the budget."""
+    eps_m = max(1, int(a * 2 * (cls_bytes / KEY_BYTES)))
+    eps_M = max(eps_m + 1, len(table_np) // 2)
+
+    best = None
+    lo, hi = eps_m, eps_M
+    for _ in range(max_iters):
+        mid = (lo + hi) // 2
+        m = build_pgm(table_np, eps=mid)
+        if m.space_bytes() <= space_budget_bytes:
+            best = m if best is None or m.eps < best.eps else best
+            hi = mid - 1  # try smaller eps (bigger model)
+        else:
+            lo = mid + 1
+        if lo > hi:
+            break
+    if best is None:
+        best = build_pgm(table_np, eps=eps_M)
+    best.name = f"PGM_M_{a}[eps={best.eps}]"
+    return best

@@ -1,0 +1,175 @@
+"""Two-level RMI with parametric branching factor (paper §3.2, class 3).
+
+Root model (monotone: linear regression, endpoint spline, or cubic with a
+monotonicity check + linear fallback) partitions the *universe*; ``b``
+linear leaf models predict the rank.  Build is a single O(n) pass after
+the root fit.  Per-leaf error bounds are computed over the leaf's rank
+range extended by one key on each side and leaf slopes are clamped >= 0,
+which (with a monotone root) makes the predicted window a *guarantee* —
+see DESIGN.md §3.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import search
+from .atomic import poly_fit, poly_eval_jnp, poly_eval_np, poly_crit_points
+from .cdf import keys_to_unit, POS_DTYPE
+
+ROOT_TYPES = ("linear", "cubic", "spline")
+
+
+@dataclass
+class RMIModel:
+    root_type: str
+    root_coef: jnp.ndarray  # (4,) f64, predicts rank from u
+    b: int
+    leaf_slope: jnp.ndarray  # (b,) f64 — rank per unit u
+    leaf_icept: jnp.ndarray  # (b,) f64
+    leaf_eps: jnp.ndarray  # (b,) int64
+    leaf_r: jnp.ndarray  # (b+1,) int64 — first rank per leaf (guarantee clamp)
+    kmin: jnp.ndarray
+    inv_span: jnp.ndarray
+    max_eps: int
+    max_window_: int
+    n: int
+    build_time: float = 0.0
+    name: str = "RMI"
+
+    def _leaf_of(self, u):
+        p = jnp.clip(poly_eval_jnp(self.root_coef, u), -4.0e15, 4.0e15)
+        leaf = jnp.floor(p * (self.b / self.n)).astype(POS_DTYPE)
+        return jnp.clip(leaf, 0, self.b - 1)
+
+    def intervals(self, table, q):
+        u = (q.astype(jnp.float64) - self.kmin) * self.inv_span
+        u = jnp.clip(u, 0.0, 1.0)
+        leaf = self._leaf_of(u)
+        slope = jnp.take(self.leaf_slope, leaf)
+        icept = jnp.take(self.leaf_icept, leaf)
+        eps = jnp.take(self.leaf_eps, leaf)
+        p = jnp.clip(slope * u + icept, -4.0e15, 4.0e15)
+        lo = jnp.floor(p).astype(POS_DTYPE) - eps
+        hi = jnp.ceil(p).astype(POS_DTYPE) + eps
+        # Monotone root proves pred in [r_l - 1, r_{l+1} - 1]: clamp the
+        # window into that range (survives leaf-model blow-ups on gaps).
+        b_lo = jnp.maximum(jnp.take(self.leaf_r, leaf) - 1, 0)
+        b_hi = jnp.take(self.leaf_r, leaf + 1) - 1
+        lo = jnp.clip(lo, b_lo, b_hi)
+        hi = jnp.clip(hi, b_lo, b_hi)
+        return lo, hi
+
+    @property
+    def max_window(self) -> int:
+        return max(self.max_window_, 1)
+
+    def predecessor(self, table, q):
+        lo, hi = self.intervals(table, q)
+        return search.bounded_bfs(table, q, lo, hi, max_window=self.max_window)
+
+    def space_bytes(self) -> int:
+        # slope + intercept (f64) + eps (i32) + rank fence (i64) per leaf
+        # (the fence backs the correctness guarantee), + root.
+        return self.b * (8 + 8 + 4 + 8) + 32 + 24
+
+
+def _fit_root(u: np.ndarray, ranks: np.ndarray, root_type: str) -> np.ndarray:
+    n = len(ranks)
+    if root_type == "spline" or n < 8:
+        coef = np.zeros(4)
+        coef[1] = float(n - 1) if n > 1 else 0.0  # endpoint line through CDF
+        return coef
+    if root_type == "linear":
+        return poly_fit(u, ranks, 1)
+    if root_type == "cubic":
+        coef = poly_fit(u, ranks, 3)
+        # monotonicity check on [0,1]; fall back to linear if p' < 0 anywhere
+        crit = poly_crit_points(coef)
+        probes = np.concatenate([np.array([0.0, 1.0]), crit[(crit > 0) & (crit < 1)]])
+        dp = coef[1] + 2 * coef[2] * probes + 3 * coef[3] * probes**2
+        if np.any(dp < 0):
+            return poly_fit(u, ranks, 1)
+        return coef
+    raise ValueError(root_type)
+
+
+def build_rmi(table_np: np.ndarray, b: int = 1024, root_type: str = "linear") -> RMIModel:
+    t0 = time.perf_counter()
+    n = len(table_np)
+    b = max(2, min(b, n))
+    kmin, kmax = table_np[0], table_np[-1]
+    span = np.float64(kmax - kmin)
+    inv_span = np.float64(1.0) / span if span > 0 else np.float64(1.0)
+    # IMPORTANT: identical expression to the query path (multiply by the
+    # reciprocal) — a 1-ulp divide/multiply mismatch can flip the leaf of
+    # a boundary key and void the fence guarantee.
+    u = (table_np.astype(np.float64) - np.float64(kmin)) * inv_span
+    ranks = np.arange(n, dtype=np.float64)
+
+    root = _fit_root(u, ranks, root_type)
+    # leaf assignment (monotone root => contiguous, non-decreasing)
+    leaf_of = np.clip(np.floor(poly_eval_np(root, u) * (b / n)), 0, b - 1).astype(np.int64)
+    leaf_of = np.maximum.accumulate(leaf_of)  # enforce monotone against fp jitter
+    # first rank of each leaf
+    r = np.searchsorted(leaf_of, np.arange(b + 1), side="left").astype(np.int64)
+
+    slopes = np.zeros(b, dtype=np.float64)
+    icepts = np.zeros(b, dtype=np.float64)
+    epss = np.zeros(b, dtype=np.int64)
+
+    # Vectorised per-leaf linear fits via segment sums (single pass).
+    seg = leaf_of
+    ones = np.ones(n)
+    cnt = np.bincount(seg, minlength=b).astype(np.float64)
+    su = np.bincount(seg, weights=u, minlength=b)
+    sr = np.bincount(seg, weights=ranks, minlength=b)
+    suu = np.bincount(seg, weights=u * u, minlength=b)
+    sur = np.bincount(seg, weights=u * ranks, minlength=b)
+    var = cnt * suu - su * su
+    cov = cnt * sur - su * sr
+    nz = (cnt > 1) & (var > 1e-30)
+    slopes[nz] = np.maximum(cov[nz] / var[nz], 0.0)  # clamp >= 0 (monotone)
+    icepts[nz] = (sr[nz] - slopes[nz] * su[nz]) / cnt[nz]
+    one = (cnt == 1)
+    icepts[one] = sr[one]
+    empty = cnt == 0
+    icepts[empty] = r[:-1][empty].astype(np.float64)  # predict range start
+
+    # per-leaf eps over rank range extended by one key each side
+    pred = slopes[seg] * u + icepts[seg]
+    err = np.abs(pred - ranks)
+    eps_core = np.zeros(b)
+    np.maximum.at(eps_core, seg, err)
+    # extended: evaluate leaf l on boundary keys r[l]-1 and r[l+1]
+    lo_idx = np.clip(r[:-1] - 1, 0, n - 1)
+    hi_idx = np.clip(r[1:], 0, n - 1)
+    err_lo = np.abs(slopes * u[lo_idx] + icepts - ranks[lo_idx])
+    err_hi = np.abs(slopes * u[hi_idx] + icepts - ranks[hi_idx])
+    eps_f = np.maximum(eps_core, np.maximum(err_lo, err_hi))
+    eps = (np.ceil(np.minimum(eps_f, float(1 << 40))).astype(np.int64) + 1)
+
+    width = np.diff(r)  # leaf rank-range widths
+    max_window = int(np.max(np.minimum(2 * eps + 3, width + 2))) if b else 1
+
+    dt = time.perf_counter() - t0
+    return RMIModel(
+        root_type=root_type,
+        root_coef=jnp.asarray(root),
+        b=b,
+        leaf_slope=jnp.asarray(slopes),
+        leaf_icept=jnp.asarray(icepts),
+        leaf_eps=jnp.asarray(eps),
+        leaf_r=jnp.asarray(r),
+        kmin=jnp.float64(np.float64(kmin)),
+        inv_span=jnp.float64(inv_span),
+        max_eps=int(eps.max()),
+        max_window_=max_window,
+        n=n,
+        build_time=dt,
+        name=f"RMI[{root_type},b={b}]",
+    )

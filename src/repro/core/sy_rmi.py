@@ -1,0 +1,128 @@
+"""SY-RMI — the paper's second new model (§3.2, "Synoptic RMI").
+
+Pipeline, faithful to §3.2/§4:
+  1. ``cdfshop_sweep`` — a deterministic stand-in for CDFShop: up to 10
+     two-level RMIs per table over a (root type x branching factor) grid.
+  2. ``mine_ub`` — for the whole set of swept models, UB = median of
+     (branching factor) / (model space bytes).
+  3. ``pick_winner`` — relative-majority architecture by measured query
+     time over a 1% simulation query set (paper §4).
+  4. ``build_sy_rmi`` — given a space budget (a % of the table bytes),
+     instantiate the winner architecture with b = UB x budget.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .rmi import RMIModel, build_rmi, ROOT_TYPES
+from .cdf import true_ranks
+
+
+def cdfshop_sweep(table_np: np.ndarray, max_models: int = 10):
+    """Deterministic CDFShop analogue: grid of 2-level RMIs.
+
+    Roots x geometric branching factors, capped at ``max_models`` models
+    (the paper uses CDFShop's ~10 models per table).
+    """
+    n = len(table_np)
+    bs = [b for b in (64, 256, 1024, 4096, 16384, 65536, 262144) if b <= max(n // 2, 2)]
+    combos = []
+    for root in ROOT_TYPES:
+        for b in bs:
+            combos.append((root, b))
+    # deterministic thinning to max_models, keeping coverage of both axes
+    if len(combos) > max_models:
+        idx = np.linspace(0, len(combos) - 1, max_models).astype(int)
+        combos = [combos[i] for i in idx]
+    return [build_rmi(table_np, b=b, root_type=root) for root, b in combos]
+
+
+def mine_ub(models: Sequence[RMIModel]) -> float:
+    """UB = median branching factor per byte of model space (paper §3.2)."""
+    ratios = [m.b / m.space_bytes() for m in models]
+    return float(np.median(ratios))
+
+
+def measure_query_time(model, table_j, queries_j, reps: int = 3) -> float:
+    """Average per-query wall time of the jitted predecessor pipeline."""
+    fn = jax.jit(lambda t, q: model.predecessor(t, q))
+    out = fn(table_j, queries_j)
+    out.block_until_ready()
+    best = np.inf
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn(table_j, queries_j).block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best / queries_j.shape[0]
+
+
+def pick_winner(models: Sequence[RMIModel], table_np: np.ndarray, queries_np: np.ndarray):
+    """Relative-majority winner by query time on the 1% simulation set."""
+    table_j = jnp.asarray(table_np)
+    q_j = jnp.asarray(queries_np)
+    times = [measure_query_time(m, table_j, q_j) for m in models]
+    best = int(np.argmin(times))
+    return models[best].root_type, times
+
+
+@dataclass
+class SyRMIResult:
+    ub: float
+    winner_root: str
+    sweep_sizes: list
+    sweep_times: list
+    mining_time: float
+
+
+def mine_sy_rmi(
+    tables: Sequence[np.ndarray],
+    query_frac: float = 0.01,
+    n_queries: int = 1_000_000,
+    seed: int = 0,
+    max_models: int = 10,
+) -> SyRMIResult:
+    """Full mining pass over a set of same-tier tables (paper §4)."""
+    rng = np.random.default_rng(seed)
+    t0 = time.perf_counter()
+    all_models, votes, sizes, times_all = [], [], [], []
+    for table in tables:
+        models = cdfshop_sweep(table, max_models=max_models)
+        all_models.extend(models)
+        nq = max(16, int(n_queries * query_frac))
+        queries = rng.choice(table, size=nq, replace=True)
+        winner, times = pick_winner(models, table, queries)
+        votes.append(winner)
+        sizes.append([m.space_bytes() for m in models])
+        times_all.append(times)
+    ub = mine_ub(all_models)
+    # relative majority of per-table winners
+    roots, counts = np.unique(votes, return_counts=True)
+    winner_root = str(roots[np.argmax(counts)])
+    return SyRMIResult(
+        ub=ub,
+        winner_root=winner_root,
+        sweep_sizes=sizes,
+        sweep_times=times_all,
+        mining_time=time.perf_counter() - t0,
+    )
+
+
+def build_sy_rmi(
+    table_np: np.ndarray,
+    space_pct: float,
+    ub: float,
+    winner_root: str = "linear",
+) -> RMIModel:
+    """Instantiate the synoptic RMI for a space budget (% of table bytes)."""
+    budget = space_pct / 100.0 * len(table_np) * 8
+    b = max(2, int(budget * ub))
+    m = build_rmi(table_np, b=b, root_type=winner_root)
+    m.name = f"SY-RMI[{space_pct}%]"
+    return m

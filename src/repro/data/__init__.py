@@ -1,0 +1,4 @@
+"""Data substrate: synthetic SOSD datasets, memory-tier tables, the LM
+packed-token pipeline, and the GNN neighbor sampler."""
+
+from . import distributions, pipeline, sampler, tables

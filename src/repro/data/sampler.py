@@ -1,0 +1,95 @@
+"""Graph substrate: synthetic power-law graphs in CSR + neighbor sampler.
+
+The ``minibatch_lg`` shape cell requires a real fanout sampler
+(GraphSAGE-style).  CSR navigation — "which row owns edge e?" and
+cumulative-degree inverse lookup — is predecessor search over
+``row_offsets`` (a sorted table whose CDF is the degree distribution);
+a learned index serves it (DESIGN.md §3, integration point 3).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.rmi import build_rmi
+
+
+@dataclass
+class CSRGraph:
+    row_offsets: np.ndarray  # (N+1,) int64
+    col_idx: np.ndarray  # (E,) int32
+    n_nodes: int
+    n_edges: int
+    feat_dim: int
+    rmi: object = None  # learned index over row_offsets
+
+    def row_of_edge(self, edge_ids) -> jnp.ndarray:
+        """Owning row of each edge id — learned predecessor search."""
+        table = jnp.asarray(self.row_offsets.astype(np.uint64))
+        q = jnp.asarray(np.asarray(edge_ids).astype(np.uint64))
+        return self.rmi.predecessor(table, q)
+
+    def src_dst_arrays(self):
+        """(src, dst) int32 edge list (host) for segment-sum message passing."""
+        degrees = np.diff(self.row_offsets)
+        src = np.repeat(np.arange(self.n_nodes, dtype=np.int32), degrees)
+        return src, self.col_idx.astype(np.int32)
+
+
+def synth_powerlaw_graph(
+    n_nodes: int, avg_degree: int, feat_dim: int, seed: int = 0
+) -> CSRGraph:
+    """Preferential-attachment-flavoured random graph in CSR."""
+    rng = np.random.default_rng(seed)
+    n_edges = n_nodes * avg_degree
+    # power-law target popularity
+    pop = rng.pareto(1.5, n_nodes) + 1.0
+    pop /= pop.sum()
+    dst = rng.choice(n_nodes, size=n_edges, p=pop).astype(np.int32)
+    src = rng.integers(0, n_nodes, size=n_edges).astype(np.int32)
+    order = np.argsort(src, kind="stable")
+    src, dst = src[order], dst[order]
+    row_offsets = np.searchsorted(src, np.arange(n_nodes + 1)).astype(np.int64)
+    rmi = build_rmi(row_offsets.astype(np.uint64), b=max(2, n_nodes // 256))
+    return CSRGraph(
+        row_offsets=row_offsets,
+        col_idx=dst,
+        n_nodes=n_nodes,
+        n_edges=n_edges,
+        feat_dim=feat_dim,
+        rmi=rmi,
+    )
+
+
+def sample_neighbors(
+    graph: CSRGraph, seeds: np.ndarray, fanouts, seed: int = 0
+):
+    """GraphSAGE fanout sampling -> (nodes, hop_edges).
+
+    Returns the union of sampled nodes (int32) and per-hop (src, dst)
+    edge arrays (dst are parents).  Uniform-without-replacement when a
+    node has more neighbors than the fanout, with-replacement pad
+    otherwise (standard minibatch semantics).
+    """
+    rng = np.random.default_rng(seed)
+    ro, ci = graph.row_offsets, graph.col_idx
+    frontier = np.unique(seeds.astype(np.int64))
+    all_nodes = [frontier]
+    hop_edges = []
+    for fanout in fanouts:
+        deg = ro[frontier + 1] - ro[frontier]
+        # sample `fanout` slots per frontier node (with replacement pad)
+        offs = rng.integers(0, np.maximum(deg, 1)[:, None], size=(len(frontier), fanout))
+        idx = ro[frontier][:, None] + offs
+        nbrs = ci[np.minimum(idx, len(ci) - 1)]
+        nbrs = np.where((deg > 0)[:, None], nbrs, frontier[:, None])  # isolated: self-loop
+        src = nbrs.reshape(-1).astype(np.int32)
+        dst = np.repeat(frontier, fanout).astype(np.int32)
+        hop_edges.append((src, dst))
+        frontier = np.unique(src.astype(np.int64))
+        all_nodes.append(frontier)
+    nodes = np.unique(np.concatenate(all_nodes)).astype(np.int32)
+    return nodes, hop_edges

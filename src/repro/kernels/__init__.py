@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the paper's compute hot spots (validated in
+interpret mode on CPU; see DESIGN.md §3 for the TPU-native adaptations).
+
+- rmi_search:      fused RMI predict + ε-bounded branch-free search
+- kary_search:     lane-wide (k=128) k-ary search — TPU-native K-BFS
+- embedding_bag:   one-hot-matmul EmbeddingBag over vocab tiles
+- decode_attention: flash-decode GQA attention for the serve path
+"""
+
+from . import ops, ref
+from .ops import (
+    decode_attention,
+    embedding_bag,
+    fused_rmi_search,
+    kary_search,
+    prepare_rmi_kernel_index,
+    split_u64,
+)

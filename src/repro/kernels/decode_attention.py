@@ -1,0 +1,115 @@
+"""Flash-decode GQA attention — Pallas TPU kernel for the serve path.
+
+Single new token attends to a long KV cache: the classic decode hot spot
+(``decode_32k`` / ``long_500k`` shape cells).  Online-softmax streaming
+over KV tiles; the query block and running (m, l, acc) statistics stay
+in VMEM scratch while KV tiles stream through the grid — the Pallas
+double-buffered pipeline plays the role of the paper's CPU prefetch.
+
+Grid: (batch, kv_tiles); scratch carries the softmax state across the
+kv_tiles dimension; the output block is written on the final tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(
+    q_ref,  # (1, Hq, D)
+    k_ref,  # (1, St, Hkv, D)
+    v_ref,  # (1, St, Hkv, D)
+    len_ref,  # (1,) i32
+    out_ref,  # (1, Hq, D)
+    m_ref,  # scratch (Hq,)
+    l_ref,  # scratch (Hq,)
+    acc_ref,  # scratch (Hq, D)
+    *,
+    s_tile: int,
+    num_s_tiles: int,
+    group: int,
+):
+    s_idx = pl.program_id(1)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]  # (Hq, D)
+    k = k_ref[0]  # (St, Hkv, D)
+    v = v_ref[0]
+    hq, d = q.shape
+    hkv = k.shape[1]
+
+    # GQA: fold query heads into (Hkv, group)
+    q4 = q.reshape(hkv, group, d)
+    logits = jnp.einsum("kgd,skd->kgs", q4, k).reshape(hq, s_tile)
+    logits = logits / jnp.sqrt(jnp.float32(d))
+
+    pos = s_idx * s_tile + lax.broadcasted_iota(jnp.int32, (hq, s_tile), 1)
+    valid = pos < len_ref[0]
+    logits = jnp.where(valid, logits, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    acc_prev = acc_ref[...]
+
+    m_cur = jnp.max(logits, axis=1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(logits - m_new[:, None])  # (Hq, St)
+    p = jnp.where(valid, p, 0.0)
+
+    p4 = p.reshape(hkv, group, s_tile)
+    pv = jnp.einsum("kgs,skd->kgd", p4, v).reshape(hq, d)
+
+    m_ref[...] = m_new
+    l_ref[...] = l_prev * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_prev * alpha[:, None] + pv
+
+    @pl.when(s_idx == num_s_tiles - 1)
+    def _finish():
+        out_ref[0] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+
+
+def decode_attention_pallas(q, k, v, kv_len, *, s_tile: int = 256, interpret: bool = True):
+    """q (B,Hq,D) f32; k/v (B,S,Hkv,D) f32; kv_len (B,) i32 -> (B,Hq,D)."""
+    b, hq, d = q.shape
+    _, s, hkv, _ = k.shape
+    assert s % s_tile == 0, "pad KV length to a tile multiple (see ops.py)"
+    assert hq % hkv == 0
+    group = hq // hkv
+    num_s_tiles = s // s_tile
+    grid = (b, num_s_tiles)
+
+    kernel = functools.partial(
+        _decode_kernel, s_tile=s_tile, num_s_tiles=num_s_tiles, group=group
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, hq, d), lambda bi, si: (bi, 0, 0)),
+            pl.BlockSpec((1, s_tile, hkv, d), lambda bi, si: (bi, si, 0, 0)),
+            pl.BlockSpec((1, s_tile, hkv, d), lambda bi, si: (bi, si, 0, 0)),
+            pl.BlockSpec((1,), lambda bi, si: (bi,)),
+        ],
+        out_specs=pl.BlockSpec((1, hq, d), lambda bi, si: (bi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, d), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((hq,), jnp.float32),  # m
+            pltpu.VMEM((hq,), jnp.float32),  # l
+            pltpu.VMEM((hq, d), jnp.float32),  # acc
+        ],
+        interpret=interpret,
+    )(q, k, v, kv_len)

@@ -1,0 +1,85 @@
+"""EmbeddingBag (gather + weighted segment-sum) — Pallas TPU kernel.
+
+The recsys hot path (DESIGN.md §3).  JAX has no native EmbeddingBag; the
+XLA path is ``take + segment_sum`` (see ref.py).  On TPU, row gathers
+from VMEM are serialised — the MXU-native formulation is **one-hot
+matmul over vocabulary tiles**:
+
+    out[bag] += onehot_bags(B,N) @ (onehot_ids(N,Vt) @ slab(Vt,D))
+
+The grid walks vocabulary tiles and revisits the same output block,
+accumulating; both one-hot contractions hit the MXU.  This is the
+VMEM-resident ("hot vocabulary") tier; the HBM-scale tables use the
+sharded lookup in :mod:`repro.models.embedding`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+def _bag_kernel(table_ref, ids_ref, seg_ref, w_ref, out_ref, *, v_tile: int, num_bags: int):
+    vt = pl.program_id(0)
+    lo = vt * v_tile
+
+    slab = table_ref[...]  # (Vt, D) f32
+    ids = ids_ref[...]  # (N,) i32
+    seg = seg_ref[...]  # (N,) i32
+    w = w_ref[...]  # (N,) f32
+    n_items = ids.shape[0]
+
+    local = ids - lo
+    in_tile = (ids >= lo) & (ids < lo + v_tile)
+
+    # (N, Vt) one-hot of item ids within this vocab tile
+    cols = lax.broadcasted_iota(jnp.int32, (n_items, v_tile), 1)
+    oh_v = ((local[:, None] == cols) & in_tile[:, None]).astype(jnp.float32)
+    item_vecs = oh_v @ slab  # (N, D) — MXU
+
+    # (B, N) one-hot of bag membership, weighted
+    rows = lax.broadcasted_iota(jnp.int32, (num_bags, n_items), 0)
+    oh_b = (seg[None, :] == rows).astype(jnp.float32) * w[None, :]
+    contrib = oh_b @ item_vecs  # (B, D) — MXU
+
+    @pl.when(vt == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += contrib
+
+
+def embedding_bag_pallas(
+    table,
+    ids,
+    seg_ids,
+    weights,
+    *,
+    num_bags: int,
+    v_tile: int = 512,
+    interpret: bool = True,
+):
+    """table (V, D) f32; ids/seg_ids (N,) i32; weights (N,) f32 -> (B, D)."""
+    v, d = table.shape
+    assert v % v_tile == 0, "pad vocab to a tile multiple (see ops.py)"
+    grid = (v // v_tile,)
+    n = ids.shape[0]
+
+    kernel = functools.partial(_bag_kernel, v_tile=v_tile, num_bags=num_bags)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((v_tile, d), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((num_bags, d), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_bags, d), jnp.float32),
+        interpret=interpret,
+    )(table, ids, seg_ids, weights)

@@ -1,0 +1,97 @@
+"""Lane-wide k-ary search — the TPU-native K-BFS (DESIGN.md §3).
+
+The paper's K-BFS uses k≈3 because a CPU core pays one cache line per
+fence probe.  On a TPU the VPU compares a query against **k = 128 fences
+in one vector op**, so the optimal k is the lane width: each step costs
+one (TILE_Q, K) gather + compare + popcount-style reduce and shrinks the
+window by 128x.  ceil(log_128 n) steps + one final lane sweep replace
+ceil(log_2 n) dependent gathers — an 18->4 step reduction for n = 1M.
+
+Keys are u32-limb pairs as in :mod:`rmi_search`.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from .rmi_search import _le_u64, DEFAULT_TILE_Q
+
+LANES = 128
+
+
+def _kary_kernel(qhi_ref, qlo_ref, thi_ref, tlo_ref, out_ref, *, n: int, k: int, steps: int):
+    qhi = qhi_ref[...]
+    qlo = qlo_ref[...]
+    thi = thi_ref[...]
+    tlo = tlo_ref[...]
+    tq = qhi.shape[0]
+
+    base = jnp.zeros((tq,), jnp.int32)
+    length = jnp.full((tq,), n, jnp.int32)
+    frac = lax.broadcasted_iota(jnp.int32, (tq, k - 1), 1) + 1  # 1..k-1
+
+    def body(_, carry):
+        base, length = carry
+        fence = base[:, None] + (frac * length[:, None]) // k  # (TQ, K-1)
+        fhi = jnp.take(thi, fence)
+        flo = jnp.take(tlo, fence)
+        le = _le_u64(fhi, flo, qhi[:, None], qlo[:, None])
+        seg = jnp.sum(le, axis=1, dtype=jnp.int32)  # segment index
+        new_base = base + (seg * length) // k
+        new_len = (jnp.minimum(seg + 1, k) * length) // k - (seg * length) // k
+        keep = length > k
+        base = jnp.where(keep, new_base, base)
+        length = jnp.where(keep, new_len, length)
+        return base, length
+
+    base, length = lax.fori_loop(0, steps, body, (base, length))
+
+    # final lane sweep: window now <= k wide; one (TQ, K) gather + count
+    offs = lax.broadcasted_iota(jnp.int32, (tq, k), 1)
+    idx = jnp.minimum(base[:, None] + offs, n - 1)
+    vhi = jnp.take(thi, idx)
+    vlo = jnp.take(tlo, idx)
+    le = _le_u64(vhi, vlo, qhi[:, None], qlo[:, None]) & (offs < length[:, None])
+    cnt = jnp.sum(le, axis=1, dtype=jnp.int32)
+    out_ref[...] = base + cnt - 1
+
+
+def kary_search_pallas(
+    q_hi,
+    q_lo,
+    table_hi,
+    table_lo,
+    *,
+    k: int = LANES,
+    tile_q: int = DEFAULT_TILE_Q,
+    interpret: bool = True,
+):
+    nq = q_hi.shape[0]
+    n = table_hi.shape[0]
+    assert nq % tile_q == 0
+    # steps until the window is <= k
+    steps = max(0, int(math.ceil(math.log(max(n, 2)) / math.log(k))) - 1) + (
+        1 if n > k else 0
+    )
+    # conservative: ensure k^steps * k >= n
+    while k ** (steps + 1) < n:
+        steps += 1
+    grid = (nq // tile_q,)
+
+    kernel = functools.partial(_kary_kernel, n=n, k=k, steps=steps)
+    qspec = pl.BlockSpec((tile_q,), lambda i: (i,))
+    full = pl.BlockSpec((n,), lambda i: (0,))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[qspec, qspec, full, full],
+        out_specs=qspec,
+        out_shape=jax.ShapeDtypeStruct((nq,), jnp.int32),
+        interpret=interpret,
+    )(q_hi, q_lo, table_hi, table_lo)

@@ -1,0 +1,211 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handles host-side preparation (u32 limb split, f32 pre-normalisation,
+query padding, f32-widened error bounds) and falls back to interpret
+mode off-TPU.  ``ref.py`` holds the oracles; tests sweep shapes/dtypes.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .rmi_search import fused_rmi_search_pallas, DEFAULT_TILE_Q
+from .kary_search import kary_search_pallas, LANES
+from .embedding_bag import embedding_bag_pallas
+from .decode_attention import decode_attention_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def split_u64(x_u64: np.ndarray):
+    """uint64 -> (hi, lo) uint32 limbs (host or device arrays)."""
+    x = jnp.asarray(x_u64, dtype=jnp.uint64)
+    hi = (x >> jnp.uint64(32)).astype(jnp.uint32)
+    lo = (x & jnp.uint64(0xFFFFFFFF)).astype(jnp.uint32)
+    return hi, lo
+
+
+def _pad_to(x, mult, fill):
+    n = x.shape[0]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, n
+    return jnp.concatenate([x, jnp.full((pad,), fill, dtype=x.dtype)]), n
+
+
+# ---------------------------------------------------------------------------
+# Fused RMI search
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class RMIKernelIndex:
+    """f32/u32 re-encoding of a core RMIModel for the TPU kernel."""
+
+    table_hi: jnp.ndarray
+    table_lo: jnp.ndarray
+    root_coef: jnp.ndarray  # (4,) f32
+    leaf_slope: jnp.ndarray  # f32
+    leaf_icept: jnp.ndarray  # f32
+    leaf_eps: jnp.ndarray  # i32
+    leaf_rlo: jnp.ndarray  # i32
+    leaf_rhi: jnp.ndarray  # i32
+    kmin: np.float64
+    inv_span: np.float64
+    steps: int
+    n: int
+    b: int
+
+
+def prepare_rmi_kernel_index(model, table_np: np.ndarray) -> RMIKernelIndex:
+    """Re-encode a core.rmi.RMIModel in kernel precision, re-verifying ε.
+
+    The kernel predicts in f32; we re-measure every leaf's max error with
+    the kernel's exact arithmetic (f32 Horner on f32 u) and widen ε so
+    the window remains a guarantee.
+    """
+    n = model.n
+    b = model.b
+    kmin = np.float64(np.asarray(model.kmin))
+    inv_span = np.float64(np.asarray(model.inv_span))
+
+    u64 = (table_np.astype(np.float64) - kmin) * inv_span
+    u32 = np.clip(u64, 0.0, 1.0).astype(np.float32)
+
+    root = np.asarray(model.root_coef, dtype=np.float32)
+    slopes = np.asarray(model.leaf_slope, dtype=np.float32)
+    icepts = np.asarray(model.leaf_icept, dtype=np.float32)
+    r = np.asarray(model.leaf_r, dtype=np.int64)
+
+    # leaf assignment with kernel arithmetic (f32)
+    p_root = ((root[3] * u32 + root[2]) * u32 + root[1]) * u32 + root[0]
+    leaf = np.clip(np.floor(p_root.astype(np.float64) * (b / n)), 0, b - 1).astype(np.int64)
+    leaf = np.maximum.accumulate(leaf)
+    r32 = np.searchsorted(leaf, np.arange(b + 1), side="left").astype(np.int64)
+
+    # f32 leaf prediction error at every key (exactly the kernel math)
+    pred = slopes[leaf] * u32 + icepts[leaf]
+    ranks = np.arange(n, dtype=np.float64)
+    err = np.abs(pred.astype(np.float64) - ranks)
+    eps = np.zeros(b)
+    np.maximum.at(eps, leaf, err)
+    # extended boundary keys per leaf (guarantee argument, DESIGN.md §3)
+    lo_idx = np.clip(r32[:-1] - 1, 0, n - 1)
+    hi_idx = np.clip(r32[1:], 0, n - 1)
+    err_lo = np.abs(slopes * u32[lo_idx] + icepts - ranks[lo_idx])
+    err_hi = np.abs(slopes * u32[hi_idx] + icepts - ranks[hi_idx])
+    eps = np.maximum(eps, np.maximum(err_lo, err_hi))
+    eps_i = np.minimum(np.ceil(eps) + 2, float(n)).astype(np.int32)
+
+    rlo = np.maximum(r32[:-1] - 1, 0).astype(np.int32)
+    rhi = np.maximum(r32[1:] - 1, 0).astype(np.int32)
+    widths = np.minimum(2 * eps_i.astype(np.int64) + 3, (rhi - rlo + 1).astype(np.int64))
+    max_window = max(1, int(widths.max()))
+    steps = max(1, int(math.ceil(math.log2(max(max_window, 2)))))
+
+    thi, tlo = split_u64(table_np)
+    return RMIKernelIndex(
+        table_hi=thi,
+        table_lo=tlo,
+        root_coef=jnp.asarray(root),
+        leaf_slope=jnp.asarray(slopes),
+        leaf_icept=jnp.asarray(icepts),
+        leaf_eps=jnp.asarray(eps_i),
+        leaf_rlo=jnp.asarray(rlo),
+        leaf_rhi=jnp.asarray(rhi),
+        kmin=kmin,
+        inv_span=inv_span,
+        steps=steps,
+        n=n,
+        b=b,
+    )
+
+
+def fused_rmi_search(kidx: RMIKernelIndex, queries_u64, *, tile_q: int = DEFAULT_TILE_Q):
+    """Predecessor ranks via the fused Pallas kernel (auto-padded)."""
+    q = jnp.asarray(queries_u64, dtype=jnp.uint64)
+    u = (q.astype(jnp.float64) - kidx.kmin) * kidx.inv_span
+    u = jnp.clip(u, 0.0, 1.0).astype(jnp.float32)
+    qhi, qlo = split_u64(q)
+    u, nq = _pad_to(u, tile_q, 0.0)
+    qhi, _ = _pad_to(qhi, tile_q, 0)
+    qlo, _ = _pad_to(qlo, tile_q, 0)
+    out = fused_rmi_search_pallas(
+        u,
+        qhi,
+        qlo,
+        kidx.table_hi,
+        kidx.table_lo,
+        kidx.root_coef,
+        kidx.leaf_slope,
+        kidx.leaf_icept,
+        kidx.leaf_eps,
+        kidx.leaf_rlo,
+        kidx.leaf_rhi,
+        steps=kidx.steps,
+        tile_q=tile_q,
+        interpret=_interpret(),
+    )
+    return out[:nq]
+
+
+# ---------------------------------------------------------------------------
+# Lane-wide k-ary search
+# ---------------------------------------------------------------------------
+
+
+def kary_search(table_u64, queries_u64, *, k: int = LANES, tile_q: int = DEFAULT_TILE_Q):
+    thi, tlo = split_u64(table_u64)
+    qhi, qlo = split_u64(queries_u64)
+    qhi, nq = _pad_to(qhi, tile_q, 0)
+    qlo, _ = _pad_to(qlo, tile_q, 0)
+    out = kary_search_pallas(qhi, qlo, thi, tlo, k=k, tile_q=tile_q, interpret=_interpret())
+    return out[:nq]
+
+
+# ---------------------------------------------------------------------------
+# EmbeddingBag
+# ---------------------------------------------------------------------------
+
+
+def embedding_bag(table, ids, seg_ids, weights=None, *, num_bags: int, v_tile: int = 512):
+    table = jnp.asarray(table, jnp.float32)
+    v, d = table.shape
+    pad_v = (-v) % v_tile
+    if pad_v:
+        table = jnp.concatenate([table, jnp.zeros((pad_v, d), jnp.float32)])
+    ids = jnp.asarray(ids, jnp.int32)
+    seg_ids = jnp.asarray(seg_ids, jnp.int32)
+    if weights is None:
+        weights = jnp.ones(ids.shape, jnp.float32)
+    return embedding_bag_pallas(
+        table, ids, seg_ids, jnp.asarray(weights, jnp.float32),
+        num_bags=num_bags, v_tile=v_tile, interpret=_interpret(),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Flash-decode attention
+# ---------------------------------------------------------------------------
+
+
+def decode_attention(q, k, v, kv_len, *, s_tile: int = 256):
+    q = jnp.asarray(q, jnp.float32)
+    k = jnp.asarray(k, jnp.float32)
+    v = jnp.asarray(v, jnp.float32)
+    b, s, hkv, d = k.shape
+    pad_s = (-s) % s_tile
+    if pad_s:
+        zk = jnp.zeros((b, pad_s, hkv, d), jnp.float32)
+        k = jnp.concatenate([k, zk], axis=1)
+        v = jnp.concatenate([v, zk], axis=1)
+    return decode_attention_pallas(
+        q, k, v, jnp.asarray(kv_len, jnp.int32), s_tile=s_tile, interpret=_interpret()
+    )

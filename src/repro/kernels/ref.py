@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``*_ref`` computes the exact semantics the kernel must reproduce,
+with no tiling, no precision tricks and no layout assumptions.  Kernel
+tests sweep shapes/dtypes and assert allclose (exact for integer
+outputs) against these.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+
+def predecessor_ref(table_u64, queries_u64):
+    """Oracle for every learned/plain search kernel: predecessor rank."""
+    return jnp.searchsorted(table_u64, queries_u64, side="right").astype(jnp.int32) - 1
+
+
+def rmi_predict_ref(u_f32, root_coef_f32, leaf_slope, leaf_icept, leaf_eps, leaf_rlo, leaf_rhi, b, n):
+    """Window prediction half of the fused RMI kernel, in f32 (the kernel's
+    own arithmetic) — used to check the predict stage in isolation."""
+    u = u_f32.astype(jnp.float32)
+    c = root_coef_f32
+    p_root = ((c[3] * u + c[2]) * u + c[1]) * u + c[0]
+    leaf = jnp.clip(jnp.floor(p_root * (b / n)).astype(jnp.int32), 0, b - 1)
+    slope = jnp.take(leaf_slope, leaf)
+    icept = jnp.take(leaf_icept, leaf)
+    eps = jnp.take(leaf_eps, leaf)
+    rlo = jnp.take(leaf_rlo, leaf)
+    rhi = jnp.take(leaf_rhi, leaf)
+    p = slope * u + icept
+    lo = jnp.clip(jnp.floor(p).astype(jnp.int32) - eps, rlo, rhi)
+    hi = jnp.clip(jnp.ceil(p).astype(jnp.int32) + eps, rlo, rhi)
+    return lo, hi
+
+
+def embedding_bag_ref(table, ids, seg_ids, weights, num_bags):
+    """EmbeddingBag oracle: out[b] = sum_i [seg_ids[i]==b] w[i] * table[ids[i]].
+
+    ``table``: (V, D) f32; ``ids``/``seg_ids``: (N,) i32; weights (N,) f32.
+    """
+    gathered = jnp.take(table, ids, axis=0) * weights[:, None]
+    return jax.ops.segment_sum(gathered, seg_ids, num_segments=num_bags)
+
+
+def decode_attention_ref(q, k, v, kv_len):
+    """Single-token GQA decode attention oracle.
+
+    q: (B, Hq, D) f32; k/v: (B, S, Hkv, D) f32; kv_len: (B,) i32 valid
+    lengths.  Hq must be a multiple of Hkv (GQA groups).
+    """
+    b, hq, d = q.shape
+    _, s, hkv, _ = k.shape
+    group = hq // hkv
+    kk = jnp.repeat(k, group, axis=2)  # (B, S, Hq, D)
+    vv = jnp.repeat(v, group, axis=2)
+    logits = jnp.einsum("bhd,bshd->bhs", q, kk) / jnp.sqrt(jnp.float32(d))
+    mask = (jnp.arange(s)[None, None, :] < kv_len[:, None, None])
+    logits = jnp.where(mask, logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", w, vv)

@@ -1,0 +1,156 @@
+"""Fused RMI predict + ε-bounded branch-free search — Pallas TPU kernel.
+
+TPU-native adaptation of the paper's hottest path (DESIGN.md §3):
+
+* 64-bit keys are carried as **two u32 limbs** (TPU vector units have no
+  64-bit integer compare; the lexicographic limb compare is one select).
+* The CDF coordinate ``u`` is pre-normalised **once** outside the kernel
+  (f64 -> f32); all in-kernel arithmetic is f32/i32.  The build widens
+  each leaf's ε by the measured f32 rounding error so the window stays a
+  guarantee.
+* Grid over query tiles; the table limbs + leaf parameter arrays live in
+  VMEM (VMEM-tier tables — the paper's L1/L2 regime; HBM-tier tables use
+  the XLA path in :mod:`repro.core`).
+* The bounded search is the fixed-trip Khuong–Morin loop: ``steps``
+  iterations of gather + select, no data-dependent control flow.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE_Q = 512
+
+
+def _le_u64(khi, klo, qhi, qlo):
+    """(khi,klo) <= (qhi,qlo) as unsigned 64-bit via u32 limbs."""
+    return (khi < qhi) | ((khi == qhi) & (klo <= qlo))
+
+
+def _rmi_kernel(
+    u_ref,
+    qhi_ref,
+    qlo_ref,
+    thi_ref,
+    tlo_ref,
+    root_ref,
+    slope_ref,
+    icept_ref,
+    eps_ref,
+    rlo_ref,
+    rhi_ref,
+    out_ref,
+    *,
+    b: int,
+    n: int,
+    steps: int,
+):
+    u = u_ref[...]  # (TQ,) f32, pre-normalised and clamped to [0,1]
+    qhi = qhi_ref[...]
+    qlo = qlo_ref[...]
+    thi = thi_ref[...]  # (N,) u32 table limbs
+    tlo = tlo_ref[...]
+    c = root_ref[...]  # (4,) f32
+
+    # --- stage 1: root -> leaf ---
+    p_root = ((c[3] * u + c[2]) * u + c[1]) * u + c[0]
+    leaf = jnp.clip(jnp.floor(p_root * (b / n)).astype(jnp.int32), 0, b - 1)
+
+    # --- stage 2: leaf linear predict + guaranteed window ---
+    slope = jnp.take(slope_ref[...], leaf)
+    icept = jnp.take(icept_ref[...], leaf)
+    eps = jnp.take(eps_ref[...], leaf)
+    rlo = jnp.take(rlo_ref[...], leaf)
+    rhi = jnp.take(rhi_ref[...], leaf)
+    p = slope * u + icept
+    lo = jnp.clip(jnp.floor(p).astype(jnp.int32) - eps, rlo, rhi)
+    hi = jnp.clip(jnp.ceil(p).astype(jnp.int32) + eps, rlo, rhi)
+
+    # --- stage 3: fixed-trip branch-free bounded search ---
+    base = lo
+    length = hi - lo + 1
+
+    def body(_, carry):
+        base, length = carry
+        half = length >> 1
+        mid = base + half
+        khi = jnp.take(thi, mid)
+        klo = jnp.take(tlo, mid)
+        go_right = _le_u64(khi, klo, qhi, qlo) & (length > 1)
+        base = jnp.where(go_right, mid, base)
+        length = length - jnp.where(length > 1, half, 0)
+        return base, length
+
+    base, _ = lax.fori_loop(0, steps, body, (base, length))
+    le = _le_u64(jnp.take(thi, base), jnp.take(tlo, base), qhi, qlo)
+    out_ref[...] = base + le.astype(jnp.int32) - 1
+
+
+def fused_rmi_search_pallas(
+    u_f32,
+    q_hi,
+    q_lo,
+    table_hi,
+    table_lo,
+    root_coef,
+    leaf_slope,
+    leaf_icept,
+    leaf_eps,
+    leaf_rlo,
+    leaf_rhi,
+    *,
+    steps: int,
+    tile_q: int = DEFAULT_TILE_Q,
+    interpret: bool = True,
+):
+    """pallas_call wrapper.  Queries must be padded to a tile multiple."""
+    nq = u_f32.shape[0]
+    n = table_hi.shape[0]
+    b = leaf_slope.shape[0]
+    assert nq % tile_q == 0, "pad queries to a tile multiple (see ops.py)"
+    grid = (nq // tile_q,)
+
+    def qspec():
+        return pl.BlockSpec((tile_q,), lambda i: (i,))
+
+    def full(shape):
+        return pl.BlockSpec(shape, lambda i: tuple(0 for _ in shape))
+
+    kernel = functools.partial(_rmi_kernel, b=b, n=n, steps=steps)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            qspec(),  # u
+            qspec(),  # q_hi
+            qspec(),  # q_lo
+            full((n,)),  # table_hi
+            full((n,)),  # table_lo
+            full((4,)),  # root coef
+            full((b,)),  # slope
+            full((b,)),  # icept
+            full((b,)),  # eps
+            full((b,)),  # rlo
+            full((b,)),  # rhi
+        ],
+        out_specs=qspec(),
+        out_shape=jax.ShapeDtypeStruct((nq,), jnp.int32),
+        interpret=interpret,
+    )(
+        u_f32,
+        q_hi,
+        q_lo,
+        table_hi,
+        table_lo,
+        root_coef,
+        leaf_slope,
+        leaf_icept,
+        leaf_eps,
+        leaf_rlo,
+        leaf_rhi,
+    )

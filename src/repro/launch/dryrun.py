@@ -1,0 +1,339 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^^^ MUST precede every other import (jax locks the device count on
+# first backend init).  512 host devices back both production meshes:
+# the (16,16) single pod uses the first 256, the (2,16,16) multi-pod all.
+
+"""Multi-pod dry-run driver.
+
+For every (architecture x input-shape x mesh) cell:
+  jit(step).lower(...abstract inputs...).compile()
+then record  memory_analysis(), cost_analysis(), and the collective
+bytes parsed from the partitioned HLO — the §Roofline inputs.
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-3-8b --cell train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+"""
+
+import argparse
+import json
+import math
+import re
+import time
+import traceback
+from pathlib import Path
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+import repro  # noqa: F401  (x64 etc.)
+from repro import configs
+from repro.dist.sharding import ShardingCtx
+from repro.launch import steps
+from repro.launch.mesh import make_production_mesh
+from repro.launch import hlo_analysis
+from repro.train import TrainConfig
+
+# ---------------------------------------------------------------------------
+# HLO collective accounting
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b(f64|f32|bf16|f16|s64|u64|s32|u32|s16|u16|s8|u8|pred)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-chip traffic bytes by collective kind, from partitioned HLO.
+
+    Shapes in post-SPMD HLO are per-device.  Ring-model accounting:
+      all-reduce: 2x result; all-gather: result; reduce-scatter: sum of
+      operands; all-to-all: result; collective-permute: result.
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.*)$", s)
+        if m is None:
+            continue
+        rhs = m.group(1)
+        kind = None
+        for k in _COLLECTIVES:
+            if re.search(rf"\b{k}(-start|-done)?\(", rhs):
+                kind = k
+                break
+        if kind is None:
+            continue
+        if "-done(" in rhs:
+            continue  # counted at -start
+        shapes = _SHAPE_RE.findall(rhs)
+        if not shapes:
+            continue
+        # first shape(s) before '(' are the result; ones inside are operands
+        paren = rhs.index("(")
+        result_shapes = _SHAPE_RE.findall(rhs[:paren])
+        operand_shapes = _SHAPE_RE.findall(rhs[paren:])
+        rbytes = sum(_shape_bytes(d, s_) for d, s_ in result_shapes)
+        obytes = sum(_shape_bytes(d, s_) for d, s_ in operand_shapes)
+        if kind == "all-reduce":
+            traffic = 2 * rbytes
+        elif kind == "reduce-scatter":
+            traffic = obytes
+        else:
+            traffic = rbytes
+        out[kind] += traffic
+        counts[kind] += 1
+    out_counts = {f"n_{k}": v for k, v in counts.items()}
+    out.update(out_counts)
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms (TPU v5e targets)
+# ---------------------------------------------------------------------------
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+LM_FLOP_FACTORS = {"train": 6, "prefill": 2, "decode": 2}
+
+
+def model_flops(spec, cell) -> float:
+    """Useful-math FLOPs for the cell (6ND train / 2ND inference)."""
+    if spec.family == "lm":
+        cfg = spec.config
+        n = cfg.active_params_count if cfg.moe else cfg.params_count
+        if cell.kind == "train":
+            toks = cell.dims["global_batch"] * cell.dims["seq_len"]
+            return 6.0 * n * toks
+        if cell.kind == "prefill":
+            toks = cell.dims["global_batch"] * cell.dims["seq_len"]
+            return 2.0 * n * toks
+        toks = cell.dims["global_batch"]  # one token per sequence
+        return 2.0 * n * toks
+    return float("nan")  # gnn / recsys: report HLO flops only
+
+
+def roofline(entry: dict, n_chips: int) -> dict:
+    flops = entry["hlo_analysis"].get("flops", 0.0)
+    bytes_ = entry["hlo_analysis"].get("bytes_major", entry["hlo_analysis"].get("bytes", 0.0))
+    coll = entry["collectives"]["total"]
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_ / HBM_BW
+    t_coll = coll / ICI_BW
+    dom = max(
+        ("compute", t_compute), ("memory", t_memory), ("collective", t_coll),
+        key=lambda kv: kv[1],
+    )[0]
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,  # fusion-ideal (bytes_major)
+        "t_memory_upper_s": entry["hlo_analysis"].get("bytes", 0.0) / HBM_BW,
+        "t_collective_s": t_coll,
+        "dominant": dom,
+        "step_time_bound_s": max(t_compute, t_memory, t_coll),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Dry-run core
+# ---------------------------------------------------------------------------
+
+
+def profile_for(spec) -> str:
+    explicit = getattr(spec.config, "sharding_profile", None)
+    if explicit:
+        return explicit
+    return "flat_dp" if spec.family in ("recsys", "gnn") else "tp_fsdp"
+
+
+# gradient-accumulation depth per (arch, cell): the activation-memory
+# knob that makes the big train cells fit 16 GB HBM (see EXPERIMENTS.md
+# §Perf iteration 1 — the naive mb=1 baselines are kept for contrast).
+MICROBATCHES = {
+    ("granite-3-8b", "train_4k"): 8,
+    ("minitron-8b", "train_4k"): 8,
+    ("moonshot-v1-16b-a3b", "train_4k"): 8,
+    ("qwen3-moe-235b-a22b", "train_4k"): 16,
+    ("qwen2-0.5b", "train_4k"): 4,
+}
+
+
+def run_cell(spec, cell, mesh, multi_pod: bool, verbose=True):
+    ctx = ShardingCtx(mesh=mesh, profile=profile_for(spec))
+    tcfg = TrainConfig(microbatches=MICROBATCHES.get((spec.arch_id, cell.name), 1))
+    t0 = time.perf_counter()
+    bundle = steps.build_step(spec, cell, ctx, tcfg)
+    batch = steps.make_inputs(spec, cell, abstract=True)
+
+    rep = ctx.sharding()
+    state_sh = steps.fit_tree(bundle.state_template, bundle.state_shardings, mesh)
+    batch_sh = steps.fit_tree(batch, bundle.batch_shardings, mesh)
+    if spec.family == "lm" and cell.kind == "decode":
+        pos_t = jax.ShapeDtypeStruct((), jnp.int32)
+        cache_sh = steps.fit_tree(
+            bundle.extra["cache_template"], bundle.extra["cache_shardings"], mesh
+        )
+        in_sh = (state_sh, cache_sh, batch_sh, rep)
+        args = (bundle.state_template, bundle.extra["cache_template"], batch, pos_t)
+        fn = bundle.fn
+    else:  # train / prefill / serve / retrieval
+        in_sh = (state_sh, batch_sh)
+        args = (bundle.state_template, batch)
+        fn = bundle.fn
+
+    with mesh:
+        lowered = jax.jit(fn, in_shardings=in_sh).lower(*args)
+        t_lower = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t1
+
+    entry = {
+        "arch": spec.arch_id,
+        "cell": cell.name,
+        "kind": cell.kind,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": 512 if multi_pod else 256,
+        "lower_s": t_lower,
+        "compile_s": t_compile,
+    }
+
+    try:
+        ma = compiled.memory_analysis()
+        entry["memory_analysis"] = {
+            k: int(getattr(ma, k))
+            for k in (
+                "argument_size_in_bytes",
+                "output_size_in_bytes",
+                "temp_size_in_bytes",
+                "generated_code_size_in_bytes",
+            )
+            if hasattr(ma, k)
+        }
+        if verbose:
+            print(f"  memory_analysis: {entry['memory_analysis']}")
+    except Exception as e:  # pragma: no cover - backend specific
+        entry["memory_analysis"] = {"error": repr(e)}
+
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        entry["cost_analysis"] = {
+            k: float(v)
+            for k, v in ca.items()
+            if k in ("flops", "bytes accessed", "transcendentals", "bytes accessed output")
+        }
+        if verbose:
+            print(f"  cost_analysis: {entry['cost_analysis']}")
+    except Exception as e:  # pragma: no cover
+        entry["cost_analysis"] = {"error": repr(e)}
+
+    try:
+        hlo = compiled.as_text()
+        # trip-count-aware analysis (scan bodies expanded — see
+        # hlo_analysis.py; raw cost_analysis counts while bodies once)
+        ha = hlo_analysis.analyze(hlo)
+        entry["hlo_analysis"] = {
+            "flops": ha["flops"], "bytes": ha["bytes"],
+            "bytes_major": ha["bytes_major"], "n_dots": ha["n_dots"],
+        }
+        entry["collectives"] = ha["collectives"]
+        entry["collectives_raw_onepass"] = collective_bytes(hlo)
+        entry["hlo_bytes"] = len(hlo)
+    except Exception as e:  # pragma: no cover
+        entry["collectives"] = {"total": 0, "error": repr(e)}
+        entry["hlo_analysis"] = {"flops": 0.0, "bytes": 0.0, "error": repr(e)}
+
+    entry["roofline"] = roofline(entry, entry["n_chips"])
+    mf = model_flops(spec, cell)
+    if not math.isnan(mf):
+        entry["model_flops"] = mf
+        hlo_flops_total = entry["hlo_analysis"].get("flops", 0.0) * entry["n_chips"]
+        entry["model_flops_ratio"] = mf / max(hlo_flops_total, 1.0)
+    return entry
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--cell", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument(
+        "--override", action="append", default=[],
+        help="config override key=value (e.g. triplet_layout=padded), for §Perf iterations",
+    )
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    archs = configs.list_archs() if (args.all or args.arch is None) else [args.arch]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    failures = []
+    for multi_pod in meshes:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        mesh_tag = "multi" if multi_pod else "single"
+        for arch in archs:
+            spec = configs.get(arch)
+            if args.override:
+                import dataclasses
+                ov = {}
+                for kv in args.override:
+                    k, v = kv.split("=", 1)
+                    cur = getattr(spec.config, k)
+                    ov[k] = type(cur)(v) if not isinstance(cur, bool) else v == "True"
+                spec = dataclasses.replace(spec, config=dataclasses.replace(spec.config, **ov))
+            for cell in spec.shapes:
+                if args.cell and cell.name != args.cell:
+                    continue
+                path = out_dir / f"{arch}__{cell.name}__{mesh_tag}.json"
+                if args.skip_existing and path.exists():
+                    print(f"[skip] {path}")
+                    continue
+                print(f"[dryrun] {arch} x {cell.name} on {mesh_tag} mesh ...", flush=True)
+                try:
+                    entry = run_cell(spec, cell, mesh, multi_pod)
+                    path.write_text(json.dumps(entry, indent=1))
+                    r = entry.get("roofline", {})
+                    print(
+                        f"  OK lower {entry['lower_s']:.1f}s compile {entry['compile_s']:.1f}s"
+                        f" | dominant={r.get('dominant')} bound={r.get('step_time_bound_s', 0):.4f}s"
+                        f" | coll={entry['collectives']['total'] / 1e9:.3f} GB/chip",
+                        flush=True,
+                    )
+                except Exception as e:
+                    failures.append((arch, cell.name, mesh_tag))
+                    print(f"  FAIL: {e}\n{traceback.format_exc()[-2000:]}", flush=True)
+
+    print(f"\n[dryrun] done; failures: {failures}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,423 @@
+"""Per-(arch x shape-cell) step builders.
+
+For every cell this module can produce:
+  * ``abstract_inputs``  — ShapeDtypeStruct stand-ins (dry-run; no alloc)
+  * ``concrete_inputs``  — real random arrays (smoke tests / examples)
+  * ``build_step``       — the jittable step fn + state templates +
+                           in/out sharding pytrees for jax.jit
+
+Kinds: ``train`` lowers a full optimizer step; ``prefill`` a forward
+pass; ``decode`` a single-token serve step against a KV cache;
+``serve``/``retrieval`` the recsys scoring paths.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchSpec, ShapeCell
+from repro.dist.sharding import ShardingCtx
+from repro.models import dimenet, recsys, transformer
+from repro.train import TrainConfig, init_train_state, make_train_step
+
+I32 = jnp.int32
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Param sharding by path (family-specific classifiers)
+# ---------------------------------------------------------------------------
+
+
+def _lm_logical(path: str):
+    if "moe" in path:
+        if "router" in path:
+            return (None, None, None)
+        if "wd" in path:
+            return (None, "ep", None, "fsdp")
+        return (None, "ep", "fsdp", None)
+    if path.endswith("embed"):
+        return ("tp", "fsdp")
+    if path.endswith("head"):
+        return ("fsdp", "tp")
+    for nm in ("wq", "wk", "wv", "wg", "wu"):
+        if path.endswith(nm):
+            return (None, "fsdp", "tp")
+    for nm in ("wo", "wd"):
+        if path.endswith(nm):
+            return (None, "tp", "fsdp")
+    for nm in ("bq", "bk", "bv"):
+        if path.endswith(nm):
+            return (None, "tp")
+    return None  # norms etc: replicated
+
+
+def _recsys_logical(path: str):
+    if path.endswith("embed") or path.endswith("wide"):
+        return ("row", None)
+    return None
+
+
+def _gnn_logical(path: str):
+    return None  # GNN params are small: replicated
+
+
+_LOGICAL = {"lm": _lm_logical, "recsys": _recsys_logical, "gnn": _gnn_logical}
+
+
+def fit_sharding(shape, sharding, mesh):
+    """Drop mesh axes per-dim until the dim size divides evenly.
+
+    jit in_shardings require exact divisibility; published vocab/batch
+    sizes (151936, 1e6, ...) don't always divide 256/512, so each dim
+    falls back to the largest prefix of its axis tuple that does.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    spec = sharding.spec
+    new = []
+    for i, entry in enumerate(spec):
+        if entry is None:
+            new.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        while axes:
+            prod = 1
+            for a in axes:
+                prod *= mesh.shape[a]
+            if shape[i] % prod == 0:
+                break
+            axes = axes[:-1]
+        if not axes:
+            new.append(None)
+        elif len(axes) == 1:
+            new.append(axes[0])
+        else:
+            new.append(tuple(axes))
+    return NamedSharding(mesh, P(*new))
+
+
+def fit_tree(templates, shardings, mesh):
+    """Apply fit_sharding leaf-wise over matching pytrees."""
+    return jax.tree.map(
+        lambda t, s: fit_sharding(t.shape, s, mesh), templates, shardings
+    )
+
+
+def state_shardings(state_tree, family: str, ctx: ShardingCtx):
+    """NamedSharding pytree for a train/serve state by param path."""
+    classify = _LOGICAL[family]
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state_tree)
+    out = []
+    for path, leaf in flat:
+        p = "/".join(str(k.key) if hasattr(k, "key") else str(k) for k in path)
+        # strip optimizer prefixes so moments shard like their params
+        for prefix in ("opt/m/", "opt/v/", "comp_err/"):
+            if p.startswith(prefix):
+                p = p[len(prefix):]
+        logical = classify(p)
+        if logical is None or len(logical) != leaf.ndim:
+            out.append(ctx.sharding())  # replicated
+        else:
+            out.append(ctx.sharding(*logical))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Inputs per family x kind
+# ---------------------------------------------------------------------------
+
+
+def _lm_inputs(cfg, cell: ShapeCell, abstract: bool, rng=None):
+    b, s = cell.dims["global_batch"], cell.dims["seq_len"]
+    if cell.kind == "train":
+        shp = {"tokens": ((b, s), I32), "labels": ((b, s), I32)}
+    elif cell.kind == "prefill":
+        shp = {"tokens": ((b, s), I32)}
+    else:  # decode: one new token against a seq_len cache
+        shp = {"tokens": ((b, 1), I32)}
+    if abstract:
+        return {k: jax.ShapeDtypeStruct(sh, dt) for k, (sh, dt) in shp.items()}
+    rng = rng or np.random.default_rng(0)
+    return {
+        k: jnp.asarray(rng.integers(0, cfg.vocab, size=sh), dt)
+        for k, (sh, dt) in shp.items()
+    }
+
+
+def _lm_input_shardings(cell: ShapeCell, ctx: ShardingCtx):
+    if cell.kind == "train":
+        return {"tokens": ctx.sharding("dp", None), "labels": ctx.sharding("dp", None)}
+    if cell.kind == "prefill":
+        return {"tokens": ctx.sharding("dp", None)}
+    if cell.dims.get("seq_shard"):
+        return {"tokens": ctx.sharding(None, None)}
+    return {"tokens": ctx.sharding("dp", None)}
+
+
+def _gnn_inputs(cfg, cell: ShapeCell, abstract: bool, rng=None):
+    d = cell.dims
+    n, e = d["n_nodes"], d["n_edges"]
+    t_max = d.get("t_max", 4)
+    t = e * t_max
+    padded = getattr(cfg, "triplet_layout", "flat") == "padded"
+    if padded:
+        e = ((e + 511) // 512) * 512  # shard_map needs even edge shards
+    shp = {
+        "pos": ((n, 3), F32),
+        "edge_src": ((e,), I32),
+        "edge_dst": ((e,), I32),
+    }
+    if padded:
+        shp["tri_kj"] = ((e, t_max), I32)
+        shp["tri_mask"] = ((e, t_max), F32)
+        shp["edge_mask"] = ((e,), F32)
+    else:
+        shp["tri_kj"] = ((t,), I32)
+        shp["tri_ji"] = ((t,), I32)
+    if d.get("energy"):
+        shp["z"] = ((n,), I32)
+        shp["node_graph"] = ((n,), I32)
+        shp["target"] = ((d["n_graphs"],), F32)
+    else:
+        shp["feat"] = ((n, d["d_feat"]), F32)
+        shp["labels"] = ((n,), I32)
+        shp["label_mask"] = ((n,), F32)
+    if abstract:
+        return {k: jax.ShapeDtypeStruct(sh, dt) for k, (sh, dt) in shp.items()}
+
+    rng = rng or np.random.default_rng(0)
+    src = rng.integers(0, n, e).astype(np.int32)
+    dst = rng.integers(0, n, e).astype(np.int32)
+    batch = {
+        "pos": jnp.asarray(rng.normal(0, 2, (n, 3)).astype(np.float32)),
+        "edge_src": jnp.asarray(src),
+        "edge_dst": jnp.asarray(dst),
+    }
+    if padded:
+        tk, tm = dimenet.build_triplets_padded(src, dst, n, t_max=t_max)
+        batch["tri_kj"] = jnp.asarray(tk)
+        batch["tri_mask"] = jnp.asarray(tm)
+        batch["edge_mask"] = jnp.ones((e,), jnp.float32)
+    else:
+        tri_kj, tri_ji = dimenet.build_triplets(src, dst, n, t_max=t_max)
+        # pad/trim triplets to the fixed cell size
+        if len(tri_kj) < t:
+            pad = t - len(tri_kj)
+            tri_kj = np.concatenate([tri_kj, np.zeros(pad, np.int32)])
+            tri_ji = np.concatenate([tri_ji, np.zeros(pad, np.int32)])
+        batch["tri_kj"] = jnp.asarray(tri_kj[:t])
+        batch["tri_ji"] = jnp.asarray(tri_ji[:t])
+    if d.get("energy"):
+        batch["z"] = jnp.asarray(rng.integers(0, cfg.n_species, n).astype(np.int32))
+        ng = d["n_graphs"]
+        batch["node_graph"] = jnp.asarray(np.sort(rng.integers(0, ng, n)).astype(np.int32))
+        batch["target"] = jnp.asarray(rng.normal(0, 1, ng).astype(np.float32))
+    else:
+        batch["feat"] = jnp.asarray(rng.normal(0, 1, (n, d["d_feat"])).astype(np.float32))
+        batch["labels"] = jnp.asarray(rng.integers(0, d["n_out"], n).astype(np.int32))
+        batch["label_mask"] = jnp.asarray((rng.random(n) < 0.5).astype(np.float32))
+    return batch
+
+
+def _gnn_input_shardings(cell: ShapeCell, ctx: ShardingCtx, cfg=None):
+    e_shard = ctx.sharding("edge")
+    rep = ctx.sharding()
+    out = {
+        "pos": rep,
+        "edge_src": e_shard,
+        "edge_dst": e_shard,
+    }
+    if cfg is not None and getattr(cfg, "triplet_layout", "flat") == "padded":
+        out["tri_kj"] = ctx.sharding("edge", None)
+        out["tri_mask"] = ctx.sharding("edge", None)
+        out["edge_mask"] = e_shard
+    else:
+        out["tri_kj"] = e_shard
+        out["tri_ji"] = e_shard
+    if cell.dims.get("energy"):
+        out.update({"z": rep, "node_graph": rep, "target": rep})
+    else:
+        out.update({"feat": rep, "labels": rep, "label_mask": rep})
+    return out
+
+
+def _recsys_inputs(cfg, cell: ShapeCell, abstract: bool, rng=None):
+    b = cell.dims["batch"]
+    f = cfg.n_sparse
+    shp = {"sparse": ((b, f), I32)}
+    if cfg.kind == "dlrm":
+        shp["dense"] = ((b, cfg.n_dense), F32)
+    if cfg.kind == "din":
+        shp["hist"] = ((b, cfg.seq_len), I32)
+    if cfg.kind == "sasrec":
+        shp = {"seq": ((b, cfg.seq_len), I32), "target": ((b,), I32)}
+    if cell.kind == "train":
+        shp["label"] = ((b,), F32)
+    if cell.kind == "retrieval":
+        shp["candidates"] = ((cell.dims["n_candidates"],), I32)
+    if abstract:
+        return {k: jax.ShapeDtypeStruct(sh, dt) for k, (sh, dt) in shp.items()}
+    rng = rng or np.random.default_rng(0)
+    out = {}
+    for k, (sh, dt) in shp.items():
+        if dt == I32:
+            if k in ("sparse",):
+                cols = [rng.integers(0, v, size=(sh[0], 1)) for v in cfg.vocab_sizes]
+                out[k] = jnp.asarray(np.concatenate(cols, 1).astype(np.int32))
+            elif k in ("hist", "seq", "target", "candidates"):
+                out[k] = jnp.asarray(rng.integers(0, cfg.vocab_sizes[0], size=sh).astype(np.int32))
+            else:
+                out[k] = jnp.asarray(rng.integers(0, 2, size=sh).astype(np.int32))
+        else:
+            out[k] = jnp.asarray(rng.normal(0, 1, sh).astype(np.float32))
+    if cell.kind == "train":
+        out["label"] = jnp.asarray((rng.random(b) < 0.3).astype(np.float32))
+    return out
+
+
+def _recsys_input_shardings(cfg, cell: ShapeCell, ctx: ShardingCtx):
+    dp = lambda *rest: ctx.sharding("dp", *rest)
+    rep = ctx.sharding()
+    if cfg.kind == "sasrec":
+        out = {"seq": dp(None), "target": ctx.sharding("dp")}
+    else:
+        out = {"sparse": dp(None)}
+        if cfg.kind == "dlrm":
+            out["dense"] = dp(None)
+        if cfg.kind == "din":
+            out["hist"] = dp(None)
+    if cell.kind == "train":
+        out["label"] = ctx.sharding("dp")
+    if cell.kind == "retrieval":
+        # batch=1: user side replicated, candidate list sharded on dp
+        out = {k: rep for k in out}
+        out["candidates"] = ctx.sharding("dp")
+    return out
+
+
+def make_inputs(spec: ArchSpec, cell: ShapeCell, abstract: bool, rng=None):
+    if spec.family == "lm":
+        return _lm_inputs(spec.config, cell, abstract, rng)
+    if spec.family == "gnn":
+        return _gnn_inputs(_cfg_for_cell(spec, cell), cell, abstract, rng)
+    if spec.family == "recsys":
+        return _recsys_inputs(spec.config, cell, abstract, rng)
+    raise ValueError(spec.family)
+
+
+def input_shardings(spec: ArchSpec, cell: ShapeCell, ctx: ShardingCtx):
+    if spec.family == "lm":
+        return _lm_input_shardings(cell, ctx)
+    if spec.family == "gnn":
+        return _gnn_input_shardings(cell, ctx, _cfg_for_cell(spec, cell))
+    if spec.family == "recsys":
+        return _recsys_input_shardings(spec.config, cell, ctx)
+    raise ValueError(spec.family)
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class StepBundle:
+    """Everything jax.jit needs for one (arch x cell)."""
+
+    fn: object  # (state, batch) -> ...   or (params, cache, batch, pos)
+    state_template: object  # pytree of ShapeDtypeStruct
+    state_shardings: object
+    batch_shardings: object
+    extra: dict
+
+
+def _cfg_for_cell(spec: ArchSpec, cell: ShapeCell):
+    cfg = spec.config
+    if spec.family == "gnn" and cell.kind == "graph_train":
+        from dataclasses import replace
+
+        d = cell.dims
+        if d.get("energy"):
+            cfg = replace(cfg, n_out=1, n_graphs=d["n_graphs"], d_feat=0, t_max=d.get("t_max", 4))
+        else:
+            cfg = replace(cfg, n_out=d["n_out"], d_feat=d["d_feat"], n_graphs=0, t_max=d.get("t_max", 4))
+    return cfg
+
+
+def build_step(spec: ArchSpec, cell: ShapeCell, ctx: ShardingCtx, tcfg: Optional[TrainConfig] = None):
+    tcfg = tcfg or TrainConfig()
+    cfg = _cfg_for_cell(spec, cell)
+    family = spec.family
+
+    if family == "lm":
+        if cell.kind == "train":
+            loss = partial(transformer.loss_fn, cfg=cfg, ctx=ctx)
+            init_fn = lambda r: transformer.init(r, cfg)
+            step = make_train_step(lambda p, b: loss(p, b), tcfg)
+            state_t = jax.eval_shape(lambda r: init_train_state(r, init_fn, tcfg), jax.random.key(0))
+            st_shard = state_shardings(state_t, family, ctx)
+            return StepBundle(step, state_t, st_shard, _lm_input_shardings(cell, ctx), {"cfg": cfg})
+        if cell.kind == "prefill":
+            def fn(params, batch):
+                # full-sequence forward; only the last position's logits
+                # leave the step (decode takes over from here) — the
+                # (B, S, V) logits tensor is never materialised.
+                h = transformer.forward(params, batch["tokens"], cfg, ctx)
+                logits = jnp.einsum("bd,dv->bv", h[:, -1], params["head"].astype(h.dtype))
+                return ctx.constrain(logits.astype(jnp.float32), "dp", "tp")
+
+            params_t = jax.eval_shape(lambda r: transformer.init(r, cfg), jax.random.key(0))
+            return StepBundle(fn, params_t, state_shardings(params_t, family, ctx),
+                              _lm_input_shardings(cell, ctx), {"cfg": cfg})
+        if cell.kind == "decode":
+            seq_shard = bool(cell.dims.get("seq_shard"))
+            b, s = cell.dims["global_batch"], cell.dims["seq_len"]
+
+            def fn(params, cache, batch, pos):
+                return transformer.decode_step(
+                    params, cache, batch["tokens"], pos, cfg, ctx, seq_shard=seq_shard
+                )
+
+            params_t = jax.eval_shape(lambda r: transformer.init(r, cfg), jax.random.key(0))
+            cache_t = jax.eval_shape(lambda: transformer.init_cache(cfg, b, s))
+            cax = transformer.cache_logical_axes(seq_shard)
+            cache_sh = {k: ctx.sharding(*v) for k, v in cax.items()}
+            return StepBundle(
+                fn, params_t, state_shardings(params_t, family, ctx),
+                _lm_input_shardings(cell, ctx),
+                {"cfg": cfg, "cache_template": cache_t, "cache_shardings": cache_sh},
+            )
+
+    if family == "gnn":
+        loss = partial(dimenet.loss_fn, cfg=cfg, ctx=ctx)
+        init_fn = lambda r: dimenet.init(r, cfg)
+        step = make_train_step(lambda p, b: loss(p, b), tcfg)
+        state_t = jax.eval_shape(lambda r: init_train_state(r, init_fn, tcfg), jax.random.key(0))
+        return StepBundle(step, state_t, state_shardings(state_t, family, ctx),
+                          _gnn_input_shardings(cell, ctx, cfg), {"cfg": cfg})
+
+    if family == "recsys":
+        params_init = lambda r: recsys.init(r, cfg, ctx)
+        if cell.kind == "train":
+            loss = partial(recsys.loss_fn, cfg=cfg, ctx=ctx)
+            step = make_train_step(lambda p, b: loss(p, b), tcfg)
+            state_t = jax.eval_shape(lambda r: init_train_state(r, params_init, tcfg), jax.random.key(0))
+            return StepBundle(step, state_t, state_shardings(state_t, family, ctx),
+                              _recsys_input_shardings(cfg, cell, ctx), {"cfg": cfg})
+        params_t = jax.eval_shape(params_init, jax.random.key(0))
+        if cell.kind == "serve":
+            fn = lambda p, b: recsys.score_fn(p, b, cfg, ctx)
+        else:  # retrieval
+            fn = lambda p, b: recsys.retrieval_fn(p, b, cfg, ctx)
+        return StepBundle(fn, params_t, state_shardings(params_t, family, ctx),
+                          _recsys_input_shardings(cfg, cell, ctx), {"cfg": cfg})
+
+    raise ValueError((family, cell.kind))

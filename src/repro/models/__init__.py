@@ -1,0 +1,3 @@
+"""Model zoo: the 10 assigned architectures on shared substrates."""
+
+from . import dimenet, embedding, layers, moe, recsys, transformer

@@ -1,0 +1,190 @@
+"""Sharded embedding substrate for the recsys architectures.
+
+JAX has no EmbeddingBag or giant-table primitive; this module builds
+both from scratch (kernel_taxonomy §RecSys):
+
+* :func:`sharded_lookup` — rows of each table sharded over the whole
+  mesh.  Two modes, selectable per config (the §Perf hillclimb target):
+    - ``allreduce``: every shard masked-gathers its local rows and the
+      partial results are psummed (simple; collective = batch x dim x
+      n_fields floats).
+    - ``a2a``: requests are bucketed to owner shards via shard_map +
+      all_to_all (collective = only the vectors actually needed).
+* :class:`LearnedKeyedEmbedding` — the paper's technique on the hottest
+  path: raw 64-bit hashed ids are looked up in a *compressed sorted key
+  table* via an RMI/PGM learned index instead of allocating dense
+  hash-space tables (DESIGN.md §3, integration point 1).
+* :func:`embedding_bag` — take + segment_sum (the XLA path; the Pallas
+  one-hot-matmul kernel covers the VMEM-resident tier).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.rmi import build_rmi
+
+
+def embedding_bag(table, ids, seg_ids, num_bags: int, weights=None):
+    """EmbeddingBag via take + segment_sum (sum mode)."""
+    vecs = jnp.take(table, ids, axis=0)
+    if weights is not None:
+        vecs = vecs * weights[:, None]
+    return jax.ops.segment_sum(vecs, seg_ids, num_segments=num_bags)
+
+
+def sharded_lookup(table, ids, ctx, mode: str = "allreduce", cap_factor: float = 2.0):
+    """ids (B, F) int32 rows into ``table`` (V, D) row-sharded over mesh.
+
+    Returns (B, F, D).  ``allreduce``: local masked gather + psum.
+    ``a2a``: shard_map all_to_all exchange of (id -> vector) requests,
+    capacity-bounded at ``cap_factor`` x the per-shard average (skewed
+    ids beyond capacity are dropped to the zero vector — the standard
+    bounded-exchange contract; raise cap_factor for exactness).
+    """
+    if mode == "allreduce":
+        # XLA's SPMD partitioner turns the gather-from-row-sharded into
+        # exactly the masked-gather+psum pattern under these constraints.
+        table = ctx.constrain(table, "row", None)
+        out = jnp.take(table, ids, axis=0)
+        return ctx.constrain(out, "dp", None, None)
+
+    if mode == "a2a":
+        b = ids.shape[0]
+        n_shards = 1
+        for a in ctx.mesh.axis_names:
+            n_shards *= ctx.mesh.shape[a]
+        dp = ctx.n("dp")
+        pad = (-b) % dp
+        if pad:
+            ids = jnp.concatenate([ids, jnp.zeros((pad,) + ids.shape[1:], ids.dtype)])
+        out = _a2a_lookup(table, ids, ctx, cap_factor)
+        return out[:b] if pad else out
+    raise ValueError(mode)
+
+
+def _a2a_lookup(table, ids, ctx, cap_factor: float = 2.0):
+    """Owner-exchange lookup via shard_map over the flattened mesh.
+
+    Each shard owns a contiguous row range.  Every shard sends each of
+    its local ids to the owner (all_to_all), owners gather locally and
+    the vectors return (second all_to_all).  Collective bytes = the
+    vectors actually requested (vs the psum of full batch in allreduce
+    mode).
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    mesh = ctx.mesh
+    axes = tuple(mesh.axis_names)
+    n_shards = 1
+    for a in axes:
+        n_shards *= mesh.shape[a]
+    v, d = table.shape
+    b, f = ids.shape
+    rows_per = v // n_shards
+    dp_axes = ctx.rules["dp"] or ()
+
+    def block(tab, local_ids):
+        from repro.core import search
+
+        # tab: (rows_per, D); local_ids: (B_loc, F)
+        flat = local_ids.reshape(-1).astype(jnp.int64)  # (N,)
+        n = flat.shape[0]
+        owner = jnp.clip(flat // rows_per, 0, n_shards - 1)
+        # bucket ids by owner shard: sort + branch-free boundary search
+        order = jnp.argsort(owner)
+        s_owner = jnp.take(owner, order)
+        s_ids = jnp.take(flat, order)
+        cap = max(1, int(-(-cap_factor * n // n_shards)))  # capacity-bounded
+        shard_q = jnp.arange(n_shards, dtype=s_owner.dtype)
+        bounds = search.bfs(s_owner, shard_q - 1) + 1
+        ends = search.bfs(s_owner, shard_q) + 1
+        slots = bounds[:, None] + lax.broadcasted_iota(jnp.int64, (n_shards, cap), 1)
+        valid = slots < ends[:, None]
+        req = jnp.where(valid, jnp.take(s_ids, jnp.minimum(slots, n - 1)), 0)
+
+        # 1st all_to_all: requests travel to their owner shard
+        req_x = _all_to_all_flat(req, axes)  # (n_shards, cap) ids this shard owns
+        local_rows = jnp.clip(
+            req_x - _shard_offset(axes, rows_per), 0, rows_per - 1
+        ).astype(jnp.int32)
+        vecs = jnp.take(tab, local_rows.reshape(-1), axis=0).reshape(n_shards, cap, d)
+        # 2nd all_to_all: vectors travel back to the requesters
+        vecs_back = _all_to_all_flat(vecs, axes)
+
+        # place vectors at their sorted positions, then unsort
+        flat_slots = jnp.minimum(slots, n - 1).reshape(-1)
+        sorted_out = jnp.zeros((n, d), tab.dtype)
+        sorted_out = sorted_out.at[flat_slots].add(
+            vecs_back.reshape(-1, d) * valid.reshape(-1, 1).astype(tab.dtype)
+        )
+        inv = jnp.argsort(order)
+        out = jnp.take(sorted_out, inv, axis=0)
+        return out.reshape(local_ids.shape[0], f, d)
+
+    dp_spec = dp_axes if len(dp_axes) > 1 else (dp_axes[0] if dp_axes else None)
+    return shard_map(
+        block,
+        mesh=mesh,
+        in_specs=(P(axes, None), P(dp_spec, None)),
+        out_specs=P(dp_spec, None, None),
+        check_rep=False,
+    )(table, ids)
+
+
+def _dp_size(ctx):
+    return ctx.n("dp")
+
+
+def _shard_offset(axes, rows_per):
+    idx = lax.axis_index(axes)
+    return (idx * rows_per).astype(jnp.int64)
+
+
+def _all_to_all_flat(x, axes):
+    """all_to_all over the flattened mesh axes: x (n_shards, ...) swaps
+    the leading chunk axis with the shard axis."""
+    return lax.all_to_all(x, axes, split_axis=0, concat_axis=0, tiled=True)
+
+
+@dataclass
+class LearnedKeyedEmbedding:
+    """Compressed-vocabulary embedding keyed by a learned index.
+
+    Production recsys ids are 64-bit hashes; a dense table over the hash
+    space is impossible and hashing-by-modulo collides.  Here the *sorted
+    unique key set* (built offline) is searched with the paper's RMI to
+    map raw id -> dense row — predecessor search on the hot path.
+    """
+
+    keys: jnp.ndarray  # (V,) uint64 sorted unique raw ids
+    table: jnp.ndarray  # (V+1, D) f32 — last row is the OOV vector
+    rmi: object
+
+    @staticmethod
+    def build(raw_keys: np.ndarray, dim: int, seed: int = 0, b: int | None = None):
+        keys = np.unique(raw_keys.astype(np.uint64))
+        v = len(keys)
+        rng = np.random.default_rng(seed)
+        table = (rng.normal(0, 0.05, size=(v + 1, dim))).astype(np.float32)
+        rmi = build_rmi(keys, b=b or max(2, v // 128))
+        return LearnedKeyedEmbedding(
+            keys=jnp.asarray(keys), table=jnp.asarray(table), rmi=rmi
+        )
+
+    def lookup(self, raw_ids):
+        q = jnp.asarray(raw_ids, dtype=jnp.uint64)
+        shape = q.shape
+        qf = q.reshape(-1)
+        rank = self.rmi.predecessor(self.keys, qf)
+        hit = (rank >= 0) & (jnp.take(self.keys, jnp.maximum(rank, 0)) == qf)
+        v = self.table.shape[0] - 1
+        row = jnp.where(hit, jnp.maximum(rank, 0), v)  # miss -> OOV row
+        out = jnp.take(self.table, row, axis=0)
+        return out.reshape(*shape, -1)

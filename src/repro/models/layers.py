@@ -1,0 +1,130 @@
+"""Shared neural layers (pure-JAX, no flax): params are plain pytrees.
+
+Every layer takes explicit params and a :class:`ShardingCtx`; dtypes are
+explicit everywhere (global x64 is enabled for the learned-index core
+and must not leak into model compute).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32, "float16": jnp.float16}[name]
+
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[0]
+    std = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype, std: float = 0.02):
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def rms_norm(x, w, eps: float = 1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * lax.rsqrt(var + eps)).astype(dt) * w.astype(dt)
+
+
+def rope_tables(seq_len: int, head_dim: int, theta: float, dtype=jnp.float32, offset=0):
+    """(S, hd/2) cos/sin tables; ``offset`` supports decode positions."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    pos = jnp.arange(seq_len, dtype=jnp.float32) + offset
+    ang = pos[:, None] * freqs[None, :]
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, S, H, hd); cos/sin: (S, hd/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[None, :, None, :].astype(x.dtype)
+    s = sin[None, :, None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+def swiglu(x, wg, wu, wd):
+    g = jnp.einsum("btd,df->btf", x, wg.astype(x.dtype))
+    u = jnp.einsum("btd,df->btf", x, wu.astype(x.dtype))
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("btf,fd->btd", h, wd.astype(x.dtype))
+
+
+def causal_attention(q, k, v, *, q_chunk: int = 1024, ctx=None):
+    """Materialisation-bounded causal GQA attention.
+
+    q: (B, S, Hq, hd); k/v: (B, S, Hkv, hd).  Scans over q chunks so the
+    live logits tensor is (B, Hq, q_chunk, S) — the XLA fallback path for
+    training (the serve path uses the Pallas flash-decode kernel).
+    """
+    b, s, hq, hd = q.shape
+    hkv = k.shape[2]
+    group = hq // hkv
+    scale = 1.0 / math.sqrt(hd)
+    kk = k  # (B, S, Hkv, hd)
+    vv = v
+
+    q_chunk = min(q_chunk, s)
+    n_chunks = s // q_chunk if s % q_chunk == 0 else 1
+    if s % q_chunk != 0:
+        q_chunk = s
+
+    q5 = jnp.moveaxis(q.reshape(b, n_chunks, q_chunk, hkv, group, hd), 1, 0)
+
+    @jax.checkpoint
+    def attend_chunk(ci, qc):  # qc: (B, qc, Hkv, g, hd)
+        # rematerialised: per-chunk (B, H, qc, S) logits/weights are
+        # recomputed in backward, never stacked across chunks
+        logits = jnp.einsum("bqkgd,bskd->bkgqs", qc, kk) * scale
+        qpos = ci * q_chunk + lax.broadcasted_iota(jnp.int32, (q_chunk, s), 0)
+        kpos = lax.broadcasted_iota(jnp.int32, (q_chunk, s), 1)
+        mask = (kpos <= qpos)[None, None, None, :, :]
+        logits = jnp.where(mask, logits, jnp.finfo(logits.dtype).min)
+        w = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(q.dtype)
+        return jnp.einsum("bkgqs,bskd->bqkgd", w, vv)
+
+    def chunk_fn(ci, qc):
+        return ci + 1, attend_chunk(ci, qc)
+
+    _, outs = lax.scan(chunk_fn, 0, q5)
+    # outs: (nC, B, qc, Hkv, g, hd) -> (B, S, Hq, hd)
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, s, hq, hd)
+    return out
+
+
+def decode_attention_xla(q, k_cache, v_cache, kv_len):
+    """One-token GQA attention over a cache (XLA path; Pallas kernel in
+    kernels/decode_attention.py is the TPU fast path).
+
+    q: (B, Hq, hd); caches: (B, Smax, Hkv, hd); kv_len: scalar int.
+    """
+    b, hq, hd = q.shape
+    smax, hkv = k_cache.shape[1], k_cache.shape[2]
+    group = hq // hkv
+    scale = 1.0 / math.sqrt(hd)
+    q4 = q.reshape(b, hkv, group, hd)
+    logits = jnp.einsum("bkgd,bskd->bkgs", q4, k_cache) * scale
+    pos = lax.broadcasted_iota(jnp.int32, (1, 1, 1, smax), 3)
+    logits = jnp.where(pos < kv_len, logits, jnp.finfo(logits.dtype).min)
+    w = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgs,bskd->bkgd", w, v_cache)
+    return out.reshape(b, hq, hd)
+
+
+def cross_entropy(logits_f32, labels, *, ctx=None):
+    """Token-mean cross entropy; logits may be vocab-sharded (XLA inserts
+    the psum for the logsumexp under the sharding constraint)."""
+    lse = jax.scipy.special.logsumexp(logits_f32, axis=-1)
+    gold = jnp.take_along_axis(logits_f32, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)

@@ -1,0 +1,306 @@
+"""RecSys architectures: DLRM (MLPerf), DIN, Wide&Deep, SASRec.
+
+All four share the sharded embedding substrate (embedding.py) — huge
+tables row-sharded over the whole mesh, tiny MLPs replicated, batch on
+DP.  Entry points per arch:
+
+  init(rng, cfg)                          -> params
+  loss_fn(params, batch, cfg, ctx)        -> scalar BCE loss
+  score_fn(params, batch, cfg, ctx)       -> (B,) logits  (serve_* cells)
+  retrieval_fn(params, batch, cfg, ctx)   -> (n_cand,) logits, user-side
+                                             compute hoisted out of the
+                                             candidate loop (two-tower-
+                                             ised; retrieval_cand cell)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Sequence, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import layers as L
+from .embedding import sharded_lookup
+
+# MLPerf DLRM (Criteo 1TB) vocabulary sizes, 26 sparse fields
+CRITEO_VOCABS = (
+    39884406, 39043, 17289, 7420, 20263, 3, 7120, 1543, 63, 38532951,
+    2953546, 403346, 10, 2208, 11938, 155, 4, 976, 14, 39979771,
+    25641295, 39664984, 585935, 12972, 108, 36,
+)
+
+
+@dataclass(frozen=True)
+class RecsysConfig:
+    name: str
+    kind: str  # dlrm | din | wide_deep | sasrec
+    embed_dim: int
+    vocab_sizes: tuple  # per sparse field (dense tables, row-sharded)
+    n_dense: int = 0
+    bot_mlp: tuple = ()
+    top_mlp: tuple = ()
+    attn_mlp: tuple = ()
+    seq_len: int = 0
+    n_blocks: int = 0
+    n_heads: int = 1
+    interaction: str = "dot"
+    lookup_mode: str = "a2a"  # §Perf iteration-C default; "allreduce" = baseline
+    dtype: str = "float32"
+
+    @property
+    def n_sparse(self) -> int:
+        return len(self.vocab_sizes)
+
+    @property
+    def total_rows(self) -> int:
+        return int(sum(self.vocab_sizes))
+
+
+def _mlp_init(key, sizes: Sequence[int], dtype):
+    params = []
+    ks = jax.random.split(key, len(sizes) - 1)
+    for i in range(len(sizes) - 1):
+        params.append(
+            {
+                "w": L.dense_init(ks[i], (sizes[i], sizes[i + 1]), dtype),
+                "b": jnp.zeros((sizes[i + 1],), dtype),
+            }
+        )
+    return params
+
+
+def _mlp_apply(params, x, final_act=False):
+    for i, lyr in enumerate(params):
+        x = x @ lyr["w"].astype(x.dtype) + lyr["b"].astype(x.dtype)
+        if i < len(params) - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+def _round_up(v, mult):
+    return ((v + mult - 1) // mult) * mult
+
+
+def init(rng, cfg: RecsysConfig, ctx=None):
+    dt = L.dtype_of(cfg.dtype)
+    keys = jax.random.split(rng, 8)
+    d = cfg.embed_dim
+    # one concatenated mega-table: field f's rows live at [offset_f, ...)
+    # (single row-sharded array shards far better than 26 ragged ones)
+    n_shards = 1
+    if ctx is not None:
+        for a in ctx.mesh.axis_names:
+            n_shards *= ctx.mesh.shape[a]
+    total = _round_up(int(sum(cfg.vocab_sizes)), max(n_shards, 1))
+    params = {
+        "embed": L.embed_init(keys[0], (total, d), dt, std=0.05),
+    }
+    if cfg.kind == "dlrm":
+        n_int = (cfg.n_sparse + 1) * cfg.n_sparse // 2
+        top_in = cfg.bot_mlp[-1] + n_int
+        params["bot"] = _mlp_init(keys[1], (cfg.n_dense,) + tuple(cfg.bot_mlp), dt)
+        params["top"] = _mlp_init(keys[2], (top_in,) + tuple(cfg.top_mlp), dt)
+    elif cfg.kind == "din":
+        att_in = 4 * d  # [target, hist, target-hist, target*hist]
+        params["attn"] = _mlp_init(keys[1], (att_in,) + tuple(cfg.attn_mlp) + (1,), dt)
+        mlp_in = 3 * d  # user interest + target + user profile
+        params["mlp"] = _mlp_init(keys[2], (mlp_in,) + tuple(cfg.top_mlp) + (1,), dt)
+    elif cfg.kind == "wide_deep":
+        deep_in = cfg.n_sparse * d
+        params["deep"] = _mlp_init(keys[1], (deep_in,) + tuple(cfg.top_mlp) + (1,), dt)
+        params["wide"] = L.embed_init(keys[2], (total, 1), dt, std=0.01)
+    elif cfg.kind == "sasrec":
+        params["pos"] = L.embed_init(keys[1], (cfg.seq_len, d), dt)
+        blocks = []
+        for i in range(cfg.n_blocks):
+            bk = jax.random.fold_in(keys[2], i)
+            bks = jax.random.split(bk, 4)
+            blocks.append(
+                {
+                    "ln1": jnp.ones((d,), dt),
+                    "ln2": jnp.ones((d,), dt),
+                    "wq": L.dense_init(bks[0], (d, d), dt),
+                    "wk": L.dense_init(bks[1], (d, d), dt),
+                    "wv": L.dense_init(bks[2], (d, d), dt),
+                    "w1": L.dense_init(bks[3], (d, d), dt),
+                    "w2": L.dense_init(jax.random.fold_in(bk, 9), (d, d), dt),
+                }
+            )
+        params["blocks"] = blocks
+        params["ln_f"] = jnp.ones((d,), dt)
+    else:
+        raise ValueError(cfg.kind)
+    return params
+
+
+def field_offsets(cfg: RecsysConfig) -> np.ndarray:
+    return np.concatenate([[0], np.cumsum(np.asarray(cfg.vocab_sizes))[:-1]]).astype(np.int64)
+
+
+def _lookup(params, sparse_ids, cfg, ctx):
+    """sparse_ids (B, F) local ids -> (B, F, D) via the mega-table."""
+    offs = jnp.asarray(field_offsets(cfg), dtype=sparse_ids.dtype)
+    rows = sparse_ids + offs[None, :]
+    return sharded_lookup(params["embed"], rows, ctx, mode=cfg.lookup_mode)
+
+
+# ---------------------------------------------------------------------------
+# DLRM
+# ---------------------------------------------------------------------------
+
+
+def _dlrm_features(params, dense, emb, cfg, ctx):
+    bot = _mlp_apply(params["bot"], dense, final_act=True)  # (B, D)
+    allv = jnp.concatenate([bot[:, None, :], emb], axis=1)  # (B, F+1, D)
+    inter = jnp.einsum("bfd,bgd->bfg", allv, allv)  # (B, F+1, F+1)
+    f = allv.shape[1]
+    iu, ju = jnp.triu_indices(f, k=1)
+    flat = inter[:, iu, ju]  # (B, F(F+1)/2)... upper triangle, no diag
+    return jnp.concatenate([bot, flat], axis=1)
+
+
+def dlrm_scores(params, batch, cfg, ctx):
+    emb = _lookup(params, batch["sparse"], cfg, ctx)
+    feats = _dlrm_features(params, batch["dense"], emb, cfg, ctx)
+    return _mlp_apply(params["top"], feats)[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# DIN — target attention over user history
+# ---------------------------------------------------------------------------
+
+
+def _din_interest(params, hist, target, cfg):
+    # hist (B, S, D); target (B, D)
+    b, s, d = hist.shape
+    t = jnp.broadcast_to(target[:, None, :], (b, s, d))
+    att_in = jnp.concatenate([t, hist, t - hist, t * hist], axis=-1)
+    w = _mlp_apply(params["attn"], att_in)[..., 0]  # (B, S) raw weights
+    w = jnp.where(jnp.sum(jnp.abs(hist), -1) > 0, w, -1e9)  # mask padding
+    w = jax.nn.softmax(w, axis=-1)
+    return jnp.einsum("bs,bsd->bd", w, hist)
+
+
+def din_scores(params, batch, cfg, ctx):
+    # fields: [target_item, user_profile] + history
+    emb = _lookup(params, batch["sparse"], cfg, ctx)  # (B, 2, D)
+    target, profile = emb[:, 0], emb[:, 1]
+    offs = jnp.asarray(field_offsets(cfg), dtype=batch["hist"].dtype)
+    hist_rows = batch["hist"] + offs[0]  # history shares the item table
+    hist = sharded_lookup(params["embed"], hist_rows, ctx, mode=cfg.lookup_mode)
+    interest = _din_interest(params, hist, target, cfg)
+    x = jnp.concatenate([interest, target, profile], axis=-1)
+    return _mlp_apply(params["mlp"], x)[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Wide & Deep
+# ---------------------------------------------------------------------------
+
+
+def wide_deep_scores(params, batch, cfg, ctx):
+    emb = _lookup(params, batch["sparse"], cfg, ctx)  # (B, F, D)
+    b = emb.shape[0]
+    deep = _mlp_apply(params["deep"], emb.reshape(b, -1))[:, 0]
+    offs = jnp.asarray(field_offsets(cfg), dtype=batch["sparse"].dtype)
+    rows = batch["sparse"] + offs[None, :]
+    wide = sharded_lookup(params["wide"], rows, ctx, mode=cfg.lookup_mode)
+    return deep + jnp.sum(wide[..., 0], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# SASRec — self-attentive sequential recommendation
+# ---------------------------------------------------------------------------
+
+
+def _sasrec_encode(params, seq_rows, cfg, ctx):
+    emb = sharded_lookup(params["embed"], seq_rows, ctx, mode=cfg.lookup_mode)
+    x = emb + params["pos"].astype(emb.dtype)[None]
+    b, s, d = x.shape
+    for blk in params["blocks"]:
+        h = L.rms_norm(x, blk["ln1"])
+        q = (h @ blk["wq"].astype(x.dtype)).reshape(b, s, cfg.n_heads, d // cfg.n_heads)
+        k = (h @ blk["wk"].astype(x.dtype)).reshape(b, s, cfg.n_heads, d // cfg.n_heads)
+        v = (h @ blk["wv"].astype(x.dtype)).reshape(b, s, cfg.n_heads, d // cfg.n_heads)
+        o = L.causal_attention(q, k, v, q_chunk=s, ctx=ctx).reshape(b, s, d)
+        x = x + o
+        h = L.rms_norm(x, blk["ln2"])
+        x = x + jax.nn.relu(h @ blk["w1"].astype(x.dtype)) @ blk["w2"].astype(x.dtype)
+    return L.rms_norm(x, params["ln_f"])
+
+
+def sasrec_scores(params, batch, cfg, ctx):
+    """Score target item against the sequence-final user state."""
+    enc = _sasrec_encode(params, batch["seq"], cfg, ctx)  # (B, S, D)
+    user = enc[:, -1]  # (B, D)
+    target = sharded_lookup(
+        params["embed"], batch["target"][:, None], ctx, mode=cfg.lookup_mode
+    )[:, 0]
+    return jnp.sum(user * target, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Unified entry points
+# ---------------------------------------------------------------------------
+
+_SCORERS = {
+    "dlrm": dlrm_scores,
+    "din": din_scores,
+    "wide_deep": wide_deep_scores,
+    "sasrec": sasrec_scores,
+}
+
+
+def score_fn(params, batch, cfg: RecsysConfig, ctx):
+    return _SCORERS[cfg.kind](params, batch, cfg, ctx)
+
+
+def loss_fn(params, batch, cfg: RecsysConfig, ctx):
+    logits = score_fn(params, batch, cfg, ctx)
+    y = batch["label"].astype(jnp.float32)
+    z = logits.astype(jnp.float32)
+    # numerically-stable BCE with logits
+    loss = jnp.maximum(z, 0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z)))
+    return jnp.mean(loss)
+
+
+def retrieval_fn(params, batch, cfg: RecsysConfig, ctx):
+    """Score 1 user context against n_candidates items, user-side hoisted."""
+    cands = batch["candidates"]  # (N,) item ids
+    if cfg.kind == "sasrec":
+        enc = _sasrec_encode(params, batch["seq"], cfg, ctx)
+        user = enc[0, -1]  # (D,)
+        cvecs = sharded_lookup(params["embed"], cands[None, :], ctx, cfg.lookup_mode)[0]
+        cvecs = ctx.constrain(cvecs, "dp", None)
+        return ctx.constrain(cvecs @ user, "dp")
+    if cfg.kind == "din":
+        hist = sharded_lookup(
+            params["embed"], batch["hist"], ctx, mode=cfg.lookup_mode
+        )  # (1, S, D)
+        profile = sharded_lookup(
+            params["embed"], batch["sparse"][:, 1:2], ctx, mode=cfg.lookup_mode
+        )[:, 0]
+        cvecs = sharded_lookup(params["embed"], cands[None, :], ctx, cfg.lookup_mode)[0]
+        cvecs = ctx.constrain(cvecs, "dp", None)
+
+        def score_chunk(tgt):  # vectorised over candidates
+            b = tgt.shape[0]
+            h = jnp.broadcast_to(hist, (b,) + hist.shape[1:])
+            interest = _din_interest(params, h, tgt, cfg)
+            p = jnp.broadcast_to(profile, (b, profile.shape[-1]))
+            x = ctx.constrain(jnp.concatenate([interest, tgt, p], axis=-1), "dp", None)
+            return _mlp_apply(params["mlp"], x)[:, 0]
+
+        return ctx.constrain(score_chunk(cvecs), "dp")
+    # dlrm / wide_deep: vary one item field over candidates
+    n = cands.shape[0]
+    sparse = jnp.broadcast_to(batch["sparse"], (n, cfg.n_sparse)).at[:, 0].set(cands)
+    sparse = ctx.constrain(sparse, "dp", None)
+    b2 = {"sparse": sparse}
+    if cfg.kind == "dlrm":
+        b2["dense"] = jnp.broadcast_to(batch["dense"], (n, cfg.n_dense))
+    return score_fn(params, b2, cfg, ctx)

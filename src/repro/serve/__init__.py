@@ -1,0 +1,4 @@
+"""Serving substrate: continuous-batching decode engine + paged KV cache
+with learned-index page table."""
+
+from . import engine, kvcache

@@ -1,0 +1,91 @@
+"""Paged KV cache with a learned-index page table.
+
+Pages of ``page_size`` tokens are allocated from a global pool; each
+sequence owns an ordered list of pages.  Mapping a global token position
+to (page, offset) is predecessor search over the sequence's sorted page-
+start table — the paper's technique on the serving hot path (DESIGN.md
+§3, integration point 5).  For the contiguous fast path used by the
+decode benchmarks, :class:`ContiguousCache` wraps the plain (B, S, H, D)
+layout that the Pallas flash-decode kernel consumes.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.pgm import build_pgm
+
+
+@dataclass
+class ContiguousCache:
+    k: jnp.ndarray  # (L, B, S, Hkv, D)
+    v: jnp.ndarray
+    length: int = 0
+
+    @staticmethod
+    def init(n_layers, batch, max_seq, n_kv, head_dim, dtype=jnp.bfloat16):
+        shape = (n_layers, batch, max_seq, n_kv, head_dim)
+        return ContiguousCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype), 0)
+
+
+class PagedPool:
+    """Host-side page allocator + device page store.
+
+    The device store is (n_pages, L, page, Hkv, D) per k/v; sequences
+    hold page id lists.  ``position_lookup`` builds/uses a PGM index
+    over each sequence's page-start offsets.
+    """
+
+    def __init__(self, n_pages, n_layers, page_size, n_kv, head_dim, dtype=jnp.bfloat16):
+        self.page_size = page_size
+        shape = (n_pages, n_layers, page_size, n_kv, head_dim)
+        self.k = jnp.zeros(shape, dtype)
+        self.v = jnp.zeros(shape, dtype)
+        self.free = list(range(n_pages))[::-1]
+        self.seq_pages: dict = {}
+        self.seq_len: dict = {}
+        self._pgm: dict = {}
+
+    def add_sequence(self, seq_id: int):
+        self.seq_pages[seq_id] = []
+        self.seq_len[seq_id] = 0
+
+    def release(self, seq_id: int):
+        self.free.extend(self.seq_pages.pop(seq_id, []))
+        self.seq_len.pop(seq_id, None)
+        self._pgm.pop(seq_id, None)
+
+    def ensure_capacity(self, seq_id: int, new_len: int):
+        pages = self.seq_pages[seq_id]
+        while len(pages) * self.page_size < new_len:
+            if not self.free:
+                raise MemoryError("KV pool exhausted")
+            pages.append(self.free.pop())
+        self.seq_len[seq_id] = new_len
+        self._pgm.pop(seq_id, None)  # page table changed -> rebuild index
+
+    def page_starts(self, seq_id: int) -> np.ndarray:
+        n = len(self.seq_pages[seq_id])
+        return (np.arange(n, dtype=np.uint64) * self.page_size).astype(np.uint64)
+
+    def position_lookup(self, seq_id: int, positions: np.ndarray):
+        """global position -> (page_id, offset) via learned predecessor
+        search over the page-start table."""
+        starts = self.page_starts(seq_id)
+        if seq_id not in self._pgm:
+            self._pgm[seq_id] = build_pgm(starts, eps=4)
+        pgm = self._pgm[seq_id]
+        q = jnp.asarray(np.asarray(positions, dtype=np.uint64))
+        idx = pgm.predecessor(jnp.asarray(starts), q)
+        pages = jnp.asarray(np.asarray(self.seq_pages[seq_id], dtype=np.int64))
+        page_id = jnp.take(pages, jnp.maximum(idx, 0))
+        offset = q.astype(jnp.int64) - jnp.maximum(idx, 0) * self.page_size
+        return page_id, offset
+
+    def utilization(self) -> float:
+        total = len(self.free) + sum(len(p) for p in self.seq_pages.values())
+        return 1.0 - len(self.free) / max(total, 1)

@@ -1,0 +1,6 @@
+"""Training substrate: optimizers (from scratch), schedules, generic
+train step (grad compression + clipping + accumulation), sharded
+checkpointing with elastic restore, fault-tolerant loop."""
+
+from . import checkpoint, loop, optimizer, schedule, step
+from .step import TrainConfig, init_train_state, make_train_step

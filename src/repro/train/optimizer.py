@@ -1,0 +1,150 @@
+"""Optimizers from scratch (no optax): AdamW and Adafactor.
+
+Moments are f32 regardless of param dtype and shard exactly like the
+parameters (ZeRO-3 equivalent under the FSDP rules).  The API mirrors
+the (init, update) pair convention so the train step stays generic.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+
+
+def adamw_init(params):
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": zeros,
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+    }
+
+
+def adamw_update(grads, state, params, cfg: AdamWConfig, lr_scale=1.0):
+    step = state["step"] + 1
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m_n = b1 * m + (1 - b1) * g32
+        v_n = b2 * v + (1 - b2) * g32 * g32
+        mh = m_n / bc1
+        vh = v_n / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        p_n = p.astype(jnp.float32) - lr * delta
+        return m_n, v_n, p_n.astype(p.dtype)
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_m = jax.tree_util.tree_leaves(state["m"])
+    flat_v = jax.tree_util.tree_leaves(state["v"])
+    flat_p = jax.tree_util.tree_leaves(params)
+    ms, vs, ps = [], [], []
+    for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p):
+        m_n, v_n, p_n = upd(g, m, v, p)
+        ms.append(m_n)
+        vs.append(v_n)
+        ps.append(p_n)
+    unf = partial(jax.tree_util.tree_unflatten, tdef)
+    return unf(ps), {"step": step, "m": unf(ms), "v": unf(vs)}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment — the memory-lean option at scale)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class AdafactorConfig:
+    lr: float = 1e-3
+    decay: float = 0.8
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+
+
+def _factored(shape):
+    return len(shape) >= 2
+
+
+def adafactor_init(params):
+    def one(p):
+        if _factored(p.shape):
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {"step": jnp.zeros((), jnp.int32), "v": jax.tree.map(one, params,
+            is_leaf=lambda x: hasattr(x, "shape"))}
+
+
+def adafactor_update(grads, state, params, cfg: AdafactorConfig, lr_scale=1.0):
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    beta = 1.0 - t ** (-cfg.decay)
+    lr = cfg.lr * lr_scale
+
+    def upd(g, v, p):
+        g32 = g.astype(jnp.float32)
+        g2 = g32 * g32 + cfg.eps
+        if _factored(p.shape):
+            vr = beta * v["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+            vc = beta * v["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+            rfac = vr / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), cfg.eps)
+            u = g32 / (jnp.sqrt(rfac)[..., None] * jnp.sqrt(vc)[..., None, :] + cfg.eps)
+            v_n = {"vr": vr, "vc": vc}
+        else:
+            vn = beta * v["v"] + (1 - beta) * g2
+            u = g32 / (jnp.sqrt(vn) + cfg.eps)
+            v_n = {"v": vn}
+        rms = jnp.sqrt(jnp.mean(u * u) + cfg.eps)
+        u = u / jnp.maximum(1.0, rms / cfg.clip_threshold)
+        return v_n, (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    is_leaf = lambda x: hasattr(x, "shape")
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_v = state["v"]
+    # walk the v-tree in the same flattened order
+    flat_vs = jax.tree_util.tree_flatten(flat_v, is_leaf=lambda x: isinstance(x, dict) and ("v" in x or "vr" in x))[0]
+    flat_p = jax.tree_util.tree_leaves(params)
+    vs, ps = [], []
+    for g, v, p in zip(flat_g, flat_vs, flat_p):
+        v_n, p_n = upd(g, v, p)
+        vs.append(v_n)
+        ps.append(p_n)
+    unf = partial(jax.tree_util.tree_unflatten, tdef)
+    return unf(ps), {"step": step, "v": unf(vs)}
+
+
+def sgd_init(params):
+    return {"step": jnp.zeros((), jnp.int32)}
+
+
+def sgd_update(grads, state, params, lr: float = 1e-2, lr_scale=1.0):
+    ps = jax.tree.map(
+        lambda p, g: (p.astype(jnp.float32) - lr * lr_scale * g.astype(jnp.float32)).astype(p.dtype),
+        params,
+        grads,
+    )
+    return ps, {"step": state["step"] + 1}
+
+
+OPTIMIZERS = {
+    "adamw": (adamw_init, adamw_update, AdamWConfig),
+    "adafactor": (adafactor_init, adafactor_update, AdafactorConfig),
+}

@@ -1,0 +1,26 @@
+"""LR schedules (pure functions of the step counter)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, warmup: int = 100, total: int = 10_000, floor: float = 0.1):
+    # step+1: the first optimizer step must not be a zero-LR no-op
+    s = (step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)) + 1.0
+    w = jnp.minimum(s / max(warmup, 1), 1.0)
+    t = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return w * cos
+
+
+def constant(step, **_):
+    return jnp.float32(1.0)
+
+
+def inv_sqrt(step, *, warmup: int = 100, **_):
+    s = jnp.maximum(step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step), 1.0)
+    return jnp.minimum(s / max(warmup, 1), jnp.sqrt(jnp.float32(max(warmup, 1)) / s))
+
+
+SCHEDULES = {"warmup_cosine": warmup_cosine, "constant": constant, "inv_sqrt": inv_sqrt}

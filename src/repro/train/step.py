@@ -1,0 +1,109 @@
+"""Generic train step: loss -> grads -> (compression) -> clip -> update.
+
+The step is family-agnostic: a ``loss_fn(params, batch)`` closure comes
+from the model zoo, the optimizer from optimizer.py, compression from
+dist.collectives.  Microbatch gradient accumulation loops inside the
+step with ``lax.scan`` so HLO stays compact and the accumulated grads
+live in f32.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import collectives
+from . import optimizer as opt
+from . import schedule as sched
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    optimizer: str = "adamw"
+    lr: float = 3e-4
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    schedule: str = "warmup_cosine"
+    warmup: int = 100
+    total_steps: int = 10_000
+    grad_compression: str = "none"  # none | bf16 | int8
+    microbatches: int = 1
+
+
+def global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda l: (l.astype(jnp.float32) * scale).astype(l.dtype), tree), norm
+
+
+def init_train_state(rng, init_fn, tcfg: TrainConfig):
+    params = init_fn(rng)
+    init, _, occfg = opt.OPTIMIZERS[tcfg.optimizer]
+    state = {
+        "params": params,
+        "opt": init(params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if tcfg.grad_compression != "none":
+        state["comp_err"] = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+    return state
+
+
+def make_train_step(loss_fn, tcfg: TrainConfig):
+    """loss_fn(params, batch) -> scalar.  Returns step(state, batch)."""
+    _, update, occls = opt.OPTIMIZERS[tcfg.optimizer]
+    ocfg = occls(lr=tcfg.lr)
+    if tcfg.optimizer == "adamw":
+        ocfg = opt.AdamWConfig(lr=tcfg.lr, weight_decay=tcfg.weight_decay)
+    schedule = partial(
+        sched.SCHEDULES[tcfg.schedule], warmup=tcfg.warmup, total=tcfg.total_steps
+    )
+
+    def grads_of(params, batch):
+        if tcfg.microbatches <= 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+
+        def micro(carry, mb):
+            acc, _ = carry
+            l, g = jax.value_and_grad(loss_fn)(params, mb)
+            acc = jax.tree.map(lambda a, x: a + x.astype(jnp.float32), acc, g)
+            return (acc, l), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        mbs = jax.tree.map(
+            lambda x: x.reshape(tcfg.microbatches, -1, *x.shape[1:]), batch
+        )
+        (acc, last_l), _ = jax.lax.scan(micro, (zeros, jnp.float32(0)), mbs)
+        n = jnp.float32(tcfg.microbatches)
+        return last_l, jax.tree.map(lambda g: g / n, acc)
+
+    def step(state, batch):
+        loss, grads = grads_of(state["params"], batch)
+        if tcfg.grad_compression != "none":
+            grads, new_err = collectives.apply_grad_compression(
+                grads, state["comp_err"], tcfg.grad_compression
+            )
+        grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
+        lr_scale = schedule(state["step"])
+        new_params, new_opt = update(grads, state["opt"], state["params"], ocfg, lr_scale)
+        out = {
+            "params": new_params,
+            "opt": new_opt,
+            "step": state["step"] + 1,
+        }
+        if tcfg.grad_compression != "none":
+            out["comp_err"] = new_err
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr_scale": lr_scale}
+        return out, metrics
+
+    return step

@@ -1,0 +1,40 @@
+import numpy as np
+import pytest
+
+import repro  # noqa: F401  — enables x64 before any test imports jax
+
+from repro.core import as_table
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(1234)
+
+
+def make_table(rng, kind: str, n: int) -> np.ndarray:
+    if kind == "uniform":
+        return as_table(rng.integers(0, 2**63, size=n, dtype=np.uint64))
+    if kind == "lognormal":
+        return as_table(np.exp(rng.normal(20, 2, size=n)).astype(np.uint64))
+    if kind == "clustered":
+        c = rng.integers(0, 2**60, size=max(4, n // 500), dtype=np.uint64)
+        return as_table(c[rng.integers(0, len(c), n)] + rng.integers(0, 2**30, n).astype(np.uint64))
+    if kind == "bursty":
+        g = rng.exponential(100, size=n) * (1 + 50 * (rng.random(n) < 0.01))
+        return as_table(np.cumsum(g).astype(np.uint64) + 10**15)
+    if kind == "sequential":
+        return as_table(np.arange(n, dtype=np.uint64) * 7 + 3)
+    raise ValueError(kind)
+
+
+TABLE_KINDS = ("uniform", "lognormal", "clustered", "bursty", "sequential")
+
+
+def make_queries(rng, table: np.ndarray, n: int) -> np.ndarray:
+    extremes = np.array(
+        [0, table.min(), table.max(), np.iinfo(np.uint64).max], dtype=np.uint64
+    )
+    mix = [rng.choice(table, size=n // 2)]
+    if len(table) > 1:
+        mix.append(rng.integers(table.min(), table.max(), size=n // 2, dtype=np.uint64))
+    return np.concatenate(mix + [extremes]).astype(np.uint64)

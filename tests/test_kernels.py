@@ -1,0 +1,86 @@
+"""Pallas kernel sweeps: shapes/dtypes vs the pure-jnp oracles (ref.py).
+
+Search kernels assert exact integer equality; float kernels use
+tolerances calibrated to f32 reduction error.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import as_table, true_ranks
+from repro.core.rmi import build_rmi
+from repro.kernels import ops, ref
+
+from conftest import make_table
+
+
+@pytest.mark.parametrize("kind", ["uniform", "clustered", "bursty"])
+@pytest.mark.parametrize("n", [64, 1000, 65536])
+def test_fused_rmi_kernel(rng, kind, n):
+    table = make_table(rng, kind, n)
+    qs = np.concatenate(
+        [rng.choice(table, 300), rng.integers(0, 2**64 - 1, 100, dtype=np.uint64),
+         np.array([0, table.min(), table.max(), 2**64 - 1], dtype=np.uint64)]
+    ).astype(np.uint64)
+    want = true_ranks(table, qs)
+    m = build_rmi(table, b=max(2, min(256, n // 4)), root_type="linear")
+    kidx = ops.prepare_rmi_kernel_index(m, table)
+    got = np.asarray(ops.fused_rmi_search(kidx, qs, tile_q=128))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("k", [8, 128])
+@pytest.mark.parametrize("n", [50, 4096, 100_000])
+def test_kary_kernel(rng, k, n):
+    table = make_table(rng, "lognormal", n)
+    qs = np.concatenate(
+        [rng.choice(table, 200), np.array([0, 2**64 - 1], dtype=np.uint64)]
+    ).astype(np.uint64)
+    want = true_ranks(table, qs)
+    got = np.asarray(ops.kary_search(table, qs, k=k, tile_q=128))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("v,d,n_items,bags,vtile", [
+    (100, 8, 50, 4, 32),
+    (1000, 64, 300, 16, 512),
+    (513, 32, 128, 8, 128),
+])
+def test_embedding_bag_kernel(rng, v, d, n_items, bags, vtile):
+    table = rng.normal(size=(v, d)).astype(np.float32)
+    ids = rng.integers(0, v, n_items).astype(np.int32)
+    seg = np.sort(rng.integers(0, bags, n_items)).astype(np.int32)
+    w = rng.normal(size=n_items).astype(np.float32)
+    got = np.asarray(ops.embedding_bag(table, ids, seg, w, num_bags=bags, v_tile=vtile))
+    want = np.asarray(
+        ref.embedding_bag_ref(jnp.asarray(table), jnp.asarray(ids), jnp.asarray(seg), jnp.asarray(w), bags)
+    )
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("b,hq,hkv,d,s,stile", [
+    (2, 4, 4, 16, 64, 32),    # MHA
+    (3, 8, 2, 32, 300, 128),  # GQA, ragged lengths, padded tiles
+    (1, 16, 1, 64, 512, 256), # MQA
+])
+def test_decode_attention_kernel(rng, b, hq, hkv, d, s, stile):
+    q = rng.normal(size=(b, hq, d)).astype(np.float32)
+    k = rng.normal(size=(b, s, hkv, d)).astype(np.float32)
+    v = rng.normal(size=(b, s, hkv, d)).astype(np.float32)
+    kvl = rng.integers(1, s + 1, size=b).astype(np.int32)
+    got = np.asarray(ops.decode_attention(q, k, v, kvl, s_tile=stile))
+    want = np.asarray(
+        ref.decode_attention_ref(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), jnp.asarray(kvl))
+    )
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+def test_rmi_kernel_f32_widening(rng):
+    """The kernel's f32 eps must be >= the f64 model's (safety margin)."""
+    table = make_table(rng, "clustered", 20000)
+    m = build_rmi(table, b=128)
+    kidx = ops.prepare_rmi_kernel_index(m, table)
+    assert int(jnp.max(kidx.leaf_eps)) >= 1
+    # windows clamp within leaf rank ranges
+    assert (np.asarray(kidx.leaf_rlo) <= np.asarray(kidx.leaf_rhi)).all()

@@ -1,0 +1,89 @@
+"""Every model class in the paper's hierarchy returns exact predecessor
+ranks on every table family, and space accounting is sane (paper §3.2)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import build_index, model_reduction_factor
+from repro.core.cdf import true_ranks
+
+from conftest import TABLE_KINDS, make_table, make_queries
+
+CASES = [
+    ("L", {}),
+    ("Q", {}),
+    ("C", {}),
+    ("KO", {"k": 15}),
+    ("KO", {"k": 3}),
+    ("RMI", {"b": 64, "root_type": "linear"}),
+    ("RMI", {"b": 256, "root_type": "cubic"}),
+    ("RMI", {"b": 256, "root_type": "spline"}),
+    ("PGM", {"eps": 16}),
+    ("PGM", {"eps": 128}),
+    ("PGM_M", {"space_pct": 2.0, "a": 1.0}),
+    ("RS", {"eps": 16, "r_bits": 10}),
+    ("BTREE", {"fanout": 16}),
+    ("SY-RMI", {"space_pct": 2.0, "ub": 0.04}),
+]
+
+
+@pytest.mark.parametrize("kind,params", CASES, ids=[f"{k}-{i}" for i, (k, _) in enumerate(CASES)])
+@pytest.mark.parametrize("table_kind", TABLE_KINDS)
+def test_exact_predecessor(rng, kind, params, table_kind):
+    table = make_table(rng, table_kind, 5000)
+    qs = make_queries(rng, table, 300)
+    want = true_ranks(table, qs)
+    m = build_index(kind, table, **params)
+    got = np.asarray(m.predecessor(jnp.asarray(table), jnp.asarray(qs)))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_space_hierarchy(rng):
+    """Constant-space models stay constant; parametric models scale."""
+    small = make_table(rng, "uniform", 1000)
+    big = make_table(rng, "uniform", 30000)
+    for kind in ("L", "Q", "C"):
+        assert build_index(kind, small).space_bytes() == build_index(kind, big).space_bytes()
+    ko_s, ko_b = build_index("KO", small, k=15), build_index("KO", big, k=15)
+    assert ko_s.space_bytes() == ko_b.space_bytes()  # constant in n for fixed k
+    rmi_64 = build_index("RMI", big, b=64)
+    rmi_1k = build_index("RMI", big, b=1024)
+    assert rmi_1k.space_bytes() > rmi_64.space_bytes()
+
+
+def test_pgm_eps_space_tradeoff(rng):
+    table = make_table(rng, "clustered", 30000)
+    small_eps = build_index("PGM", table, eps=8)
+    big_eps = build_index("PGM", table, eps=256)
+    assert small_eps.space_bytes() > big_eps.space_bytes()
+    assert small_eps.n_segments_l0 > big_eps.n_segments_l0
+
+
+def test_pgm_bicriteria_budget(rng):
+    table = make_table(rng, "bursty", 30000)
+    budget = int(0.02 * len(table) * 8)
+    m = build_index("PGM_M", table, space_budget_bytes=budget, a=1.0)
+    assert m.space_bytes() <= budget or m.eps >= len(table) // 2
+
+
+def test_reduction_factor_ordering(rng):
+    """Better (smaller-eps) models discard more of the table (paper §2)."""
+    table = make_table(rng, "lognormal", 20000)
+    qs = make_queries(rng, table, 500)
+    rf_l = model_reduction_factor(build_index("L", table), table, qs)
+    rf_pgm = model_reduction_factor(build_index("PGM", table, eps=16), table, qs)
+    assert rf_pgm > rf_l
+    assert rf_pgm > 99.0
+
+
+def test_sy_rmi_mining(rng):
+    from repro.core.sy_rmi import mine_sy_rmi, build_sy_rmi
+
+    tables = [make_table(rng, k, 4000) for k in ("uniform", "lognormal")]
+    res = mine_sy_rmi(tables, n_queries=2000, max_models=4)
+    assert res.ub > 0
+    assert res.winner_root in ("linear", "cubic", "spline")
+    m = build_sy_rmi(tables[0], space_pct=2.0, ub=res.ub, winner_root=res.winner_root)
+    budget = 0.02 * len(tables[0]) * 8
+    assert m.space_bytes() < 12 * budget  # same order as the budget

