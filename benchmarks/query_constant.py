@@ -4,15 +4,19 @@ Search procedures.
 Grid per (dataset x tier): procedures {BFS, BBS, BFE, K-BFS(6), IBS} with
 no model, then models {L, Q, C, KO(15)} with branch-free and branchy
 epilogues.  Reports avg query time and the model's reduction factor.
+
+Models go through the unified ``repro.index`` API: the branch-free and
+branchy epilogues are the ``xla`` / ``bbs`` backends of the one shared
+jitted lookup, not per-model jit closures.
 """
 
 from __future__ import annotations
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import build_index, model_reduction_factor, search
+from repro import index as ix
+from repro.core import model_reduction_factor, search
 
 from .common import bench_tables, emit, queries_for, time_fn
 
@@ -42,22 +46,20 @@ def run(tiers=None, datasets=None):
         emit(f"query_const/{bt.name}/BFE", dt / nq * 1e6, "rf=0")
         results.append((bt.name, "BFE", dt / nq))
 
-        # --- learned constant-space models ---
-        for kind, params, label in [
-            ("L", {}, "L"),
-            ("Q", {}, "Q"),
-            ("C", {}, "C"),
-            ("KO", {"k": 15}, "15O"),
+        # --- learned constant-space models (unified Index API) ---
+        for spec, label in [
+            (ix.AtomicSpec(degree=1), "L"),
+            (ix.AtomicSpec(degree=2), "Q"),
+            (ix.AtomicSpec(degree=3), "C"),
+            (ix.KOSpec(k=15), "15O"),
         ]:
-            m = build_index(kind, table, **params)
+            m = ix.build(spec, table)
             rf = model_reduction_factor(m, table, qs[:2000])
-            fn_bf = jax.jit(lambda t, q: m.predecessor(t, q))
-            dt = time_fn(fn_bf, tj, qj)
+            dt = time_fn(lambda t, q: m.lookup(t, q), tj, qj)
             emit(f"query_const/{bt.name}/{label}-BFS", dt / nq * 1e6, f"rf={rf:.2f}")
             results.append((bt.name, f"{label}-BFS", dt / nq))
-            if kind == "KO":  # branchy epilogue variant (paper's KO-BBS)
-                fn_bb = jax.jit(lambda t, q: m.predecessor(t, q, branchy=True))
-                dt = time_fn(fn_bb, tj, qj)
+            if isinstance(spec, ix.KOSpec):  # branchy epilogue (paper's KO-BBS)
+                dt = time_fn(lambda t, q: m.lookup(t, q, backend="bbs"), tj, qj)
                 emit(f"query_const/{bt.name}/{label}-BBS", dt / nq * 1e6, f"rf={rf:.2f}")
                 results.append((bt.name, f"{label}-BBS", dt / nq))
     return results

@@ -3,16 +3,24 @@
 Per (dataset x tier): SY-RMI and bi-criteria PGM_M at 0.05% / 0.7% / 2%
 space budgets, plus best-under-10% RMI / PGM / RS / B+-tree, with BBS and
 BFS baselines — query time vs model space.
+
+Migrated to the unified ``repro.index`` API: every model is built from a
+spec and queried through the **shared jitted lookup** — the index is a
+pytree argument, not a closure constant, so compiles scale with the
+number of *kinds* (plus distinct array structures), not the number of
+models.  The old API paid one ``jax.jit`` trace per model; the per-kind
+trace counts are reported at the end of the run.
 """
 
 from __future__ import annotations
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import build_index, search
-from repro.core.sy_rmi import cdfshop_sweep, mine_ub, build_sy_rmi
+from repro import index as ix
+from repro.core import search
+from repro.core.sy_rmi import cdfshop_sweep, mine_ub
+from repro.index import impls
 
 from .common import bench_tables, emit, queries_for, time_fn
 
@@ -21,6 +29,8 @@ SPACE_PCTS = (0.05, 0.7, 2.0)
 
 def run(tiers=None, datasets=None):
     results = []
+    ix.reset_trace_counts()
+    n_models = 0
     for bt in bench_tables(datasets=datasets or ("amzn64", "osm"), tiers=tiers):
         table = bt.table
         n = len(table)
@@ -40,23 +50,36 @@ def run(tiers=None, datasets=None):
         sweep = cdfshop_sweep(table, max_models=6)
         ub = mine_ub(sweep)
 
-        models = []
+        specs = []
         for pct in SPACE_PCTS:
-            models.append((f"SY-RMI{pct}%", build_sy_rmi(table, pct, ub)))
+            specs.append((f"SY-RMI{pct}%", ix.SYRMISpec(space_pct=pct, ub=ub)))
             budget = int(pct / 100 * table_bytes)
-            models.append((f"PGM_M{pct}%", build_index("PGM_M", table, space_budget_bytes=budget)))
-        # best-under-10% from the sweep + classic indexes
+            specs.append((f"PGM_M{pct}%", ix.PGMBicriteriaSpec(space_budget_bytes=budget)))
+        specs.append(("RS", ix.RSSpec(eps=64, r_bits=10)))
+        specs.append(("BTree", ix.BTreeSpec(fanout=16)))
+        models = [(label, ix.build(spec, table)) for label, spec in specs]
+        # best-under-10% from the sweep: wrap the already-fitted model
+        # instead of refitting it from a spec
         under10 = [m for m in sweep if m.space_bytes() <= 0.1 * table_bytes]
         if under10:
             best = min(under10, key=lambda m: m.max_eps)
-            models.append(("RMI<=10%", best))
-        models.append(("RS", build_index("RS", table, eps=64, r_bits=10)))
-        models.append(("BTree", build_index("BTREE", table, fanout=16)))
+            models.append(("RMI<=10%", impls.rmi_model_to_index("RMI", best, table)))
 
         for label, m in models:
-            fn = jax.jit(lambda t, q, m=m: m.predecessor(t, q))
-            dt = time_fn(fn, tj, qj)
+            n_models += 1
+            dt = time_fn(lambda t, q: m.lookup(t, q), tj, qj)
             pct = 100.0 * m.space_bytes() / table_bytes
             emit(f"query_param/{bt.name}/{label}", dt / nq * 1e6, f"space={pct:.4f}%")
             results.append((bt.name, label, dt / nq, pct))
+
+    traces = ix.trace_counts()
+    n_traces = sum(traces.values())
+    per_kind = {}
+    for (k, _), v in sorted(traces.items()):
+        per_kind[k] = per_kind.get(k, 0) + v
+    emit("query_param/compiles", n_traces, f"models={n_models};per_kind={per_kind}")
+    print(
+        f"# shared jitted lookup: {n_models} models -> {n_traces} traces "
+        f"across {len(traces)} (kind, backend) entries"
+    )
     return results

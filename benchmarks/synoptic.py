@@ -1,14 +1,20 @@
 """Paper Supplementary Table 6: synoptic space / time / reduction-factor
-table, normalised against the best query-time model per tier."""
+table, normalised against the best query-time model per tier.
+
+All models are built from ``repro.index`` specs and queried through the
+shared jitted lookup; across a tier's tables, same-structure models of a
+kind reuse one trace instead of recompiling per model.
+"""
 
 from __future__ import annotations
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
-from repro.core import build_index, model_reduction_factor
-from repro.core.sy_rmi import cdfshop_sweep, mine_ub, build_sy_rmi
+from repro import index as ix
+from repro.core import model_reduction_factor
+from repro.core.sy_rmi import cdfshop_sweep, mine_ub
+from repro.index import impls
 
 from .common import TIERS, bench_tables, emit, queries_for, time_fn
 
@@ -23,16 +29,19 @@ def run():
             tj, qj = jnp.asarray(table), jnp.asarray(qs)
             sweep = cdfshop_sweep(table, max_models=4)
             ub = mine_ub(sweep)
-            models = [("BestRMI", min(sweep, key=lambda m: m.max_eps))]
+            best_rmi = min(sweep, key=lambda m: m.max_eps)
+            specs = []
             for pct in (0.05, 0.7, 2.0):
-                models.append((f"SY-RMI{pct}", build_sy_rmi(table, pct, ub)))
+                specs.append((f"SY-RMI{pct}", ix.SYRMISpec(space_pct=pct, ub=ub)))
                 budget = int(pct / 100 * len(table) * 8)
-                models.append((f"PGM{pct}", build_index("PGM_M", table, space_budget_bytes=budget)))
-            models.append(("RS", build_index("RS", table, eps=64)))
-            models.append(("BTree", build_index("BTREE", table, fanout=16)))
+                specs.append((f"PGM{pct}", ix.PGMBicriteriaSpec(space_budget_bytes=budget)))
+            specs.append(("RS", ix.RSSpec(eps=64)))
+            specs.append(("BTree", ix.BTreeSpec(fanout=16)))
+            # wrap the sweep's already-fitted winner instead of refitting it
+            models = [("BestRMI", impls.rmi_model_to_index("RMI", best_rmi, table))]
+            models += [(label, ix.build(spec, table)) for label, spec in specs]
             for label, m in models:
-                fn = jax.jit(lambda t, q, m=m: m.predecessor(t, q))
-                dt = time_fn(fn, tj, qj, reps=2) / len(qs)
+                dt = time_fn(lambda t, q: m.lookup(t, q), tj, qj, reps=2) / len(qs)
                 rf = model_reduction_factor(m, table, qs[:2000])
                 agg.setdefault(label, []).append((dt, m.space_bytes(), rf))
 

@@ -1,19 +1,40 @@
 """Quickstart: build every learned index in the paper's hierarchy over a
-synthetic SOSD-style table, query it, and print the time-space-accuracy
-trade-off (the paper's core experiment in miniature).
+synthetic SOSD-style table through the unified ``repro.index`` API,
+query it, and print the time-space-accuracy trade-off (the paper's core
+experiment in miniature).
+
+Each index is a JAX pytree of flat arrays built from a hashable spec;
+all instances of a kind share ONE jitted lookup (watch the trace count
+at the bottom), and every index round-trips through ``save``/``load``.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
+import os
+import tempfile
 import time
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
 import repro  # noqa: F401
-from repro.core import KINDS, build_index, model_reduction_factor, true_ranks
+from repro import index as ix
+from repro.core import model_reduction_factor, true_ranks
 from repro.data import distributions, tables
+
+
+SPECS = [
+    ix.AtomicSpec(degree=1),
+    ix.AtomicSpec(degree=2),
+    ix.AtomicSpec(degree=3),
+    ix.KOSpec(k=15),
+    ix.RMISpec(b=2048, root_type="linear"),
+    ix.SYRMISpec(space_pct=2.0, ub=0.05),
+    ix.PGMSpec(eps=64),
+    ix.PGMBicriteriaSpec(space_pct=0.05, a=1.0),
+    ix.RSSpec(eps=32),
+    ix.BTreeSpec(fanout=16),
+]
 
 
 def main():
@@ -22,34 +43,34 @@ def main():
     tj, qj = jnp.asarray(table), jnp.asarray(queries)
     want = true_ranks(table, queries)
 
+    assert tuple(s.kind for s in SPECS) == ix.kinds(), "quickstart covers the registry"
+    ix.reset_trace_counts()
+
     print(f"table: osm-like, {len(table):,} uint64 keys; {len(queries):,} queries\n")
     print(f"{'model':24s} {'space':>12s} {'space%':>8s} {'RF%':>7s} {'us/query':>9s} {'exact':>6s}")
 
-    for kind, params in [
-        ("L", {}), ("Q", {}), ("C", {}),
-        ("KO", {"k": 15}),
-        ("RMI", {"b": 2048, "root_type": "linear"}),
-        ("SY-RMI", {"space_pct": 2.0, "ub": 0.05}),
-        ("PGM", {"eps": 64}),
-        ("PGM_M", {"space_pct": 0.05, "a": 1.0}),
-        ("RS", {"eps": 32}),
-        ("BTREE", {"fanout": 16}),
-    ]:
-        m = build_index(kind, table, **params)
-        fn = jax.jit(lambda t, q, m=m: m.predecessor(t, q))
-        got = np.asarray(fn(tj, qj))
-        exact = bool((got == want).all())
-        t0 = time.perf_counter()
-        fn(tj, qj).block_until_ready()
-        dt = time.perf_counter() - t0
-        rf = model_reduction_factor(m, table, queries[:2000])
-        pct = 100 * m.space_bytes() / (len(table) * 8)
-        print(
-            f"{m.name:24s} {m.space_bytes():>10,}B {pct:7.3f}% {rf:7.2f}"
-            f" {dt / len(queries) * 1e6:9.3f} {str(exact):>6s}"
-        )
+    with tempfile.TemporaryDirectory() as tmp:
+        for spec in SPECS:
+            m = ix.build(spec, table)
+            # npz round-trip: the artifact the serving fleet would load
+            path = os.path.join(tmp, f"{spec.kind}.npz")
+            m.save(path)
+            m = ix.Index.load(path)
+            got = np.asarray(m.lookup(tj, qj))
+            exact = bool((got == want).all())
+            t0 = time.perf_counter()
+            m.lookup(tj, qj).block_until_ready()
+            dt = time.perf_counter() - t0
+            rf = model_reduction_factor(m, table, queries[:2000])
+            pct = 100 * m.space_bytes() / (len(table) * 8)
+            print(
+                f"{m.name:24s} {m.space_bytes():>10,}B {pct:7.3f}% {rf:7.2f}"
+                f" {dt / len(queries) * 1e6:9.3f} {str(exact):>6s}"
+            )
 
-    print("\npaper's headline: SY-RMI / bi-criteria PGM at 0.05-2% space beat")
+    n_traces = sum(ix.trace_counts().values())
+    print(f"\nshared jitted lookup: {len(SPECS)} models -> {n_traces} traces")
+    print("paper's headline: SY-RMI / bi-criteria PGM at 0.05-2% space beat")
     print("plain binary search; space — not accuracy — is the key to efficiency.")
 
 

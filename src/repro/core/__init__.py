@@ -1,13 +1,23 @@
-"""Core library: the paper's learned static indexes as composable JAX modules.
+"""Core library: the paper's learned static indexes as composable JAX code.
 
-Hierarchy (paper §3.2): constant-space atomic models (L/Q/C) and KO-BFS;
-parametric-space two-level RMIs and the synoptic SY-RMI; CDF-approximation
-controlled PGM (+ bi-criteria) and RadixSpline; B+-tree and plain Sorted
-Table Search procedures as baselines.
+Layering (post Index-API redesign):
+
+* **This package** owns the *math*: Sorted Table Search procedures
+  (:mod:`~repro.core.search`) and the per-kind fitting algorithms
+  (atomic L/Q/C, KO-BFS, RMI, SY-RMI, PGM (+ bi-criteria), RadixSpline,
+  B+-tree) — host-side builds that produce model parameters.
+* :mod:`repro.index` owns the *API*: hashable build specs in a
+  decorator registry, and the :class:`~repro.index.Index` pytree whose
+  leaves are the fitted flat arrays, queried through one shared jitted
+  lookup per kind with ``xla`` / ``bbs`` / ``pallas`` / ``ref``
+  backends.
+
+``KINDS`` / ``build_index`` remain importable from here as deprecated
+shims (``KINDS`` resolves lazily to ``repro.index.kinds()``).
 """
 
 from . import atomic, btree, builder, cdf, kbfs, pgm, radix_spline, rmi, search, sy_rmi
-from .builder import KINDS, build_index, model_reduction_factor
+from .builder import build_index, model_reduction_factor
 from .cdf import as_table, reduction_factor, true_ranks
 
 __all__ = [
@@ -16,3 +26,11 @@ __all__ = [
     "KINDS", "build_index", "model_reduction_factor",
     "as_table", "reduction_factor", "true_ranks",
 ]
+
+
+def __getattr__(name):
+    if name == "KINDS":
+        from repro import index
+
+        return index.kinds()
+    raise AttributeError(name)

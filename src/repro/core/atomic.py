@@ -6,6 +6,10 @@ the polynomial between consecutive keys through its critical points, so
 the predicted window provably contains the predecessor (the paper relies
 on empirically-measured max error; we tighten that to a guarantee so the
 downstream bounded search never needs a fallback).
+
+``build_atomic`` is the fitting backend of the ``L``/``Q``/``C`` kinds
+in :mod:`repro.index`; the fitted coefficients become Index pytree
+leaves there.
 """
 
 from __future__ import annotations

@@ -5,6 +5,9 @@ first key of every fanout-F group of the level below, padded with the
 max key.  Query: descend with a vectorised F-way fence compare per level
 (cache-conscious CSS-tree style — the natural static B+-tree on a vector
 machine), then a bounded branch-free search inside the final leaf block.
+
+``build_btree`` backs the ``BTREE`` kind in :mod:`repro.index`; levels
+are concatenated into one flat key array + offset table there.
 """
 
 from __future__ import annotations

@@ -1,9 +1,18 @@
-"""Unified build/query API over every model class in the paper's hierarchy.
+"""DEPRECATED shims over :mod:`repro.index` — the unified Index API.
 
-``build_index(kind, table, **params)`` -> model object exposing
-``intervals(table, q)``, ``predecessor(table, q)``, ``space_bytes()``,
-``build_time`` and ``max_window``; ``KINDS`` enumerates the hierarchy in
-the paper's order (constant-space models first).
+This module used to own the model hierarchy behind a string if-chain;
+that role moved to the spec registry in :mod:`repro.index.registry`.
+Kept as thin wrappers so old call sites keep working:
+
+* ``KINDS`` is now an alias of ``repro.index.kinds()`` (same strings,
+  same paper order), resolved lazily to keep ``repro.core`` importable
+  without dragging in the index package.
+* ``build_index(kind, table, **params)`` routes through the registry and
+  returns a :class:`repro.index.Index` (a pytree of flat arrays) instead
+  of a per-class model object.  ``Index`` keeps the old query surface
+  (``intervals`` / ``predecessor`` / ``space_bytes`` and the build-info
+  attributes), so most callers migrate by doing nothing — new code
+  should use ``repro.index.build`` with an explicit spec.
 """
 
 from __future__ import annotations
@@ -11,66 +20,22 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from .atomic import build_atomic
-from .kbfs import build_ko
-from .rmi import build_rmi
-from .pgm import build_pgm, build_pgm_bicriteria
-from .radix_spline import build_rs
-from .btree import build_btree
-from .sy_rmi import build_sy_rmi
 from .cdf import as_table, true_ranks, reduction_factor
 
-KINDS = (
-    "L",  # linear atomic
-    "Q",  # quadratic atomic
-    "C",  # cubic atomic
-    "KO",  # KO-BFS hybrid (new, paper)
-    "RMI",  # two-level RMI
-    "SY-RMI",  # synoptic RMI (new, paper)
-    "PGM",
-    "PGM_M",  # bi-criteria
-    "RS",
-    "BTREE",
-)
+
+def __getattr__(name):
+    if name == "KINDS":
+        from repro import index
+
+        return index.kinds()
+    raise AttributeError(name)
 
 
 def build_index(kind: str, table_np: np.ndarray, **params):
-    kind = kind.upper()
-    if kind == "L":
-        return build_atomic(table_np, degree=1)
-    if kind == "Q":
-        return build_atomic(table_np, degree=2)
-    if kind == "C":
-        return build_atomic(table_np, degree=3)
-    if kind == "KO":
-        return build_ko(table_np, k=params.get("k", 15))
-    if kind == "RMI":
-        return build_rmi(
-            table_np, b=params.get("b", 1024), root_type=params.get("root_type", "linear")
-        )
-    if kind == "SY-RMI":
-        return build_sy_rmi(
-            table_np,
-            space_pct=params.get("space_pct", 2.0),
-            ub=params.get("ub", 0.05),
-            winner_root=params.get("winner_root", "linear"),
-        )
-    if kind == "PGM":
-        return build_pgm(table_np, eps=params.get("eps", 64))
-    if kind == "PGM_M":
-        return build_pgm_bicriteria(
-            table_np,
-            space_budget_bytes=params.get(
-                "space_budget_bytes",
-                int(params.get("space_pct", 2.0) / 100.0 * len(table_np) * 8),
-            ),
-            a=params.get("a", 1.0),
-        )
-    if kind == "RS":
-        return build_rs(table_np, eps=params.get("eps", 32), r_bits=params.get("r_bits", 12))
-    if kind == "BTREE":
-        return build_btree(table_np, fanout=params.get("fanout", 16))
-    raise ValueError(f"unknown index kind {kind!r}; choose from {KINDS}")
+    """DEPRECATED: use ``repro.index.build(spec, table)``."""
+    from repro import index
+
+    return index.build(kind, table_np, **params)
 
 
 def model_reduction_factor(model, table_np: np.ndarray, queries_np: np.ndarray) -> float:

@@ -7,6 +7,9 @@ models, RF ordering == error-bound ordering, so we pick the smallest
 exact eps).  Query: sequential fence scan (k is a small constant) ->
 per-segment polynomial predict -> bounded branch-free (KO-BFS) or
 branchy (KO-BBS) search.
+
+``build_ko`` backs the ``KO`` kind in :mod:`repro.index`; the KO-BBS
+epilogue is the generic ``backend="bbs"`` path there.
 """
 
 from __future__ import annotations
@@ -78,32 +81,8 @@ class KOModel:
 
 
 def _bounded_bbs(table, q, lo, hi):
-    """Branchy bounded epilogue (for KO-BBS): early-exit while_loop."""
-    import jax.lax as lax
-
-    res0 = jnp.full(q.shape, -1, dtype=POS_DTYPE)
-    active0 = jnp.ones(q.shape, dtype=bool)
-
-    def cond(state):
-        return jnp.any(state[3])
-
-    def body(state):
-        lo, hi, res, active = state
-        mid = (lo + hi) >> 1
-        v = jnp.take(table, mid, mode="clip")
-        found = active & (v == q)
-        res = jnp.where(found, mid, res)
-        go_right = v < q
-        lo_n = jnp.where(active & go_right, mid + 1, lo)
-        hi_n = jnp.where(active & ~go_right, mid - 1, hi)
-        res = jnp.where(active & ~found & (lo_n > hi_n), hi_n, res)
-        active = active & ~found & (lo_n <= hi_n)
-        return lo_n, hi_n, res, active
-
-    import jax.lax as lax
-
-    _, _, res, _ = lax.while_loop(cond, body, (lo, hi, res0, active0))
-    return res
+    """Branchy bounded epilogue (for KO-BBS) — shared impl in search."""
+    return search.bounded_bbs_branchy(table, q, lo, hi)
 
 
 def build_ko(table_np: np.ndarray, k: int = 15) -> KOModel:

@@ -15,6 +15,10 @@ bounded branch-free search of width 2(ε+1)+1 over that level's keys.
 ``build_pgm_bicriteria`` implements the paper's PGM_M_a: given a space
 budget, bisect ε in [ε_m, ε_M] with ε_m = a · 2 · cls/size (cls
 re-derived for the TPU gather granularity, see DESIGN.md §7).
+
+``build_pgm`` / ``build_pgm_bicriteria`` back the ``PGM`` / ``PGM_M``
+kinds in :mod:`repro.index`; levels are concatenated into flat padded
+arrays there so same-shape models share one jitted query trace.
 """
 
 from __future__ import annotations

@@ -7,6 +7,9 @@ cone restarts.  A radix table over the top ``r`` bits of (key - kmin)
 narrows the knot search.  Build is one O(n) pass (chunk-vectorised).
 The verified error bound is re-measured post-build over all keys, so the
 reported window is a guarantee even under f64 rounding.
+
+``build_rs`` backs the ``RS`` kind in :mod:`repro.index`; knots are
+padded to a power of two there for jit-cache sharing.
 """
 
 from __future__ import annotations

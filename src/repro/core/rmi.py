@@ -7,6 +7,10 @@ the root fit.  Per-leaf error bounds are computed over the leaf's rank
 range extended by one key on each side and leaf slopes are clamped >= 0,
 which (with a monotone root) makes the predicted window a *guarantee* —
 see DESIGN.md §3.
+
+``build_rmi`` backs the ``RMI`` and ``SY-RMI`` kinds in
+:mod:`repro.index`; the leaf arrays (and their f32 kernel re-encoding)
+become Index pytree leaves there.
 """
 
 from __future__ import annotations
@@ -58,8 +62,12 @@ class RMIModel:
         hi = jnp.ceil(p).astype(POS_DTYPE) + eps
         # Monotone root proves pred in [r_l - 1, r_{l+1} - 1]: clamp the
         # window into that range (survives leaf-model blow-ups on gaps).
+        # High fence is r_{l+1}, NOT r_{l+1} - 1: XLA may evaluate the
+        # root polynomial within 1 ulp of the build-time NumPy value,
+        # flipping floor() at a leaf boundary; the extended eps already
+        # covers the boundary key, so the fence must not cut it off.
         b_lo = jnp.maximum(jnp.take(self.leaf_r, leaf) - 1, 0)
-        b_hi = jnp.take(self.leaf_r, leaf + 1) - 1
+        b_hi = jnp.minimum(jnp.take(self.leaf_r, leaf + 1), self.n - 1)
         lo = jnp.clip(lo, b_lo, b_hi)
         hi = jnp.clip(hi, b_lo, b_hi)
         return lo, hi
@@ -88,9 +96,17 @@ def _fit_root(u: np.ndarray, ranks: np.ndarray, root_type: str) -> np.ndarray:
         return poly_fit(u, ranks, 1)
     if root_type == "cubic":
         coef = poly_fit(u, ranks, 3)
-        # monotonicity check on [0,1]; fall back to linear if p' < 0 anywhere
-        crit = poly_crit_points(coef)
-        probes = np.concatenate([np.array([0.0, 1.0]), crit[(crit > 0) & (crit < 1)]])
+        # monotonicity check on [0,1]; fall back to linear if p' < 0 anywhere.
+        # p' is a quadratic, so its minimum over [0,1] is at an endpoint or
+        # at its vertex u* = -c2/(3 c3) — probing the roots of p' (as a
+        # previous revision did) always reads p' = 0 and misses the dip
+        # *between* them.
+        probes = [0.0, 1.0]
+        if coef[3] != 0.0:
+            vertex = -coef[2] / (3.0 * coef[3])
+            if 0.0 < vertex < 1.0:
+                probes.append(vertex)
+        probes = np.asarray(probes)
         dp = coef[1] + 2 * coef[2] * probes + 3 * coef[3] * probes**2
         if np.any(dp < 0):
             return poly_fit(u, ranks, 1)
@@ -153,8 +169,8 @@ def build_rmi(table_np: np.ndarray, b: int = 1024, root_type: str = "linear") ->
     eps_f = np.maximum(eps_core, np.maximum(err_lo, err_hi))
     eps = (np.ceil(np.minimum(eps_f, float(1 << 40))).astype(np.int64) + 1)
 
-    width = np.diff(r)  # leaf rank-range widths
-    max_window = int(np.max(np.minimum(2 * eps + 3, width + 2))) if b else 1
+    width = np.diff(r)  # leaf rank-range widths (+3: one-ulp fence slack)
+    max_window = int(np.max(np.minimum(2 * eps + 3, width + 3))) if b else 1
 
     dt = time.perf_counter() - t0
     return RMIModel(

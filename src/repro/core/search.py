@@ -87,6 +87,40 @@ def bounded_bfs(table, q, lo, hi, *, max_window: int):
     return ub - 1
 
 
+def bounded_bbs_branchy(table, q, lo, hi):
+    """Branchy bounded epilogue (the paper's \\*-BBS variants).
+
+    Early-exit while_loop over a guaranteed inclusive window [lo, hi]:
+    all lanes iterate until every lane has converged — the vectorised
+    semantics of the paper's scalar branchy loop.  Shared by the
+    ``backend="bbs"`` path of every :class:`repro.index.Index` kind.
+    """
+    n = table.shape[0]
+    res0 = jnp.full(q.shape, -1, dtype=jnp.int64)
+    active0 = jnp.ones(q.shape, dtype=bool)
+    lo = jnp.clip(lo.astype(jnp.int64), 0, n - 1)
+    hi = jnp.clip(hi.astype(jnp.int64), 0, n - 1)
+
+    def cond(state):
+        return jnp.any(state[3])
+
+    def body(state):
+        lo, hi, res, active = state
+        mid = (lo + hi) >> 1
+        v = _take(table, mid)
+        found = active & (v == q)
+        res = jnp.where(found, mid, res)
+        go_right = v < q
+        lo_n = jnp.where(active & go_right, mid + 1, lo)
+        hi_n = jnp.where(active & ~go_right, mid - 1, hi)
+        res = jnp.where(active & ~found & (lo_n > hi_n), hi_n, res)
+        active = active & ~found & (lo_n <= hi_n)
+        return lo_n, hi_n, res, active
+
+    _, _, res, _ = lax.while_loop(cond, body, (lo, hi, res0, active0))
+    return res
+
+
 # ---------------------------------------------------------------------------
 # Branchy binary search (BBS) — early-exit semantics via while_loop.
 # ---------------------------------------------------------------------------
@@ -178,7 +212,6 @@ def bfe(layout, inorder_rank, q, *, height: int, n: int):
     j = t >> (trailing_ones + 1)
     m = jnp.int64(layout.shape[0])
     ub = jnp.where(j == 0, m, _take(inorder_rank, jnp.maximum(j - 1, 0)))
-    ub = jnp.where(j == 0, m, ub)
     # ub indexes the padded sorted order; clamp pads back to n
     return jnp.minimum(ub, n) - 1
 

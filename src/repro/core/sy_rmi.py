@@ -9,6 +9,9 @@ Pipeline, faithful to §3.2/§4:
      time over a 1% simulation query set (paper §4).
   4. ``build_sy_rmi`` — given a space budget (a % of the table bytes),
      instantiate the winner architecture with b = UB x budget.
+
+``build_sy_rmi`` backs the ``SY-RMI`` kind in :mod:`repro.index`
+(spec: ``SYRMISpec(space_pct, ub, winner_root)``).
 """
 
 from __future__ import annotations

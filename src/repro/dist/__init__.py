@@ -1,0 +1,22 @@
+"""Distribution substrate: mesh-aware sharding contexts and collectives.
+
+``sharding`` maps *logical* axis names (dp / fsdp / tp / ep / edge / row)
+onto whatever physical mesh the launcher built, so model code never
+hard-codes mesh axis names.  ``collectives`` holds the cross-device
+helpers: overlap-friendly XLA flags, psum utilities and error-feedback
+gradient compression used by :mod:`repro.train.step`.
+"""
+
+from . import collectives, sharding
+from .collectives import OVERLAP_XLA_FLAGS, apply_grad_compression, compressed_grad_leaf
+from .sharding import ShardingCtx, single_device_ctx
+
+__all__ = [
+    "collectives",
+    "sharding",
+    "OVERLAP_XLA_FLAGS",
+    "apply_grad_compression",
+    "compressed_grad_leaf",
+    "ShardingCtx",
+    "single_device_ctx",
+]

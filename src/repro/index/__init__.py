@@ -1,0 +1,61 @@
+"""repro.index — the unified public API for learned static indexes.
+
+Design (this package replaces the per-class ad-hoc API in
+``repro.core.builder``):
+
+* **Specs** (:mod:`~repro.index.specs`): one hashable frozen dataclass
+  per kind describes *how to build* an index — nothing else.
+* **Registry** (:mod:`~repro.index.registry`): kinds register once, in
+  the paper's hierarchy order, via a decorator; ``kinds()`` replaces the
+  old ``KINDS`` tuple and the ``build_index`` string if-chain.
+* **Index** (:mod:`~repro.index.index`): the built artifact — a
+  registered JAX pytree whose leaves are the model's flat arrays, so
+  indexes can flow through jit/vmap/shard/donate and serialize via
+  ``save``/``load`` npz round-trips.
+* **Backends**: ``lookup(table, queries, backend="xla"|"bbs"|"pallas"|
+  "ref")`` — one shared jitted query path per kind; the Pallas fast
+  path's f32/i32 re-encoding is folded into build (no separate
+  ``prepare_rmi_kernel_index`` step).
+
+Quick start::
+
+    from repro.index import Index, RMISpec, build
+    idx = build(RMISpec(b=2048), table)     # or build("RMI", table, b=2048)
+    ranks = idx.lookup(table, queries)      # shared jit: no per-model trace
+    idx.save("rmi.npz"); idx2 = Index.load("rmi.npz")
+"""
+
+from .index import BACKENDS, Index, build, reset_trace_counts, trace_counts
+from .registry import entry, kinds, spec_for
+from .specs import (
+    AtomicSpec,
+    BTreeSpec,
+    IndexSpec,
+    KOSpec,
+    PGMBicriteriaSpec,
+    PGMSpec,
+    RMISpec,
+    RSSpec,
+    SYRMISpec,
+)
+from . import impls as _impls  # noqa: F401  — populates the registry
+
+__all__ = [
+    "BACKENDS",
+    "Index",
+    "build",
+    "trace_counts",
+    "reset_trace_counts",
+    "entry",
+    "kinds",
+    "spec_for",
+    "IndexSpec",
+    "AtomicSpec",
+    "KOSpec",
+    "RMISpec",
+    "SYRMISpec",
+    "PGMSpec",
+    "PGMBicriteriaSpec",
+    "RSSpec",
+    "BTreeSpec",
+]

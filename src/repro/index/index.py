@@ -1,0 +1,195 @@
+r"""The :class:`Index` pytree and the shared jitted query path.
+
+The paper's view — and Kraska et al.'s — is that a learned index *is
+data*: a handful of flat arrays (segments, fences, slopes, intercepts)
+driven by one generic lookup procedure.  ``Index`` realises that view as
+a registered JAX pytree:
+
+* **leaves** — the model's arrays (``index.arrays``), so an ``Index``
+  can be passed through ``jax.jit``, ``vmap``, donated, sharded, or
+  serialized like any other pytree of arrays;
+* **treedef aux** — the kind tag plus a small tuple of static ints
+  (loop trip counts, level counts), deliberately log-bucketed so that
+  different instances of a kind collide onto the *same* jit cache entry.
+
+Because the model is an argument rather than a closure constant, there
+is exactly **one** jitted query function per (kind, backend) — building
+ten SY-RMIs at ten space budgets re-traces zero to one times instead of
+ten.  ``trace_counts()`` exposes the cache behaviour for tests and
+benchmarks.
+
+Backends (``lookup(..., backend=...)``):
+
+* ``"xla"``    — intervals + branch-free bounded search (default);
+* ``"bbs"``    — intervals + branchy early-exit epilogue (paper's \*-BBS);
+* ``"pallas"`` — fused RMI Pallas kernel for RMI/SY-RMI, lane-wide k-ary
+  Pallas kernel for every other kind (interpret mode off-TPU);
+* ``"ref"``    — ``jnp.searchsorted`` oracle (parity testing).
+"""
+
+from __future__ import annotations
+
+import collections
+import json
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.cdf import POS_DTYPE
+
+BACKENDS = ("xla", "bbs", "pallas", "ref")
+
+_TRACE_COUNTS: collections.Counter = collections.Counter()
+
+
+def trace_counts() -> dict:
+    """(kind, backend) -> number of times the shared lookup was traced."""
+    return dict(_TRACE_COUNTS)
+
+
+def reset_trace_counts() -> None:
+    _TRACE_COUNTS.clear()
+
+
+class Index:
+    """A learned static index as a pytree of flat arrays.
+
+    Attributes
+    ----------
+    kind:    registry kind tag (``"RMI"``, ``"PGM"``, ...) — static.
+    static:  tuple of ``(name, int)`` pairs — static query metadata
+             (bucketed loop trip counts, level counts, degrees).
+    arrays:  dict name -> jnp.ndarray — the pytree leaves.
+    info:    host-side build metadata (name, build_time, eps, ...).
+             *Not* part of the pytree: it is dropped under tracing and
+             by ``tree_unflatten`` so it can never fragment jit caches.
+    """
+
+    __slots__ = ("kind", "static", "arrays", "info")
+
+    def __init__(self, kind: str, static: tuple, arrays: dict, info: dict | None = None):
+        object.__setattr__(self, "kind", kind)
+        object.__setattr__(self, "static", tuple(static))
+        object.__setattr__(self, "arrays", dict(arrays))
+        object.__setattr__(self, "info", dict(info or {}))
+
+    # -- static metadata --------------------------------------------------
+    def s(self, name: str) -> int:
+        for k, v in self.static:
+            if k == name:
+                return v
+        raise KeyError(name)
+
+    @property
+    def name(self) -> str:
+        return self.info.get("name", self.kind)
+
+    def __getattr__(self, item):
+        # convenience passthrough: idx.eps, idx.b, idx.n_segments_l0, ...
+        info = object.__getattribute__(self, "info")
+        if item in info:
+            return info[item]
+        raise AttributeError(item)
+
+    def __repr__(self):
+        shapes = {k: tuple(v.shape) for k, v in self.arrays.items()}
+        return f"Index(kind={self.kind!r}, static={dict(self.static)}, arrays={shapes})"
+
+    # -- pytree protocol --------------------------------------------------
+    def tree_flatten(self):
+        names = tuple(sorted(self.arrays))
+        children = tuple(self.arrays[k] for k in names)
+        return children, (self.kind, self.static, names)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        kind, static, names = aux
+        return cls(kind, static, dict(zip(names, children)), info=None)
+
+    # -- queries ----------------------------------------------------------
+    def intervals(self, table, queries):
+        """Predicted inclusive window [lo, hi] per query (jittable)."""
+        from . import impls
+
+        return impls.query_impl(self.kind).intervals(self, table, queries)
+
+    def lookup(self, table, queries, *, backend: str = "xla"):
+        """Predecessor ranks through the shared jitted query path."""
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; choose from {BACKENDS}")
+        return _lookup_jit(self, jnp.asarray(table), jnp.asarray(queries), backend)
+
+    def predecessor(self, table, queries, *, branchy: bool = False, backend: str | None = None):
+        r"""Predecessor ranks; ``branchy=True`` selects the \*-BBS epilogue."""
+        return self.lookup(table, queries, backend=backend or ("bbs" if branchy else "xla"))
+
+    # -- accounting / serialization --------------------------------------
+    def space_bytes(self) -> int:
+        from . import impls
+
+        return impls.query_impl(self.kind).space_bytes(self)
+
+    def save(self, path) -> None:
+        """npz round-trip: arrays bit-exact, kind/static/info as JSON."""
+        payload = {f"arr_{k}": np.asarray(v) for k, v in self.arrays.items()}
+        meta = {
+            "kind": self.kind,
+            "static": list(map(list, self.static)),
+            "info": {k: v for k, v in self.info.items() if isinstance(v, (str, int, float, bool))},
+        }
+        payload["__meta__"] = np.frombuffer(json.dumps(meta).encode(), dtype=np.uint8)
+        np.savez(path, **payload)
+
+    @classmethod
+    def load(cls, path) -> "Index":
+        with np.load(path) as z:
+            meta = json.loads(bytes(z["__meta__"]).decode())
+            arrays = {
+                k[len("arr_"):]: jnp.asarray(z[k]) for k in z.files if k.startswith("arr_")
+            }
+        static = tuple((k, int(v)) for k, v in meta["static"])
+        return cls(meta["kind"], static, arrays, info=meta.get("info"))
+
+
+jax.tree_util.register_pytree_node_class(Index)
+
+
+# ---------------------------------------------------------------------------
+# The shared jitted query path: ONE trace per (kind structure, backend)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("backend",))
+def _lookup_jit(index: Index, table, queries, backend: str):
+    from . import impls
+
+    _TRACE_COUNTS[(index.kind, backend)] += 1  # python side effect: runs per trace
+    impl = impls.query_impl(index.kind)
+
+    if backend == "ref":
+        return jnp.searchsorted(table, queries, side="right").astype(POS_DTYPE) - 1
+    if backend == "pallas":
+        return impl.pallas(index, table, queries)
+
+    lo, hi = impl.intervals(index, table, queries)
+    if backend == "bbs":
+        from repro.core import search
+
+        return search.bounded_bbs_branchy(table, queries, lo, hi)
+    from repro.core import search
+
+    return search.bounded_bfs(table, queries, lo, hi, max_window=1 << impl.epi_steps(index))
+
+
+def build(kind_or_spec, table_np, **params) -> Index:
+    """Build an :class:`Index` from a spec (or kind string + params)."""
+    from . import registry
+    from .specs import IndexSpec
+
+    if isinstance(kind_or_spec, IndexSpec):
+        spec = kind_or_spec
+    else:
+        spec = registry.spec_for(str(kind_or_spec), **params)
+    return registry.entry(spec.kind).build(spec, table_np)

@@ -5,6 +5,12 @@ interpret mode on CPU; see DESIGN.md §3 for the TPU-native adaptations).
 - kary_search:     lane-wide (k=128) k-ary search — TPU-native K-BFS
 - embedding_bag:   one-hot-matmul EmbeddingBag over vocab tiles
 - decode_attention: flash-decode GQA attention for the serve path
+
+The search kernels are reached through ``repro.index``: the f32/i32
+re-encoding (``rmi_kernel_arrays``) is folded into ``Index`` build and
+``Index.lookup(..., backend="pallas")`` dispatches here.  The old
+``prepare_rmi_kernel_index`` / ``fused_rmi_search`` pair remains as a
+deprecated shim.
 """
 
 from . import ops, ref
@@ -14,5 +20,6 @@ from .ops import (
     fused_rmi_search,
     kary_search,
     prepare_rmi_kernel_index,
+    rmi_kernel_arrays,
     split_u64,
 )

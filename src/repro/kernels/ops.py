@@ -64,12 +64,16 @@ class RMIKernelIndex:
     b: int
 
 
-def prepare_rmi_kernel_index(model, table_np: np.ndarray) -> RMIKernelIndex:
+def rmi_kernel_arrays(model, table_np: np.ndarray):
     """Re-encode a core.rmi.RMIModel in kernel precision, re-verifying ε.
 
     The kernel predicts in f32; we re-measure every leaf's max error with
     the kernel's exact arithmetic (f32 Horner on f32 u) and widen ε so
-    the window remains a guarantee.
+    the window remains a guarantee.  Returns ``(arrays, steps)`` where
+    ``arrays`` holds the f32/i32 leaf parameters (``root``, ``slope``,
+    ``icept``, ``eps``, ``rlo``, ``rhi``) — this is what
+    :class:`repro.index.Index` folds into its pytree leaves at build
+    time, replacing the old separate ``prepare_rmi_kernel_index`` step.
     """
     n = model.n
     b = model.b
@@ -105,26 +109,38 @@ def prepare_rmi_kernel_index(model, table_np: np.ndarray) -> RMIKernelIndex:
     eps_i = np.minimum(np.ceil(eps) + 2, float(n)).astype(np.int32)
 
     rlo = np.maximum(r32[:-1] - 1, 0).astype(np.int32)
-    rhi = np.maximum(r32[1:] - 1, 0).astype(np.int32)
+    # high fence r32[l+1] (not -1): absorbs a 1-ulp leaf flip between the
+    # host re-encoding and the kernel's f32 root eval (err_hi covers the
+    # boundary key, so the widened window stays a guarantee).
+    rhi = np.clip(r32[1:], 0, n - 1).astype(np.int32)
     widths = np.minimum(2 * eps_i.astype(np.int64) + 3, (rhi - rlo + 1).astype(np.int64))
     max_window = max(1, int(widths.max()))
     steps = max(1, int(math.ceil(math.log2(max(max_window, 2)))))
 
+    arrays = {"root": root, "slope": slopes, "icept": icepts, "eps": eps_i, "rlo": rlo, "rhi": rhi}
+    return arrays, steps
+
+
+def prepare_rmi_kernel_index(model, table_np: np.ndarray) -> RMIKernelIndex:
+    """DEPRECATED shim — build an :class:`repro.index.Index` instead; the
+    kernel re-encoding now happens at Index construction and the fused
+    kernel runs via ``Index.lookup(..., backend="pallas")``."""
+    arrays, steps = rmi_kernel_arrays(model, table_np)
     thi, tlo = split_u64(table_np)
     return RMIKernelIndex(
         table_hi=thi,
         table_lo=tlo,
-        root_coef=jnp.asarray(root),
-        leaf_slope=jnp.asarray(slopes),
-        leaf_icept=jnp.asarray(icepts),
-        leaf_eps=jnp.asarray(eps_i),
-        leaf_rlo=jnp.asarray(rlo),
-        leaf_rhi=jnp.asarray(rhi),
-        kmin=kmin,
-        inv_span=inv_span,
+        root_coef=jnp.asarray(arrays["root"]),
+        leaf_slope=jnp.asarray(arrays["slope"]),
+        leaf_icept=jnp.asarray(arrays["icept"]),
+        leaf_eps=jnp.asarray(arrays["eps"]),
+        leaf_rlo=jnp.asarray(arrays["rlo"]),
+        leaf_rhi=jnp.asarray(arrays["rhi"]),
+        kmin=np.float64(np.asarray(model.kmin)),
+        inv_span=np.float64(np.asarray(model.inv_span)),
         steps=steps,
-        n=n,
-        b=b,
+        n=model.n,
+        b=model.b,
     )
 
 

@@ -58,7 +58,11 @@ def _rmi_kernel(
     c = root_ref[...]  # (4,) f32
 
     # --- stage 1: root -> leaf ---
+    # clamp BEFORE the i32 cast: model blow-ups on key gaps predict
+    # |p| ~ 1e15 in f32, and an out-of-range float->int32 cast is
+    # implementation-defined garbage that survives the later clips.
     p_root = ((c[3] * u + c[2]) * u + c[1]) * u + c[0]
+    p_root = jnp.clip(p_root, -1.0e9, 1.0e9)  # b/n <= 1 keeps the product in i32
     leaf = jnp.clip(jnp.floor(p_root * (b / n)).astype(jnp.int32), 0, b - 1)
 
     # --- stage 2: leaf linear predict + guaranteed window ---
@@ -67,7 +71,7 @@ def _rmi_kernel(
     eps = jnp.take(eps_ref[...], leaf)
     rlo = jnp.take(rlo_ref[...], leaf)
     rhi = jnp.take(rhi_ref[...], leaf)
-    p = slope * u + icept
+    p = jnp.clip(slope * u + icept, -1.0e9, 1.0e9)  # +/-eps stays inside i32
     lo = jnp.clip(jnp.floor(p).astype(jnp.int32) - eps, rlo, rhi)
     hi = jnp.clip(jnp.ceil(p).astype(jnp.int32) + eps, rlo, rhi)
 

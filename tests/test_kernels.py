@@ -1,13 +1,16 @@
 """Pallas kernel sweeps: shapes/dtypes vs the pure-jnp oracles (ref.py).
 
 Search kernels assert exact integer equality; float kernels use
-tolerances calibrated to f32 reduction error.
+tolerances calibrated to f32 reduction error.  The search kernels are
+reached through the unified ``repro.index`` API (``backend="pallas"``);
+the legacy ``prepare_rmi_kernel_index`` shim keeps one smoke test.
 """
 
 import numpy as np
 import jax.numpy as jnp
 import pytest
 
+from repro import index as ix
 from repro.core import as_table, true_ranks
 from repro.core.rmi import build_rmi
 from repro.kernels import ops, ref
@@ -24,10 +27,19 @@ def test_fused_rmi_kernel(rng, kind, n):
          np.array([0, table.min(), table.max(), 2**64 - 1], dtype=np.uint64)]
     ).astype(np.uint64)
     want = true_ranks(table, qs)
-    m = build_rmi(table, b=max(2, min(256, n // 4)), root_type="linear")
+    m = ix.build(ix.RMISpec(b=max(2, min(256, n // 4)), root_type="linear"), table)
+    got = np.asarray(m.lookup(table, qs, backend="pallas"))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_fused_rmi_kernel_legacy_shim(rng):
+    """The deprecated prepare_rmi_kernel_index path still works."""
+    table = make_table(rng, "uniform", 4096)
+    qs = rng.choice(table, 256).astype(np.uint64)
+    m = build_rmi(table, b=64, root_type="linear")
     kidx = ops.prepare_rmi_kernel_index(m, table)
     got = np.asarray(ops.fused_rmi_search(kidx, qs, tile_q=128))
-    np.testing.assert_array_equal(got, want)
+    np.testing.assert_array_equal(got, true_ranks(table, qs))
 
 
 @pytest.mark.parametrize("k", [8, 128])
@@ -77,10 +89,13 @@ def test_decode_attention_kernel(rng, b, hq, hkv, d, s, stile):
 
 
 def test_rmi_kernel_f32_widening(rng):
-    """The kernel's f32 eps must be >= the f64 model's (safety margin)."""
+    """The kernel's f32 eps must be >= the f64 model's (safety margin).
+
+    The f32/i32 re-encoding is folded into Index construction as the
+    ``k_*`` leaves, so the invariant is checked on the Index itself.
+    """
     table = make_table(rng, "clustered", 20000)
-    m = build_rmi(table, b=128)
-    kidx = ops.prepare_rmi_kernel_index(m, table)
-    assert int(jnp.max(kidx.leaf_eps)) >= 1
+    m = ix.build(ix.RMISpec(b=128), table)
+    assert int(jnp.max(m.arrays["k_eps"])) >= 1
     # windows clamp within leaf rank ranges
-    assert (np.asarray(kidx.leaf_rlo) <= np.asarray(kidx.leaf_rhi)).all()
+    assert (np.asarray(m.arrays["k_rlo"]) <= np.asarray(m.arrays["k_rhi"])).all()

@@ -1,40 +1,45 @@
-"""Every model class in the paper's hierarchy returns exact predecessor
-ranks on every table family, and space accounting is sane (paper §3.2)."""
+"""Every index kind in the paper's hierarchy returns exact predecessor
+ranks on every table family, and space accounting is sane (paper §3.2).
+
+Builds go through the unified ``repro.index`` spec API; the deprecated
+``build_index`` shim keeps one coverage case per run.
+"""
 
 import numpy as np
 import jax.numpy as jnp
 import pytest
 
+from repro import index as ix
 from repro.core import build_index, model_reduction_factor
 from repro.core.cdf import true_ranks
 
 from conftest import TABLE_KINDS, make_table, make_queries
 
 CASES = [
-    ("L", {}),
-    ("Q", {}),
-    ("C", {}),
-    ("KO", {"k": 15}),
-    ("KO", {"k": 3}),
-    ("RMI", {"b": 64, "root_type": "linear"}),
-    ("RMI", {"b": 256, "root_type": "cubic"}),
-    ("RMI", {"b": 256, "root_type": "spline"}),
-    ("PGM", {"eps": 16}),
-    ("PGM", {"eps": 128}),
-    ("PGM_M", {"space_pct": 2.0, "a": 1.0}),
-    ("RS", {"eps": 16, "r_bits": 10}),
-    ("BTREE", {"fanout": 16}),
-    ("SY-RMI", {"space_pct": 2.0, "ub": 0.04}),
+    ix.AtomicSpec(degree=1),
+    ix.AtomicSpec(degree=2),
+    ix.AtomicSpec(degree=3),
+    ix.KOSpec(k=15),
+    ix.KOSpec(k=3),
+    ix.RMISpec(b=64, root_type="linear"),
+    ix.RMISpec(b=256, root_type="cubic"),
+    ix.RMISpec(b=256, root_type="spline"),
+    ix.PGMSpec(eps=16),
+    ix.PGMSpec(eps=128),
+    ix.PGMBicriteriaSpec(space_pct=2.0, a=1.0),
+    ix.RSSpec(eps=16, r_bits=10),
+    ix.BTreeSpec(fanout=16),
+    ix.SYRMISpec(space_pct=2.0, ub=0.04),
 ]
 
 
-@pytest.mark.parametrize("kind,params", CASES, ids=[f"{k}-{i}" for i, (k, _) in enumerate(CASES)])
+@pytest.mark.parametrize("spec", CASES, ids=[f"{s.kind}-{i}" for i, s in enumerate(CASES)])
 @pytest.mark.parametrize("table_kind", TABLE_KINDS)
-def test_exact_predecessor(rng, kind, params, table_kind):
+def test_exact_predecessor(rng, spec, table_kind):
     table = make_table(rng, table_kind, 5000)
     qs = make_queries(rng, table, 300)
     want = true_ranks(table, qs)
-    m = build_index(kind, table, **params)
+    m = ix.build(spec, table)
     got = np.asarray(m.predecessor(jnp.asarray(table), jnp.asarray(qs)))
     np.testing.assert_array_equal(got, want)
 

@@ -8,6 +8,9 @@ the true predecessor (the guarantee DESIGN.md §3 argues for).
 
 import numpy as np
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not baked into the image")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import build_index

@@ -45,6 +45,18 @@ def test_eytzinger(rng, kind, n):
     np.testing.assert_array_equal(got, want)
 
 
+def test_bounded_bbs_branchy_windows(rng):
+    """Branchy bounded epilogue (Index backend='bbs') honours windows."""
+    table = make_table(rng, "clustered", 800)
+    qs = make_queries(rng, table, 100)
+    want = true_ranks(table, qs)
+    lo = jnp.maximum(jnp.asarray(want) - 5, 0)
+    hi = jnp.minimum(jnp.asarray(want) + 5, len(table) - 1)
+    hi = jnp.maximum(hi, 0)
+    got = np.asarray(search.bounded_bbs_branchy(jnp.asarray(table), jnp.asarray(qs), lo, hi))
+    np.testing.assert_array_equal(got, want)
+
+
 def test_bounded_upper_bound_windows(rng):
     """Bounded search honours arbitrary (lo, length) windows."""
     table = make_table(rng, "uniform", 500)
