@@ -13,7 +13,6 @@ import time
 
 import numpy as np
 import jax
-import jax.numpy as jnp
 
 import repro  # noqa: F401
 from repro.data import distributions, tables

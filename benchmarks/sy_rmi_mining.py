@@ -3,10 +3,6 @@ UB (branching factor per byte), and mining time vs sweep time."""
 
 from __future__ import annotations
 
-import time
-
-import numpy as np
-
 from repro.core.sy_rmi import mine_sy_rmi
 
 from .common import TIERS, bench_tables, emit

@@ -9,8 +9,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
 from repro.core import build_index
 from repro.core.sy_rmi import cdfshop_sweep, mine_ub, build_sy_rmi
 

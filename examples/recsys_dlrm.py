@@ -11,7 +11,6 @@ import time
 
 import numpy as np
 import jax
-import jax.numpy as jnp
 
 import repro  # noqa: F401
 from repro.configs import get as get_arch

@@ -14,7 +14,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 import repro  # noqa: F401
 from repro.data import pipeline

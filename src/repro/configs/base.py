@@ -9,7 +9,7 @@ ShapeDtypeStruct stand-ins for the dry-run.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Dict
 
 

@@ -21,7 +21,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from . import search
-from .cdf import keys_to_unit, POS_DTYPE
+from .cdf import POS_DTYPE
 
 
 def poly_fit(u: np.ndarray, y: np.ndarray, degree: int) -> np.ndarray:

@@ -20,7 +20,7 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from .cdf import as_table, true_ranks, reduction_factor
+from .cdf import reduction_factor
 
 
 def __getattr__(name):

@@ -22,7 +22,7 @@ import jax.numpy as jnp
 
 from . import search
 from .atomic import poly_fit, poly_exact_eps, poly_eval_jnp
-from .cdf import keys_to_unit, POS_DTYPE
+from .cdf import POS_DTYPE
 
 
 @dataclass

@@ -24,7 +24,7 @@ arrays there so same-shape models share one jitted query trace.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import List
 
 import numpy as np

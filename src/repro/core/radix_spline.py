@@ -32,7 +32,6 @@ def spline_knots(keys_f64: np.ndarray, eps: int) -> np.ndarray:
     if n <= 2:
         return np.arange(n, dtype=np.int64)
     knots = [0]
-    anchor = 0
     x0, y0 = keys_f64[0], 0.0
     lo, hi = -np.inf, np.inf
     i = 1
@@ -51,7 +50,6 @@ def spline_knots(keys_f64: np.ndarray, eps: int) -> np.ndarray:
             k = int(np.argmax(bad))
             knot = i + k - 1  # previous point becomes a knot
             knots.append(knot)
-            anchor = knot
             x0, y0 = keys_f64[knot], float(knot)
             lo, hi = -np.inf, np.inf
             i = knot + 1

@@ -22,8 +22,8 @@ import numpy as np
 import jax.numpy as jnp
 
 from . import search
-from .atomic import poly_fit, poly_eval_jnp, poly_eval_np, poly_crit_points
-from .cdf import keys_to_unit, POS_DTYPE
+from .atomic import poly_fit, poly_eval_jnp, poly_eval_np
+from .cdf import POS_DTYPE
 
 ROOT_TYPES = ("linear", "cubic", "spline")
 
@@ -136,11 +136,9 @@ def build_rmi(table_np: np.ndarray, b: int = 1024, root_type: str = "linear") ->
 
     slopes = np.zeros(b, dtype=np.float64)
     icepts = np.zeros(b, dtype=np.float64)
-    epss = np.zeros(b, dtype=np.int64)
 
     # Vectorised per-leaf linear fits via segment sums (single pass).
     seg = leaf_of
-    ones = np.ones(n)
     cnt = np.bincount(seg, minlength=b).astype(np.float64)
     su = np.bincount(seg, weights=u, minlength=b)
     sr = np.bincount(seg, weights=ranks, minlength=b)

@@ -21,9 +21,7 @@ helpers compute ``upper_bound`` (first index with ``A[i] > x``).
 from __future__ import annotations
 
 import math
-from functools import partial
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 

@@ -17,7 +17,7 @@ Pipeline, faithful to §3.2/§4:
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Sequence
 
 import numpy as np
@@ -25,7 +25,6 @@ import jax
 import jax.numpy as jnp
 
 from .rmi import RMIModel, build_rmi, ROOT_TYPES
-from .cdf import true_ranks
 
 
 def cdfshop_sweep(table_np: np.ndarray, max_models: int = 10):

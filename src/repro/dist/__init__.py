@@ -4,19 +4,28 @@
 onto whatever physical mesh the launcher built, so model code never
 hard-codes mesh axis names.  ``collectives`` holds the cross-device
 helpers: overlap-friendly XLA flags, psum utilities and error-feedback
-gradient compression used by :mod:`repro.train.step`.
+gradient compression used by :mod:`repro.train.step`.  ``sharded_index``
+stacks a tier of per-shard learned indexes leaf-wise and queries them
+collectively under ``shard_map`` (fence-route-answer-return pipeline).
 """
 
-from . import collectives, sharding
+from . import collectives, sharded_index, sharding
 from .collectives import OVERLAP_XLA_FLAGS, apply_grad_compression, compressed_grad_leaf
+from .sharded_index import DROPPED, ShardedIndex, refresh_shard, sharded_lookup, stack_indexes
 from .sharding import ShardingCtx, single_device_ctx
 
 __all__ = [
     "collectives",
     "sharding",
+    "sharded_index",
     "OVERLAP_XLA_FLAGS",
     "apply_grad_compression",
     "compressed_grad_leaf",
     "ShardingCtx",
     "single_device_ctx",
+    "DROPPED",
+    "ShardedIndex",
+    "refresh_shard",
+    "sharded_lookup",
+    "stack_indexes",
 ]

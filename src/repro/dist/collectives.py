@@ -12,6 +12,10 @@ Three concerns live here:
   psum payload shrinks 2-4x; the per-leaf quantisation residual is fed
   back into the next step so compressed training converges to the
   uncompressed trajectory (:mod:`repro.train.step` wires it in).
+* owner-exchange bucketing (:func:`bucket_by_owner` /
+  :func:`unbucket_inverse`) — the capacity-factored request-matrix
+  construction shared by every all_to_all exchange in the repo
+  (embedding row fetch, sharded-index query routing).
 """
 
 from __future__ import annotations
@@ -19,6 +23,58 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 from jax import lax
+
+
+# ---------------------------------------------------------------------------
+# Owner-exchange bucketing (the all_to_all request-matrix pattern)
+# ---------------------------------------------------------------------------
+
+
+def exchange_capacity(n_local: int, n_shards: int, cap_factor: float) -> int:
+    """Slots per (source, owner) pair: ``ceil(cap_factor * n / shards)``,
+    at least 1.  ``cap_factor >= n_shards`` can never drop."""
+    return max(1, int(-(-cap_factor * n_local // n_shards)))
+
+
+def bucket_by_owner(owner, values, n_shards: int, cap: int, fill):
+    """Bucket ``values`` into a capacity-bounded ``(n_shards, cap)``
+    request matrix by ``owner`` (inside a shard_map block).
+
+    Sort by owner, find each owner's bucket bounds with a branch-free
+    boundary search, and lay the first ``cap`` entries per owner into
+    rows; over-capacity entries get ``fill`` and ``valid=False``.
+
+    Returns ``(req, slots, valid, order)``: the request matrix, each
+    slot's position in the sorted order, the in-capacity mask, and the
+    sort permutation (pass ``slots``/``valid``/``order`` to
+    :func:`unbucket_inverse` to scatter replies back to input order).
+    """
+    from repro.core import search
+
+    n = values.shape[0]
+    order = jnp.argsort(owner)
+    s_owner = jnp.take(owner, order).astype(jnp.int64)
+    s_val = jnp.take(values, order)
+    shard_q = jnp.arange(n_shards, dtype=jnp.int64)
+    starts = search.bfs(s_owner, shard_q - 1) + 1
+    ends = search.bfs(s_owner, shard_q) + 1
+    slots = starts[:, None] + lax.broadcasted_iota(jnp.int64, (n_shards, cap), 1)
+    valid = slots < ends[:, None]
+    req = jnp.where(valid, jnp.take(s_val, jnp.minimum(slots, n - 1)), fill)
+    return req, slots, valid, order
+
+
+def unbucket_inverse(replies, slots, valid, order, n: int, init):
+    """Scatter ``(n_shards, cap)`` replies back to input order.
+
+    Entries never sent (``valid=False``) keep ``init`` — callers encode
+    their drop policy there (sentinel rank, zero vector, ...).
+    """
+    out_sorted = jnp.full((n,) + replies.shape[2:], init, dtype=replies.dtype)
+    scatter_at = jnp.where(valid.reshape(-1), slots.reshape(-1), n)
+    flat = replies.reshape((-1,) + replies.shape[2:])
+    out_sorted = out_sorted.at[scatter_at].set(flat, mode="drop")
+    return jnp.take(out_sorted, jnp.argsort(order), axis=0)
 
 # Exported by ``python -m repro.launch.train --print-xla-flags``; a real
 # fleet launch sets XLA_FLAGS to this before importing jax.

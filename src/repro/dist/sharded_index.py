@@ -1,0 +1,623 @@
+"""Sharded multi-table predecessor lookup under ``shard_map``.
+
+A serving tier holds *many* sorted tables — one per shard of a
+partitioned keyspace — and an :class:`~repro.index.Index` is a pytree
+precisely so a tier of same-spec per-shard indexes can be **stacked
+leaf-wise** into one :class:`ShardedIndex` whose leading axis is the
+shard axis.  One ``shard_map`` over the ``tp`` logical axis of
+:class:`~repro.dist.sharding.ShardingCtx` then queries the whole tier
+with a four-stage pipeline:
+
+1. **fence** — every device holds the (tiny, replicated) fence array of
+   shard boundary keys; a branch-free lane-wide k-ary compare
+   (:func:`repro.kernels.kary_search.kary_owner_route`) assigns each
+   resident query its owner shard.  Exact fence keys route to the shard
+   that *starts* with them.
+2. **route** — queries are bucketed by owner (argsort + branch-free
+   boundary search, the ``_a2a_lookup`` pattern from
+   :mod:`repro.models.embedding`) into a capacity-factored
+   ``(n_shards, cap)`` request matrix and exchanged with ONE
+   ``lax.all_to_all``.
+3. **answer** — each shard answers the requests it owns against its
+   *resident* index leaf through the shared traceable query body
+   (:func:`repro.index.lookup_impl` — same code path as single-table
+   ``Index.lookup``, so results are bit-identical to the concatenated
+   reference), then maps local ranks to global ranks via its offset.
+4. **return** — a second ``all_to_all`` carries global ranks back to the
+   requesting device, where they are scattered into query order.
+
+**Capacity-factor overflow policy**: the request matrix gives each
+(source, owner) pair ``cap = ceil(cap_factor * B_local / n_shards)``
+slots.  Queries beyond capacity (pathologically skewed batches) are NOT
+silently mis-answered: they are dropped at the route stage and come back
+as :data:`DROPPED` (``-2``), distinguishable from the legitimate
+"before the first key" rank ``-1``.  Raise ``cap_factor`` for an
+exactness guarantee (``cap_factor >= n_shards`` can never drop).
+
+Two fallback modes complete the picture:
+
+* ``mode="allgather"`` — for small tiers: queries stay replicated, every
+  shard answers its owned subset and one ``psum`` merges the masked
+  results (collective = the (B,) rank vector, no routing latency).
+* single-device / mismatched mesh — a vmapped all-shards sweep with an
+  owner-select, bit-identical semantics with zero collectives.
+
+Heterogeneous shard sizes share one trace: local tables are padded to a
+common power-of-two length with a strictly increasing continuation of
+the last key (a clamp against the per-shard valid count restores exact
+ranks), and variable-length index leaves reuse the power-of-two sentinel
+padding idiom of :mod:`repro.index.impls`.
+
+Rebuilds swap in without host round-trips: :func:`refresh_shard` donates
+the old stacked pytree to a jitted ``.at[shard].set`` update
+(``donate_argnums=0``), recomputing offsets on device.
+"""
+
+from __future__ import annotations
+
+import json
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core.cdf import POS_DTYPE
+from repro.index import Index, count_trace, lookup_impl, registry
+from repro.index.specs import IndexSpec
+
+from . import collectives
+
+#: Rank reported for queries dropped by the capacity-factored exchange.
+DROPPED = -2
+
+_MAXKEY = np.uint64(np.iinfo(np.uint64).max)
+
+#: Static keys that hold bucketed loop trip counts: extra iterations are
+#: no-ops, so stacking may take the max across shards.
+_STEP_KEYS = ("epi", "ksteps")
+
+
+def _pow2ceil(x: int) -> int:
+    x = max(int(x), 1)
+    return 1 << (x - 1).bit_length()
+
+
+def _pad_to(arr: np.ndarray, shape: tuple) -> np.ndarray:
+    """Pad ``arr`` up to ``shape`` with inert sentinels (the impls idiom):
+    uint64 key arrays get the max-key sentinel, everything else repeats
+    its last entry (edge replication)."""
+    arr = np.asarray(arr)
+    if arr.shape == tuple(shape):
+        return arr
+    widths = [(0, t - s) for s, t in zip(arr.shape, shape)]
+    if any(w < 0 for _, w in widths):
+        raise ValueError(f"cannot shrink leaf of shape {arr.shape} to {shape}")
+    if arr.dtype == np.uint64:
+        return np.pad(arr, widths, mode="constant", constant_values=_MAXKEY)
+    return np.pad(arr, widths, mode="edge")
+
+
+def _lift_pgm_levels(idx: Index, target: int) -> Index:
+    """Lift a PGM-shaped index to ``target`` levels by prepending trivial
+    one-segment root levels.
+
+    ``build_pgm``'s recursion always terminates in a one-segment root, so
+    a synthetic root (slope 0, ``rank0 = [0, 1]``) predicts window
+    ``[0, 0]`` over the level below — the next-level search degenerates
+    to the old root and the lifted index answers identically.  This is
+    what makes PGM shard-stackable: per-shard level counts are
+    data-dependent, and the shallow shards lift to the deepest one.
+    """
+    from repro.index.impls import _pad_pow2
+
+    levels = idx.s("levels")
+    extra = target - levels
+    if extra == 0:
+        return idx
+    if extra < 0:
+        raise ValueError(f"cannot lower a PGM from {levels} to {target} levels")
+    sizes = np.asarray(idx.arrays["sizes"])
+    keys = np.asarray(idx.arrays["keys"])
+    slope = np.asarray(idx.arrays["slope"])
+    rank0 = np.asarray(idx.arrays["rank0"])
+    kv = int(sizes.sum())  # valid prefix before the pow2 sentinel pad
+    rv = int((sizes + 1).sum())
+    new_keys = np.concatenate([np.full(extra, keys[0], keys.dtype), keys[:kv]])
+    new_slope = np.concatenate([np.zeros(extra, slope.dtype), slope[:kv]])
+    synth_rank0 = np.tile(np.asarray([0, 1], rank0.dtype), extra)
+    new_rank0 = np.concatenate([synth_rank0, rank0[:rv]])
+    new_sizes = np.concatenate([np.ones(extra, sizes.dtype), sizes]).astype(np.int64)
+    arrays = dict(idx.arrays)
+    arrays["keys"] = jnp.asarray(_pad_pow2(new_keys, _MAXKEY))
+    arrays["slope"] = jnp.asarray(_pad_pow2(new_slope, 0.0))
+    arrays["rank0"] = jnp.asarray(_pad_pow2(new_rank0, new_rank0[-1]))
+    arrays["sizes"] = jnp.asarray(new_sizes)
+    arrays["off"] = jnp.asarray(np.concatenate([[0], np.cumsum(new_sizes)]).astype(np.int64))
+    arrays["off_r"] = jnp.asarray(
+        np.concatenate([[0], np.cumsum(new_sizes + 1)]).astype(np.int64),
+    )
+    static = tuple((k, target if k == "levels" else v) for k, v in idx.static)
+    return Index(idx.kind, static, arrays, info=idx.info)
+
+
+def _harmonize(kind: str, per_shard: list) -> list:
+    """Make per-shard indexes structurally stackable where the kind
+    allows it (PGM-shaped kinds: lift shallow shards to the max depth)."""
+    if registry.entry(kind).query_key == "pgm":
+        target = max(i.s("levels") for i in per_shard)
+        return [_lift_pgm_levels(i, target) for i in per_shard]
+    return per_shard
+
+
+def _merge_static(statics: list) -> tuple:
+    """Merge per-shard static aux: bucketed trip counts take the max
+    (extra bounded-search iterations are no-ops), everything structural
+    (levels, fanout, degree, ...) must agree exactly."""
+    merged = []
+    for i, (name, v0) in enumerate(statics[0]):
+        vals = [s[i][1] for s in statics]
+        if any(s[i][0] != name for s in statics):
+            raise ValueError("per-shard indexes have mismatched static keys")
+        if name in _STEP_KEYS:
+            merged.append((name, max(vals)))
+        elif len(set(vals)) != 1:
+            raise ValueError(
+                f"cannot stack: static {name!r} differs across shards ({sorted(set(vals))}); "
+                "structural statics must agree — rebuild with a shard-stable spec"
+            )
+        else:
+            merged.append((name, v0))
+    return tuple(merged)
+
+
+def stack_indexes(indexes: list) -> Index:
+    """Stack N same-spec per-shard indexes leaf-wise into one Index whose
+    leaves carry a leading shard axis.  Leaf shapes are padded to the
+    per-leaf max (power-of-two padding at build time makes collisions the
+    common case), so heterogeneous shards share one stacked structure."""
+    if not indexes:
+        raise ValueError("need at least one index to stack")
+    kinds = {i.kind for i in indexes}
+    if len(kinds) != 1:
+        raise ValueError(f"cannot stack indexes of different kinds: {sorted(kinds)}")
+    names = set(indexes[0].arrays)
+    if any(set(i.arrays) != names for i in indexes):
+        raise ValueError("per-shard indexes have mismatched leaf names")
+    static = _merge_static([i.static for i in indexes])
+    arrays = {}
+    for name in sorted(names):
+        leaves = [np.asarray(i.arrays[name]) for i in indexes]
+        if len({l_.ndim for l_ in leaves}) != 1:
+            raise ValueError(f"leaf {name!r} rank differs across shards")
+        target = tuple(max(dims) for dims in zip(*[l_.shape for l_ in leaves]))
+        arrays[name] = jnp.stack([jnp.asarray(_pad_to(l_, target)) for l_ in leaves])
+    info = {"n_shards": len(indexes), "name": f"sharded-{indexes[0].name}"}
+    return Index(indexes[0].kind, static, arrays, info)
+
+
+class ShardedIndex:
+    """A tier of per-shard learned indexes over a partitioned keyspace.
+
+    Attributes
+    ----------
+    index:   stacked :class:`Index` — every leaf has leading shard axis.
+    tables:  ``(n_shards, m)`` uint64 — per-shard sorted tables, padded
+             to a common power-of-two ``m`` (strictly increasing pad).
+    fences:  ``(n_shards,)`` uint64 — first key of each shard; the
+             router searches ``fences[1:]``.
+    counts:  ``(n_shards,)`` int64 — valid (unpadded) keys per shard.
+    offsets: ``(n_shards,)`` int64 — global rank of each shard's first
+             key (exclusive cumsum of ``counts``).
+    """
+
+    __slots__ = ("index", "tables", "fences", "counts", "offsets", "info")
+
+    def __init__(self, index: Index, tables, fences, counts, offsets, info=None):
+        object.__setattr__(self, "index", index)
+        object.__setattr__(self, "tables", tables)
+        object.__setattr__(self, "fences", fences)
+        object.__setattr__(self, "counts", counts)
+        object.__setattr__(self, "offsets", offsets)
+        object.__setattr__(self, "info", dict(info or {}))
+
+    # -- pytree protocol --------------------------------------------------
+    def tree_flatten(self):
+        children = (self.index, self.tables, self.fences, self.counts, self.offsets)
+        return children, ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children, info=None)
+
+    # -- metadata ---------------------------------------------------------
+    @property
+    def n_shards(self) -> int:
+        return int(self.tables.shape[0])
+
+    @property
+    def kind(self) -> str:
+        return self.index.kind
+
+    def __repr__(self):
+        return (
+            f"ShardedIndex(kind={self.kind!r}, n_shards={self.n_shards}, "
+            f"m={int(self.tables.shape[1])})"
+        )
+
+    def shard(self, s: int) -> Index:
+        """The per-shard Index view of shard ``s`` (sliced leaves)."""
+        return Index(
+            self.index.kind,
+            self.index.static,
+            {k: v[s] for k, v in self.index.arrays.items()},
+            info={"shard": s, **self.info},
+        )
+
+    def space_bytes(self) -> int:
+        """Model bytes across the tier + the router's fence/offset arrays."""
+        per_shard = self.shard(0).space_bytes()
+        router = self.fences.size * 8 + self.counts.size * 8 + self.offsets.size * 8
+        return self.n_shards * per_shard + router
+
+    # -- build ------------------------------------------------------------
+    @staticmethod
+    def build(kind_or_spec, table_np, n_shards: int, **params) -> "ShardedIndex":
+        """Partition a global sorted table into ``n_shards`` contiguous
+        shards, build one same-spec Index per shard, and stack."""
+        table_np = np.asarray(table_np, dtype=np.uint64)
+        n = len(table_np)
+        if n_shards < 1 or n_shards > n:
+            raise ValueError(f"n_shards={n_shards} must be in [1, {n}]")
+        if isinstance(kind_or_spec, IndexSpec):
+            spec = kind_or_spec
+        else:
+            spec = registry.spec_for(str(kind_or_spec), **params)
+        bounds = [round(i * n / n_shards) for i in range(n_shards + 1)]
+        locals_ = [table_np[bounds[i] : bounds[i + 1]] for i in range(n_shards)]
+        m = _pow2ceil(max(len(t) for t in locals_))
+        padded = [_pad_sorted_table(t, m) for t in locals_]
+        per_shard = [registry.entry(spec.kind).build(spec, p) for p in padded]
+        stacked = stack_indexes(_harmonize(spec.kind, per_shard))
+        counts = np.asarray([len(t) for t in locals_], dtype=np.int64)
+        offsets = np.concatenate([[0], np.cumsum(counts)[:-1]]).astype(np.int64)
+        fences = np.asarray([t[0] for t in locals_], dtype=np.uint64)
+        info = {"spec": spec.display_name(), "n": n, "m": m}
+        return ShardedIndex(
+            index=stacked,
+            tables=jnp.asarray(np.stack(padded)),
+            fences=jnp.asarray(fences),
+            counts=jnp.asarray(counts),
+            offsets=jnp.asarray(offsets),
+            info=info,
+        )
+
+    # -- serialization ----------------------------------------------------
+    def save(self, path) -> None:
+        """npz round-trip of the stacked tier: leaves stay bit-exact."""
+        payload = {f"idx_{k}": np.asarray(v) for k, v in self.index.arrays.items()}
+        payload.update(
+            tables=np.asarray(self.tables),
+            fences=np.asarray(self.fences),
+            counts=np.asarray(self.counts),
+            offsets=np.asarray(self.offsets),
+        )
+        meta = {
+            "kind": self.index.kind,
+            "static": list(map(list, self.index.static)),
+            "info": {k: v for k, v in self.info.items() if isinstance(v, (str, int, float, bool))},
+        }
+        payload["__meta__"] = np.frombuffer(json.dumps(meta).encode(), dtype=np.uint8)
+        np.savez(path, **payload)
+
+    @classmethod
+    def load(cls, path) -> "ShardedIndex":
+        with np.load(path) as z:
+            meta = json.loads(bytes(z["__meta__"]).decode())
+            arrays = {k[len("idx_") :]: jnp.asarray(z[k]) for k in z.files if k.startswith("idx_")}
+            tables = jnp.asarray(z["tables"])
+            fences = jnp.asarray(z["fences"])
+            counts = jnp.asarray(z["counts"])
+            offsets = jnp.asarray(z["offsets"])
+        static = tuple((k, int(v)) for k, v in meta["static"])
+        index = Index(meta["kind"], static, arrays, info=meta.get("info"))
+        return cls(index, tables, fences, counts, offsets, info=meta.get("info"))
+
+
+jax.tree_util.register_pytree_node_class(ShardedIndex)
+
+
+def _pad_sorted_table(t: np.ndarray, m: int) -> np.ndarray:
+    """Pad a local sorted table to length ``m`` with a strictly
+    increasing continuation of its last key (``last+1, last+2, ...``).
+
+    The table stays sorted *and unique*, so every per-kind builder's
+    fitting code sees a well-formed table (duplicate padding makes
+    least-squares segment fits degenerate), and the rank clamp against
+    the shard's valid count maps any hit in the padded tail back to the
+    true local predecessor (the last real key).  Padded keys may overlap
+    the next shard's key range; that is harmless because the router
+    never sends a query at or beyond the next fence to this shard.  In
+    the degenerate no-headroom case (last key at the top of the u64
+    range) the pad repeats the last key instead."""
+    if len(t) == 0:
+        raise ValueError("empty shard")
+    pad = m - len(t)
+    if pad < 0:
+        raise ValueError(f"shard has {len(t)} keys > padded capacity {m}")
+    if pad == 0:
+        return t
+    last = np.uint64(t[-1])
+    room = int(_MAXKEY) - int(last)
+    if room >= pad:
+        # spread the pad across the remaining headroom: tightly clustered
+        # pad keys make per-segment least-squares fits ill-conditioned
+        step = np.uint64(room // pad)
+        ext = last + np.arange(1, pad + 1, dtype=np.uint64) * step
+    else:
+        ext = np.full(pad, last, dtype=t.dtype)
+    return np.concatenate([t, ext])
+
+
+# ---------------------------------------------------------------------------
+# Routing + local answer
+# ---------------------------------------------------------------------------
+
+
+def route_owners(fences, queries):
+    """Owner shard per query: branch-free k-ary search on the fence
+    array (``fences[0]`` is the global min and not a boundary)."""
+    from repro.kernels.kary_search import kary_owner_route
+
+    return kary_owner_route(fences[1:], queries)
+
+
+def _answer_local(local_index: Index, local_table, count, offset, queries, backend: str):
+    """Resident-shard answer: shared per-kind lookup on the local leaf,
+    local rank clamped to the valid count and rebased to a global rank."""
+    r = lookup_impl(local_index, local_table, queries, backend)
+    r = jnp.minimum(r.astype(POS_DTYPE), count - 1)
+    return jnp.where(r < 0, jnp.asarray(-1, POS_DTYPE), offset + r)
+
+
+# ---------------------------------------------------------------------------
+# Single-device / mismatched-mesh fallback: vmapped all-shards sweep
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("backend",))
+def _lookup_vmapped(sidx: ShardedIndex, queries, backend: str):
+    count_trace(f"sharded:{sidx.kind}", f"ref:{backend}")
+    owners = route_owners(sidx.fences, queries)
+
+    def one(idx, tab, cnt, off):
+        return _answer_local(idx, tab, cnt, off, queries, backend)
+
+    granks = jax.vmap(one)(sidx.index, sidx.tables, sidx.counts, sidx.offsets)
+    return jnp.take_along_axis(granks, owners[None, :].astype(POS_DTYPE), axis=0)[0]
+
+
+# ---------------------------------------------------------------------------
+# shard_map paths: a2a exchange and allgather(psum) fallback
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("mesh", "axes", "backend", "cap"))
+def _lookup_a2a(sidx: ShardedIndex, queries, mesh, axes, backend: str, cap: int):
+    from jax.experimental.shard_map import shard_map
+
+    count_trace(f"sharded:{sidx.kind}", f"a2a:{backend}")
+    n_shards = sidx.n_shards
+    ax = axes if len(axes) > 1 else axes[0]
+
+    def block(idx, tab, cnt, off, fences, q):
+        local = jax.tree_util.tree_map(lambda v: v[0], idx)
+        b_loc = q.shape[0]
+        owner = route_owners(fences, q)
+        # bucket queries by owner into the capacity-factored request matrix
+        req, slots, valid, order = collectives.bucket_by_owner(
+            owner, q, n_shards, cap, jnp.zeros((), q.dtype)
+        )
+        # 1st all_to_all: requests travel to their owner shard
+        req_x = lax.all_to_all(req, ax, split_axis=0, concat_axis=0, tiled=True)
+        g = _answer_local(local, tab[0], cnt[0], off[0], req_x.reshape(-1), backend)
+        # 2nd all_to_all: global ranks travel back to the requesters
+        back = lax.all_to_all(g.reshape(n_shards, cap), ax, split_axis=0, concat_axis=0, tiled=True)
+        # unsort; entries that never fit a slot keep the DROPPED sentinel
+        return collectives.unbucket_inverse(back, slots, valid, order, b_loc, DROPPED)
+
+    return shard_map(
+        block,
+        mesh=mesh,
+        in_specs=(P(ax), P(ax), P(ax), P(ax), P(None), P(ax)),
+        out_specs=P(ax),
+        check_rep=False,
+    )(sidx.index, sidx.tables, sidx.counts, sidx.offsets, sidx.fences, queries)
+
+
+@partial(jax.jit, static_argnames=("mesh", "axes", "backend"))
+def _lookup_allgather(sidx: ShardedIndex, queries, mesh, axes, backend: str):
+    from jax.experimental.shard_map import shard_map
+
+    count_trace(f"sharded:{sidx.kind}", f"allgather:{backend}")
+    ax = axes if len(axes) > 1 else axes[0]
+
+    def block(idx, tab, cnt, off, fences, q):
+        local = jax.tree_util.tree_map(lambda v: v[0], idx)
+        me = lax.axis_index(axes)
+        owner = route_owners(fences, q)
+        g = _answer_local(local, tab[0], cnt[0], off[0], q, backend)
+        mine = owner.astype(jnp.int64) == me.astype(jnp.int64)
+        return lax.psum(jnp.where(mine, g, jnp.zeros_like(g)), axes)
+
+    return shard_map(
+        block,
+        mesh=mesh,
+        in_specs=(P(ax), P(ax), P(ax), P(ax), P(None), P(None)),
+        out_specs=P(None),
+        check_rep=False,
+    )(sidx.index, sidx.tables, sidx.counts, sidx.offsets, sidx.fences, queries)
+
+
+# ---------------------------------------------------------------------------
+# Public entry point
+# ---------------------------------------------------------------------------
+
+MODES = ("auto", "a2a", "allgather", "ref")
+
+#: Backends the tier's local answer supports (``Index.lookup`` minus
+#: ``pallas``, whose fused kernel is single-table only).
+TIER_BACKENDS = ("xla", "bbs", "ref")
+
+
+def sharded_lookup(
+    sidx: ShardedIndex,
+    queries,
+    ctx=None,
+    *,
+    backend: str = "xla",
+    mode: str = "auto",
+    cap_factor: float = 2.0,
+):
+    """Predecessor ranks of ``queries`` against the whole sharded tier.
+
+    ``ctx`` is a :class:`~repro.dist.sharding.ShardingCtx`; the tier is
+    laid out over its ``tp`` logical axis.  ``mode``:
+
+    * ``"a2a"`` — queries sharded over ``tp``, capacity-factored double
+      ``all_to_all`` exchange (the scale path; see the module docstring
+      for the overflow policy).
+    * ``"allgather"`` — queries replicated, masked local answers merged
+      with one ``psum`` (small-tier fallback, never drops).
+    * ``"ref"`` — vmapped all-shards sweep, no collectives (single
+      device or mesh/tier mismatch).
+    * ``"auto"`` — ``a2a`` when the mesh's ``tp`` extent matches the
+      shard count (>1), else ``ref``.
+
+    Ranks are bit-identical to ``Index.lookup`` on the concatenated
+    table, except over-capacity drops in ``a2a`` mode, which report
+    :data:`DROPPED`.
+    """
+    if mode not in MODES:
+        raise ValueError(f"unknown mode {mode!r}; choose from {MODES}")
+    if backend not in TIER_BACKENDS:
+        raise ValueError(
+            f"unknown tier backend {backend!r}; choose from {TIER_BACKENDS} "
+            "(the fused-pallas path is single-table only — it does not "
+            "compose with the vmapped/shard_map'd tier answer)"
+        )
+    queries = jnp.asarray(queries)
+    if queries.ndim != 1:
+        raise ValueError("sharded_lookup expects a flat (B,) query vector")
+    n_shards = sidx.n_shards
+    tp = ctx.n("tp") if ctx is not None else 1
+    axes = ctx.mesh_axes("tp") if ctx is not None else ()
+    spmd_ok = tp == n_shards and n_shards > 1 and bool(axes)
+    if mode == "auto":
+        mode = "a2a" if spmd_ok else "ref"
+    if mode in ("a2a", "allgather") and not spmd_ok:
+        raise ValueError(
+            f"mode={mode!r} needs the mesh tp extent ({tp}) to equal n_shards "
+            f"({n_shards}); use mode='ref' or 'auto'"
+        )
+    if mode == "ref":
+        return _lookup_vmapped(sidx, queries, backend)
+    if mode == "allgather":
+        return _lookup_allgather(sidx, queries, ctx.mesh, axes, backend)
+    b = queries.shape[0]
+    pad = (-b) % n_shards
+    if pad:
+        queries = jnp.concatenate([queries, jnp.zeros((pad,), queries.dtype)])
+    b_loc = queries.shape[0] // n_shards
+    cap = collectives.exchange_capacity(b_loc, n_shards, cap_factor)
+    out = _lookup_a2a(sidx, queries, ctx.mesh, axes, backend, cap)
+    return out[:b] if pad else out
+
+
+# ---------------------------------------------------------------------------
+# Donated in-place refresh
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("shard",), donate_argnums=(0,))
+def _install_shard(sidx: ShardedIndex, new_arrays, new_table, new_fence, new_count, shard: int):
+    arrays = {k: v.at[shard].set(new_arrays[k]) for k, v in sidx.index.arrays.items()}
+    counts = sidx.counts.at[shard].set(new_count)
+    offsets = jnp.concatenate([jnp.zeros((1,), POS_DTYPE), jnp.cumsum(counts)[:-1]])
+    return ShardedIndex(
+        index=Index(sidx.index.kind, sidx.index.static, arrays),
+        tables=sidx.tables.at[shard].set(new_table),
+        fences=sidx.fences.at[shard].set(new_fence),
+        counts=counts,
+        offsets=offsets,
+    )
+
+
+def refresh_shard(sidx: ShardedIndex, shard: int, new_index: Index, new_table) -> ShardedIndex:
+    """Swap a rebuilt shard into the tier without host round-trips.
+
+    The old stacked pytree is *donated* to a jitted ``.at[shard].set``
+    update, so the swap reuses the resident buffers instead of copying
+    the whole tier through the host; offsets are recomputed on device
+    (a rebuilt shard may change its key count).
+
+    ``new_index`` must be built with a shard-stable spec: structural
+    statics must match the tier and its (padded) leaves must fit the
+    stacked leaf shapes.  ``new_table`` is the shard's raw (unpadded)
+    sorted key array.
+    """
+    if new_index.kind != sidx.index.kind:
+        raise ValueError(f"kind mismatch: tier is {sidx.index.kind!r}, got {new_index.kind!r}")
+    if registry.entry(new_index.kind).query_key == "pgm":
+        if new_index.s("levels") < sidx.index.s("levels"):
+            new_index = _lift_pgm_levels(new_index, sidx.index.s("levels"))
+    for (name, have), (n2, new) in zip(sidx.index.static, new_index.static):
+        if name != n2:
+            raise ValueError("static key mismatch between tier and rebuilt shard")
+        if name in _STEP_KEYS:
+            if new > have:
+                raise ValueError(
+                    f"rebuilt shard needs {name}={new} > tier's {have}: restack the tier "
+                    "(a larger trip count cannot be installed without a retrace)"
+                )
+        elif new != have:
+            raise ValueError(f"static {name!r} mismatch: tier {have}, rebuilt shard {new}")
+    new_table = np.asarray(new_table, dtype=np.uint64)
+    if len(new_table) == 0:
+        raise ValueError("cannot install an empty shard")
+    m = int(sidx.tables.shape[1])
+    if len(new_table) > m:
+        raise ValueError(f"rebuilt shard has {len(new_table)} keys > tier table capacity {m}")
+    # the rebuilt key set must stay inside this shard's fence slot, or
+    # global ranks would silently go wrong for every later shard
+    if shard > 0:
+        prev_last = np.uint64(sidx.tables[shard - 1, int(sidx.counts[shard - 1]) - 1])
+        if new_table[0] <= prev_last:
+            raise ValueError(
+                f"rebuilt shard {shard} starts at {new_table[0]}, inside the previous "
+                f"shard's range (its last key is {prev_last})"
+            )
+    if shard + 1 < sidx.n_shards:
+        next_fence = np.uint64(sidx.fences[shard + 1])
+        if new_table[-1] >= next_fence:
+            raise ValueError(
+                f"rebuilt shard {shard} ends at {new_table[-1]}, at or beyond the next "
+                f"shard's fence {next_fence}"
+            )
+    padded_tab = jnp.asarray(_pad_sorted_table(new_table, m))
+    new_arrays = {}
+    for k, v in sidx.index.arrays.items():
+        if k not in new_index.arrays:
+            raise ValueError(f"rebuilt shard is missing leaf {k!r}")
+        new_arrays[k] = jnp.asarray(_pad_to(np.asarray(new_index.arrays[k]), v.shape[1:]))
+    return _install_shard(
+        sidx,
+        new_arrays,
+        padded_tab,
+        jnp.asarray(new_table[0], jnp.uint64),
+        jnp.asarray(len(new_table), POS_DTYPE),
+        shard,
+    )

@@ -63,6 +63,11 @@ class ShardingCtx:
     def __post_init__(self):
         if not self.rules:
             self.rules = _rules_for(self.profile, tuple(self.mesh.axis_names))
+        # normalise user-supplied rules: a bare string ("model") is one
+        # mesh axis, not an iterable of single-character axis names
+        self.rules = {
+            k: ((v,) if isinstance(v, str) else tuple(v or ())) for k, v in self.rules.items()
+        }
 
     # -- resolution -------------------------------------------------------
     def _resolve(self, logical):
@@ -96,11 +101,30 @@ class ShardingCtx:
             return x
         return jax.lax.with_sharding_constraint(x, self.sharding(*logical))
 
+    def mesh_axes(self, logical: str) -> tuple:
+        """Mesh axis names a logical axis resolves to (possibly empty).
+
+        shard_map callers need the *physical* axis names for collectives
+        (``lax.all_to_all``/``psum`` take mesh axes, not logical ones).
+        """
+        return tuple(self.rules.get(logical, ()))
+
     def n(self, logical: str) -> int:
-        """Number of shards a logical axis resolves to (1 if unmapped)."""
+        """Number of shards a logical axis resolves to (1 if unmapped).
+
+        Returns the resolved product over *all* mesh axes the logical
+        axis occupies — size-1-padded axes multiply in as 1 rather than
+        being dropped — and refuses to silently treat a rule that names
+        a mesh axis absent from this mesh as unmapped.
+        """
         out = 1
-        for a in self.rules.get(logical, ()):
-            out *= self.mesh.shape[a]
+        for a in self.mesh_axes(logical):
+            if a not in self.mesh.shape:
+                raise ValueError(
+                    f"logical axis {logical!r} resolves to mesh axis {a!r}, "
+                    f"which is not on this mesh (axes: {tuple(self.mesh.axis_names)})"
+                )
+            out *= int(self.mesh.shape[a])
         return out
 
 

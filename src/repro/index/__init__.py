@@ -25,7 +25,15 @@ Quick start::
     idx.save("rmi.npz"); idx2 = Index.load("rmi.npz")
 """
 
-from .index import BACKENDS, Index, build, reset_trace_counts, trace_counts
+from .index import (
+    BACKENDS,
+    Index,
+    build,
+    count_trace,
+    lookup_impl,
+    reset_trace_counts,
+    trace_counts,
+)
 from .registry import entry, kinds, spec_for
 from .specs import (
     AtomicSpec,
@@ -44,6 +52,8 @@ __all__ = [
     "BACKENDS",
     "Index",
     "build",
+    "count_trace",
+    "lookup_impl",
     "trace_counts",
     "reset_trace_counts",
     "entry",

@@ -157,7 +157,6 @@ def _build_atomic_index(spec: AtomicSpec, table_np: np.ndarray) -> Index:
 
 def _ko_intervals(idx: Index, table, q):
     a = idx.arrays
-    n = table.shape[0]
     fences = a["fences"]
     s = jnp.sum((q[..., None] >= fences[None, :]).astype(POS_DTYPE), axis=-1)
     coef = jnp.take(a["coef"], s, axis=0)

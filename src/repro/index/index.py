@@ -161,11 +161,15 @@ jax.tree_util.register_pytree_node_class(Index)
 # ---------------------------------------------------------------------------
 
 
-@partial(jax.jit, static_argnames=("backend",))
-def _lookup_jit(index: Index, table, queries, backend: str):
+def lookup_impl(index: Index, table, queries, backend: str):
+    """Traceable body of the shared lookup (no jit wrapper of its own).
+
+    Composite query paths — the shard_map'd sharded lookup, vmapped
+    multi-index sweeps — call this inside their *own* single jitted
+    function instead of nesting ``Index.lookup``'s jit, so they keep the
+    one-trace-per-kind guarantee."""
     from . import impls
 
-    _TRACE_COUNTS[(index.kind, backend)] += 1  # python side effect: runs per trace
     impl = impls.query_impl(index.kind)
 
     if backend == "ref":
@@ -174,13 +178,23 @@ def _lookup_jit(index: Index, table, queries, backend: str):
         return impl.pallas(index, table, queries)
 
     lo, hi = impl.intervals(index, table, queries)
-    if backend == "bbs":
-        from repro.core import search
-
-        return search.bounded_bbs_branchy(table, queries, lo, hi)
     from repro.core import search
 
+    if backend == "bbs":
+        return search.bounded_bbs_branchy(table, queries, lo, hi)
     return search.bounded_bfs(table, queries, lo, hi, max_window=1 << impl.epi_steps(index))
+
+
+def count_trace(kind: str, backend: str) -> None:
+    """Record one trace of a shared query path (python side effect: call
+    it from *inside* a jitted function so it fires once per trace)."""
+    _TRACE_COUNTS[(kind, backend)] += 1
+
+
+@partial(jax.jit, static_argnames=("backend",))
+def _lookup_jit(index: Index, table, queries, backend: str):
+    count_trace(index.kind, backend)  # python side effect: runs per trace
+    return lookup_impl(index, table, queries, backend)
 
 
 def build(kind_or_spec, table_np, **params) -> Index:

@@ -25,6 +25,31 @@ from .rmi_search import _le_u64, DEFAULT_TILE_Q
 LANES = 128
 
 
+def kary_owner_route(boundaries, q, *, k: int = LANES):
+    """Branch-free owner-shard selection on a fence array.
+
+    ``boundaries`` holds the first key of shards ``1..S-1`` (sorted); the
+    owner of query ``q`` is ``#{i : boundaries[i] <= q}`` in ``[0, S-1]``
+    — exact fence keys route to the shard that starts with them.  Up to
+    ``k`` fences (every realistic tier) this is ONE lane-wide compare +
+    popcount-style reduce, the same shape as a single :func:`_kary_kernel`
+    step; beyond that it falls back to k-ary splitting.
+    """
+    nb = int(boundaries.shape[0])
+    if nb == 0:
+        return jnp.zeros(q.shape, dtype=jnp.int32)
+    if nb <= k:
+        le = boundaries[None, :] <= q[:, None]
+        return jnp.sum(le.astype(jnp.int32), axis=-1)
+    from repro.core import search
+
+    lo = jnp.zeros(q.shape, dtype=jnp.int64)
+    ln = jnp.full(q.shape, nb, dtype=jnp.int64)
+    steps = max(1, int(math.ceil(math.log(nb) / math.log(k))))
+    ub = search.bounded_kary_upper_bound(boundaries, q, lo, ln, k=k, steps=steps)
+    return ub.astype(jnp.int32)
+
+
 def _kary_kernel(qhi_ref, qlo_ref, thi_ref, tlo_ref, out_ref, *, n: int, k: int, steps: int):
     qhi = qhi_ref[...]
     qlo = qlo_ref[...]

@@ -86,7 +86,6 @@ def rmi_kernel_arrays(model, table_np: np.ndarray):
     root = np.asarray(model.root_coef, dtype=np.float32)
     slopes = np.asarray(model.leaf_slope, dtype=np.float32)
     icepts = np.asarray(model.leaf_icept, dtype=np.float32)
-    r = np.asarray(model.leaf_r, dtype=np.int64)
 
     # leaf assignment with kernel arithmetic (f32)
     p_root = ((root[3] * u32 + root[2]) * u32 + root[1]) * u32 + root[0]

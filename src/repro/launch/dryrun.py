@@ -26,7 +26,6 @@ import time
 import traceback
 from pathlib import Path
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 

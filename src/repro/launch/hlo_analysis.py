@@ -22,7 +22,6 @@ Shapes in post-SPMD HLO are per-device, so every total is per-chip.
 
 from __future__ import annotations
 
-import math
 import re
 from dataclasses import dataclass, field
 
@@ -228,7 +227,6 @@ def _trip_count(cond: Computation, comps: dict) -> int:
             if o in cond.constants:
                 candidates.append(cond.constants[o])
         if not candidates and "fusion(" in root_rhs:
-            m = _CALLEE_RE.search(root_rhs)
             # wrapped compare: the scalar constant is still a cond operand
             for o in ops:
                 if o in cond.constants:

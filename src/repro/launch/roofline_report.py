@@ -99,7 +99,7 @@ def main():
         if mesh == "single":
             print(f"\n### Roofline — {mesh} mesh\n")
             print(roofline_table(rows))
-            print(f"\n### Roofline fraction\n")
+            print("\n### Roofline fraction\n")
             print(mfu_summary(rows))
 
 

@@ -13,7 +13,6 @@ pass; ``decode`` a single-token serve step against a KV cache;
 
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
 from functools import partial
 from typing import Optional

@@ -9,7 +9,6 @@ Exports the collective-overlap XLA flags a real fleet launch would set.
 from __future__ import annotations
 
 import argparse
-import os
 
 import numpy as np
 
@@ -62,7 +61,6 @@ def main():
         microbatches=args.microbatches,
     )
     bundle = steps.build_step(spec, cell, ctx, tcfg)
-    rng = np.random.default_rng(0)
 
     def batch_at(step):
         return steps.make_inputs(spec, cell, abstract=False, rng=np.random.default_rng(step))

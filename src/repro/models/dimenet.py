@@ -18,7 +18,6 @@ triplets capped at ``t_max`` per edge.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 
 import numpy as np
 import jax
@@ -163,7 +162,6 @@ def build_triplets(src: np.ndarray, dst: np.ndarray, n_nodes: int, t_max: int = 
     order = np.argsort(dst, kind="stable")
     by_dst_start = np.searchsorted(dst[order], np.arange(n_nodes + 1))
     tri_kj, tri_ji = [], []
-    in_deg = np.diff(by_dst_start)
     for ji in range(e):
         j = src[ji]
         lo, hi = by_dst_start[j], by_dst_start[j + 1]

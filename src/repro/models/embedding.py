@@ -27,8 +27,6 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.rmi import build_rmi
-
 
 def embedding_bag(table, ids, seg_ids, num_bags: int, weights=None):
     """EmbeddingBag via take + segment_sum (sum mode)."""
@@ -56,9 +54,6 @@ def sharded_lookup(table, ids, ctx, mode: str = "allreduce", cap_factor: float =
 
     if mode == "a2a":
         b = ids.shape[0]
-        n_shards = 1
-        for a in ctx.mesh.axis_names:
-            n_shards *= ctx.mesh.shape[a]
         dp = ctx.n("dp")
         pad = (-b) % dp
         if pad:
@@ -91,23 +86,17 @@ def _a2a_lookup(table, ids, ctx, cap_factor: float = 2.0):
     dp_axes = ctx.rules["dp"] or ()
 
     def block(tab, local_ids):
-        from repro.core import search
+        from repro.dist import collectives
 
         # tab: (rows_per, D); local_ids: (B_loc, F)
         flat = local_ids.reshape(-1).astype(jnp.int64)  # (N,)
         n = flat.shape[0]
         owner = jnp.clip(flat // rows_per, 0, n_shards - 1)
-        # bucket ids by owner shard: sort + branch-free boundary search
-        order = jnp.argsort(owner)
-        s_owner = jnp.take(owner, order)
-        s_ids = jnp.take(flat, order)
-        cap = max(1, int(-(-cap_factor * n // n_shards)))  # capacity-bounded
-        shard_q = jnp.arange(n_shards, dtype=s_owner.dtype)
-        bounds = search.bfs(s_owner, shard_q - 1) + 1
-        ends = search.bfs(s_owner, shard_q) + 1
-        slots = bounds[:, None] + lax.broadcasted_iota(jnp.int64, (n_shards, cap), 1)
-        valid = slots < ends[:, None]
-        req = jnp.where(valid, jnp.take(s_ids, jnp.minimum(slots, n - 1)), 0)
+        # bucket ids by owner shard into the capacity-bounded request matrix
+        cap = collectives.exchange_capacity(n, n_shards, cap_factor)
+        req, slots, valid, order = collectives.bucket_by_owner(
+            owner, flat, n_shards, cap, jnp.zeros((), flat.dtype)
+        )
 
         # 1st all_to_all: requests travel to their owner shard
         req_x = _all_to_all_flat(req, axes)  # (n_shards, cap) ids this shard owns
@@ -118,14 +107,8 @@ def _a2a_lookup(table, ids, ctx, cap_factor: float = 2.0):
         # 2nd all_to_all: vectors travel back to the requesters
         vecs_back = _all_to_all_flat(vecs, axes)
 
-        # place vectors at their sorted positions, then unsort
-        flat_slots = jnp.minimum(slots, n - 1).reshape(-1)
-        sorted_out = jnp.zeros((n, d), tab.dtype)
-        sorted_out = sorted_out.at[flat_slots].add(
-            vecs_back.reshape(-1, d) * valid.reshape(-1, 1).astype(tab.dtype)
-        )
-        inv = jnp.argsort(order)
-        out = jnp.take(sorted_out, inv, axis=0)
+        # scatter vectors back to input order (over-capacity -> zero vector)
+        out = collectives.unbucket_inverse(vecs_back, slots, valid, order, n, 0)
         return out.reshape(local_ids.shape[0], f, d)
 
     dp_spec = dp_axes if len(dp_axes) > 1 else (dp_axes[0] if dp_axes else None)
@@ -159,30 +142,80 @@ class LearnedKeyedEmbedding:
 
     Production recsys ids are 64-bit hashes; a dense table over the hash
     space is impossible and hashing-by-modulo collides.  Here the *sorted
-    unique key set* (built offline) is searched with the paper's RMI to
-    map raw id -> dense row — predecessor search on the hot path.
+    unique key set* (built offline) is searched with the paper's learned
+    index to map raw id -> dense row — predecessor search on the hot
+    path (the id-translation step).
+
+    Built with ``n_shards > 1`` and a :class:`~repro.dist.ShardingCtx`,
+    the key set is partitioned into a :class:`~repro.dist.ShardedIndex`
+    tier and id translation runs through the shard_map'd
+    :func:`repro.dist.sharded_lookup` (fence-route-answer-return) before
+    the vector gather.
     """
 
     keys: jnp.ndarray  # (V,) uint64 sorted unique raw ids
     table: jnp.ndarray  # (V+1, D) f32 — last row is the OOV vector
-    rmi: object
+    index: object = None  # repro.index.Index over ``keys`` (unsharded tier)
+    sharded: object = None  # repro.dist.ShardedIndex tier (n_shards > 1)
+    ctx: object = None  # ShardingCtx the tier is laid out on
+    cap_factor: float = 0.0  # 0 -> n_shards (exchange can never drop)
 
     @staticmethod
-    def build(raw_keys: np.ndarray, dim: int, seed: int = 0, b: int | None = None):
+    def build(
+        raw_keys: np.ndarray,
+        dim: int,
+        seed: int = 0,
+        b: int | None = None,
+        *,
+        kind: str = "RMI",
+        ctx=None,
+        n_shards: int = 1,
+        **params,
+    ):
+        from repro import index as ix
+
         keys = np.unique(raw_keys.astype(np.uint64))
         v = len(keys)
         rng = np.random.default_rng(seed)
         table = (rng.normal(0, 0.05, size=(v + 1, dim))).astype(np.float32)
-        rmi = build_rmi(keys, b=b or max(2, v // 128))
+        if kind.upper() == "RMI" and "b" not in params:
+            params["b"] = b or max(2, v // 128)
+        index = sharded = None
+        if n_shards > 1:
+            from repro.dist.sharded_index import ShardedIndex
+
+            sharded = ShardedIndex.build(kind, keys, n_shards=n_shards, **params)
+        else:
+            index = ix.build(kind, keys, **params)
         return LearnedKeyedEmbedding(
-            keys=jnp.asarray(keys), table=jnp.asarray(table), rmi=rmi
+            keys=jnp.asarray(keys),
+            table=jnp.asarray(table),
+            index=index,
+            sharded=sharded,
+            ctx=ctx,
         )
 
-    def lookup(self, raw_ids):
+    @property
+    def rmi(self):
+        """Deprecated alias for :attr:`index` (pre-unified-API name)."""
+        return self.index
+
+    def translate(self, raw_ids, *, backend: str = "xla"):
+        """Raw 64-bit ids -> predecessor ranks in the sorted key set."""
+        qf = jnp.asarray(raw_ids, dtype=jnp.uint64).reshape(-1)
+        if self.sharded is not None:
+            from repro.dist.sharded_index import sharded_lookup as tier_lookup
+
+            cap = self.cap_factor or float(self.sharded.n_shards)
+            return tier_lookup(self.sharded, qf, self.ctx, backend=backend, cap_factor=cap)
+        return self.index.lookup(self.keys, qf, backend=backend)
+
+    def lookup(self, raw_ids, *, backend: str = "xla"):
         q = jnp.asarray(raw_ids, dtype=jnp.uint64)
         shape = q.shape
         qf = q.reshape(-1)
-        rank = self.rmi.predecessor(self.keys, qf)
+        rank = self.translate(qf, backend=backend)
+        # misses (no exact key, capacity drops) fall through to OOV
         hit = (rank >= 0) & (jnp.take(self.keys, jnp.maximum(rank, 0)) == qf)
         v = self.table.shape[0] - 1
         row = jnp.where(hit, jnp.maximum(rank, 0), v)  # miss -> OOV row

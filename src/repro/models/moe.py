@@ -17,7 +17,6 @@ integration point 2), then slot tokens with pure gathers.
 from __future__ import annotations
 
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -15,13 +15,12 @@ DP.  Entry points per arch:
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Sequence, Optional
+from dataclasses import dataclass
+from typing import Sequence
 
 import numpy as np
 import jax
 import jax.numpy as jnp
-from jax import lax
 
 from . import layers as L
 from .embedding import sharded_lookup

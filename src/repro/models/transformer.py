@@ -15,9 +15,8 @@ Entry points:
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

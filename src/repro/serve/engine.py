@@ -9,6 +9,12 @@ The decode tick is one jitted ``transformer.decode_step`` over the
 padded (B, S_max) contiguous cache; per-slot positions are tracked
 host-side and masked in-device.  Greedy sampling (argmax) keeps the
 engine deterministic for tests.
+
+:meth:`DecodeEngine.metrics` exposes serving counters plus the learned
+index substrate's compile-cache telemetry
+(``repro.index.trace_counts()``): a serving loop that accidentally
+fragments the shared jitted lookup shows up as a climbing trace count,
+the same signal the benchmark-smoke CI gate asserts on.
 """
 
 from __future__ import annotations
@@ -21,7 +27,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import transformer
-from repro.models import layers as L
 
 
 @dataclass
@@ -46,11 +51,29 @@ class DecodeEngine:
         self.queue: List[Request] = []
         self._decode = jax.jit(self._decode_impl)
         self._prefill_tok = jax.jit(self._prefill_one)
+        self.ticks = 0
+        self.tokens_decoded = 0
+        self.requests_finished = 0
+
+    def metrics(self) -> dict:
+        """Serving counters + learned-index trace-count telemetry."""
+        from repro import index as ix
+
+        return {
+            "ticks": self.ticks,
+            "tokens_decoded": self.tokens_decoded,
+            "requests_finished": self.requests_finished,
+            "queued": len(self.queue),
+            "live_slots": sum(r is not None for r in self.slot_req),
+            "index_traces": sum(ix.trace_counts().values()),
+            "index_trace_counts": {
+                f"{kind}/{backend}": n for (kind, backend), n in sorted(ix.trace_counts().items())
+            },
+        }
 
     # -- device fns --------------------------------------------------------
     def _decode_impl(self, params, cache, tokens, pos_per_slot):
         """One token for every slot; per-slot positions via vmapped mask."""
-        dt = L.dtype_of(self.cfg.dtype)
         # decode_step uses a single scalar pos; run it at max(pos) and mask
         # per-slot validity host-side (slots are kept position-aligned per
         # admission wave; simple and production-adequate for benches).
@@ -94,13 +117,16 @@ class DecodeEngine:
             self.params, self.cache, jnp.asarray(toks), jnp.asarray(self.slot_pos)
         )
         logits = np.asarray(logits)
+        self.ticks += 1
         for s in live:
             req = self.slot_req[s]
             nxt = int(np.argmax(logits[s]))
             req.out_tokens.append(nxt)
             self.slot_pos[s] += 1
+            self.tokens_decoded += 1
             if len(req.out_tokens) >= req.max_new_tokens or self.slot_pos[s] >= self.max_seq - 1:
                 req.done = True
+                self.requests_finished += 1
                 self.slot_req[s] = None
         return True
 

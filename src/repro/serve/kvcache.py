@@ -11,10 +11,9 @@ layout that the Pallas flash-decode kernel consumes.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
 from repro.core.pgm import build_pgm

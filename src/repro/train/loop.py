@@ -19,8 +19,6 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
-import jax
-
 from . import checkpoint
 
 

@@ -116,7 +116,6 @@ def adafactor_update(grads, state, params, cfg: AdafactorConfig, lr_scale=1.0):
         u = u / jnp.maximum(1.0, rms / cfg.clip_threshold)
         return v_n, (p.astype(jnp.float32) - lr * u).astype(p.dtype)
 
-    is_leaf = lambda x: hasattr(x, "shape")
     flat_g, tdef = jax.tree_util.tree_flatten(grads)
     flat_v = state["v"]
     # walk the v-tree in the same flattened order

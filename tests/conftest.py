@@ -1,9 +1,41 @@
+import os
+
 import numpy as np
 import pytest
 
 import repro  # noqa: F401  — enables x64 before any test imports jax
 
 from repro.core import as_table
+
+
+def selected_backends() -> tuple:
+    """Query backends under test, selectable via ``REPRO_TEST_BACKENDS``.
+
+    The CI matrix runs one leg per backend (``REPRO_TEST_BACKENDS=xla``,
+    ``bbs``, ``ref``); unset or empty means every registered backend
+    (local full runs, the multihost CI leg).  Comma-separated, order
+    preserved, unknown names fail loudly rather than silently testing
+    nothing.
+    """
+    from repro.index import BACKENDS
+
+    raw = os.environ.get("REPRO_TEST_BACKENDS", "").strip()
+    if not raw:
+        return tuple(BACKENDS)
+    sel = tuple(b.strip() for b in raw.split(",") if b.strip())
+    unknown = [b for b in sel if b not in BACKENDS]
+    if unknown:
+        raise ValueError(
+            f"REPRO_TEST_BACKENDS names unknown backends {unknown}; known: {BACKENDS}"
+        )
+    return sel
+
+
+def pytest_generate_tests(metafunc):
+    # any test taking a ``backend`` argument fans out over the selected
+    # backends — the hook the CI backend matrix drives
+    if "backend" in metafunc.fixturenames:
+        metafunc.parametrize("backend", selected_backends())
 
 
 @pytest.fixture(scope="session")

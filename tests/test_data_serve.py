@@ -2,8 +2,6 @@
 
 import numpy as np
 import jax
-import jax.numpy as jnp
-import pytest
 
 from repro.data import distributions, pipeline, sampler, tables
 from repro.serve.engine import DecodeEngine, Request
@@ -91,3 +89,10 @@ def test_decode_engine_continuous_batching():
     assert all(r.done for r in reqs)
     assert all(len(r.out_tokens) >= 4 for r in reqs)
     assert ticks < 200
+    m = eng.metrics()
+    assert m["requests_finished"] == 5
+    assert m["tokens_decoded"] >= 5 * 3  # first token comes from prefill
+    assert m["queued"] == 0 and m["live_slots"] == 0
+    # learned-index trace telemetry rides along (dict, possibly empty)
+    assert isinstance(m["index_trace_counts"], dict)
+    assert m["index_traces"] == sum(m["index_trace_counts"].values())

@@ -11,7 +11,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro import index as ix
-from repro.core import as_table, true_ranks
+from repro.core import true_ranks
 from repro.core.rmi import build_rmi
 from repro.kernels import ops, ref
 

@@ -45,7 +45,6 @@ def test_predecessor_invariant(keys, queries):
         # interval soundness
         lo, hi = m.intervals(tj, qj)
         lo, hi = np.asarray(lo), np.asarray(hi)
-        clipped = np.clip(want, 0, len(table) - 1)
         assert (lo <= np.maximum(want, 0)).all() or (want < 0).any() is not None
         inside = (want < lo - 1) & (want >= 0)
         assert not inside.any(), (kind, "window missed predecessor")

@@ -8,14 +8,6 @@ import pytest
 
 from repro.dist import collectives
 from repro.train import TrainConfig, checkpoint, init_train_state, loop, make_train_step
-from repro.train.optimizer import (
-    AdamWConfig,
-    adafactor_init,
-    adafactor_update,
-    AdafactorConfig,
-    adamw_init,
-    adamw_update,
-)
 
 
 def quad_loss(params, batch):
