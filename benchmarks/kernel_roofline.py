@@ -39,7 +39,11 @@ def run():
     # + window gathers: steps x 8B limb pairs + result(4)
     traffic = nq * (4 + 8 + 24 + kidx.steps * 8 + 4)
     t_mem = traffic / HBM_BW
-    emit("kernel/rmi_search/v5e_mem_bound", t_mem / nq * 1e6, f"steps={kidx.steps};bytes/q={traffic / nq:.0f}")
+    emit(
+        "kernel/rmi_search/v5e_mem_bound",
+        t_mem / nq * 1e6,
+        f"steps={kidx.steps};bytes/q={traffic / nq:.0f}",
+    )
     xla = jax.jit(lambda t, q: m.predecessor(t, q))
     dt = time_fn(xla, jnp.asarray(table), jnp.asarray(qs))
     emit("kernel/rmi_search/xla_cpu", dt / nq * 1e6, "functional fallback")
@@ -54,7 +58,11 @@ def run():
 
     # binary-search baseline traffic: ceil(log2 n) dependent 8B gathers
     steps_b = math.ceil(math.log2(n))
-    emit("kernel/bfs_baseline/v5e_mem_bound", nq * (8 + steps_b * 8 + 4) / HBM_BW / nq * 1e6, f"steps={steps_b}")
+    emit(
+        "kernel/bfs_baseline/v5e_mem_bound",
+        nq * (8 + steps_b * 8 + 4) / HBM_BW / nq * 1e6,
+        f"steps={steps_b}",
+    )
 
     # ---- embedding bag ----
     v, d, items, bags = 4096, 128, 8192, 1024
@@ -65,7 +73,11 @@ def run():
     flops = 2.0 * items * v * d / 512 * 512  # one-hot matmuls dominate
     t_cmp = (2.0 * items * v + 2.0 * bags * items * d) / PEAK_FLOPS
     t_memb = (v * d * 4 + items * (4 + 4 + 4) + bags * d * 4) / HBM_BW
-    emit("kernel/embedding_bag/v5e_bound", max(t_cmp, t_memb) * 1e6, f"dominant={'compute' if t_cmp > t_memb else 'memory'}")
+    emit(
+        "kernel/embedding_bag/v5e_bound",
+        max(t_cmp, t_memb) * 1e6,
+        f"dominant={'compute' if t_cmp > t_memb else 'memory'}",
+    )
     from repro.kernels import ref
 
     xla = jax.jit(lambda t, i, s, ww: ref.embedding_bag_ref(t, i, s, ww, bags))

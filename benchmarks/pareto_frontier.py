@@ -1,0 +1,131 @@
+"""Time-space Pareto frontier of every registered index kind.
+
+The paper's core claim — space, not accuracy, is the key to learned
+index efficiency — as one artifact: the registry-derived candidate grid
+(:func:`repro.tune.pareto.candidate_grid`) is built through the batched
+builder, each candidate is measured (model bytes, jit-timed lookup
+latency through the shared query path), and the non-dominated frontier
+plus the bi-criteria budget picks are emitted as a JSON report per
+(dataset, tier)::
+
+    REPRO_BENCH_SCALE=0.01 PYTHONPATH=src \
+        python -m benchmarks.pareto_frontier --json pareto_frontier.json
+
+``--check`` turns the report into a CI gate: every frontier must be
+non-empty and monotone (space strictly increasing, latency strictly
+decreasing along it), every candidate exact, and every budget pick's
+built ``space_bytes`` within its budget.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro import index as ix
+from repro.tune import pareto
+
+from .common import bench_tables, emit
+
+BUDGET_PCTS = (0.7, 2.0, 10.0)
+
+
+def run(
+    tiers=("L1",),
+    datasets=("amzn64", "osm"),
+    n_queries: int = 4096,
+    backend: str = "xla",
+    budget_pcts=BUDGET_PCTS,
+):
+    ix.reset_trace_counts()
+    reports = {}
+    for bt in bench_tables():
+        if bt.tier not in tiers or bt.dataset not in datasets:
+            continue
+        cands = pareto.sweep(
+            bt.table, n_queries=n_queries, backend=backend, check_exact=True
+        )
+        front = pareto.pareto_frontier(cands)
+        report = pareto.frontier_report(
+            bt.table,
+            cands,
+            front,
+            budget_pcts=budget_pcts,
+            extra={"dataset": bt.dataset, "tier": bt.tier},
+        )
+        reports[bt.name] = report
+        for c in front:
+            emit(
+                f"pareto/{bt.name}/{c.spec.display_name()}",
+                c.ns_per_query / 1e3,
+                f"space={c.space_bytes}B;pct={c.space_pct_of(len(bt.table)):.4f}",
+            )
+    traces = {f"{k}/{b}": v for (k, b), v in sorted(ix.trace_counts().items())}
+    return {
+        "reports": reports,
+        "trace_counts": traces,
+        "total_traces": sum(traces.values()),
+    }
+
+
+def check(out: dict) -> list:
+    """Frontier-sanity gate; returns a list of failure strings."""
+    fails = []
+    for name, rep in out["reports"].items():
+        front = rep["frontier"]
+        if not front:
+            fails.append(f"{name}: empty frontier")
+            continue
+        spaces = [c["space_bytes"] for c in front]
+        times = [c["ns_per_query"] for c in front]
+        if spaces != sorted(spaces) or len(set(spaces)) != len(spaces):
+            fails.append(f"{name}: frontier space not strictly increasing: {spaces}")
+        if any(times[i] <= times[i + 1] for i in range(len(times) - 1)):
+            fails.append(f"{name}: frontier latency not strictly decreasing: {times}")
+        inexact = [c["kind"] for c in rep["candidates"] if not c["exact"]]
+        if inexact:
+            fails.append(f"{name}: inexact candidates {inexact}")
+        for pct, pick in rep["budget_picks"].items():
+            budget = float(pct) / 100.0 * rep["table_bytes"]
+            if pick["space_bytes"] > budget:
+                fails.append(
+                    f"{name}: pick {pick['kind']} at {pct}% is {pick['space_bytes']}B "
+                    f"> budget {budget:.0f}B"
+                )
+    return fails
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiers", default="L1", help="comma-separated tier names")
+    ap.add_argument("--datasets", default="amzn64,osm")
+    ap.add_argument("--queries", type=int, default=4096)
+    ap.add_argument("--backend", default="xla")
+    ap.add_argument("--budgets", default=",".join(str(p) for p in BUDGET_PCTS))
+    ap.add_argument("--json", default=None, help="write the JSON report here")
+    ap.add_argument("--check", action="store_true", help="fail on frontier-sanity violations")
+    args = ap.parse_args()
+    out = run(
+        tiers=tuple(t for t in args.tiers.split(",") if t),
+        datasets=tuple(d for d in args.datasets.split(",") if d),
+        n_queries=args.queries,
+        backend=args.backend,
+        budget_pcts=tuple(float(p) for p in args.budgets.split(",") if p),
+    )
+    text = json.dumps(out, indent=2)
+    if args.json:
+        with open(args.json, "w") as f:
+            f.write(text + "\n")
+    print(text)
+    if args.check:
+        fails = check(out)
+        if fails:
+            for f in fails:
+                print(f"FRONTIER GATE: {f}", file=sys.stderr)
+            sys.exit(1)
+        print(f"frontier gate: OK ({len(out['reports'])} reports)")
+
+
+if __name__ == "__main__":
+    main()

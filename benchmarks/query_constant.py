@@ -42,7 +42,9 @@ def run(tiers=None, datasets=None):
             dt = time_fn(fn, tj, qj)
             emit(f"query_const/{bt.name}/{name}", dt / nq * 1e6, "rf=0")
             results.append((bt.name, name, dt / nq))
-        dt = time_fn(jax.jit(lambda l, r, q: search.bfe(l, r, q, height=h, n=len(table))), lj, rj, qj)
+        dt = time_fn(
+            jax.jit(lambda l, r, q: search.bfe(l, r, q, height=h, n=len(table))), lj, rj, qj
+        )
         emit(f"query_const/{bt.name}/BFE", dt / nq * 1e6, "rf=0")
         results.append((bt.name, "BFE", dt / nq))
 

@@ -18,6 +18,7 @@ def main() -> None:
 
     from . import (
         kernel_roofline,
+        pareto_frontier,
         query_constant,
         query_parametric,
         sy_rmi_mining,
@@ -32,6 +33,7 @@ def main() -> None:
         ("sy_rmi_mining", sy_rmi_mining.run),  # paper Fig 4
         ("synoptic", synoptic.run),  # paper supp Table 6
         ("kernel_roofline", kernel_roofline.run),  # TPU kernel terms
+        ("pareto_frontier", pareto_frontier.run),  # bi-criteria tuner frontier
     ]
     for name, fn in suites:
         if args.only and args.only not in name:

@@ -1,9 +1,13 @@
 """Paper Figure 4: SY-RMI identification — per-tier winner histogram,
-UB (branching factor per byte), and mining time vs sweep time."""
+UB (branching factor per byte), and mining time vs sweep time.
+
+Mining runs on the batched grid builder (:mod:`repro.tune.mining`):
+every root type at one branching factor shares a single vmapped
+leaf-fit trace and all candidates share the jitted lookup."""
 
 from __future__ import annotations
 
-from repro.core.sy_rmi import mine_sy_rmi
+from repro.tune import mine_sy_rmi
 
 from .common import TIERS, bench_tables, emit
 

@@ -73,6 +73,27 @@ def main():
     print("paper's headline: SY-RMI / bi-criteria PGM at 0.05-2% space beat")
     print("plain binary search; space — not accuracy — is the key to efficiency.")
 
+    # --- budget-based selection: don't name an index, name a budget ------
+    # repro.tune sweeps the registry-derived candidate grid (batched
+    # builds, shared lookup traces), mines the time-space Pareto
+    # frontier, and generalises the paper's bi-criteria PGM selection to
+    # every registered kind.
+    from repro import tune
+
+    cands = tune.sweep(table, queries=queries[:4096], reps=2)
+    front = tune.pareto_frontier(cands)
+    print(f"\nPareto frontier ({len(cands)} candidates swept):")
+    for c in front:
+        print(
+            f"  {c.spec.display_name():32s} {c.space_bytes:>10,}B "
+            f"{c.space_pct_of(len(table)):7.3f}% {c.ns_per_query:8.1f} ns/q"
+        )
+    print("best spec per space budget (bi-criteria selection, all kinds):")
+    for pct in (0.05, 0.7, 2.0, 10.0):
+        best = tune.best_candidate_for_budget(cands, len(table), pct)
+        assert best is not None and best.space_bytes <= pct / 100 * len(table) * 8
+        print(f"  {pct:5.2f}% budget -> {best.spec.display_name()} ({best.space_bytes:,}B)")
+
 
 if __name__ == "__main__":
     main()

@@ -56,8 +56,10 @@ def main():
     pool.add_sequence(0)
     pool.ensure_capacity(0, 100)
     pages, offs = pool.position_lookup(0, np.array([0, 15, 16, 99]))
-    print(f"[serve_lm] paged-KV learned lookup: positions [0,15,16,99] -> pages {np.asarray(pages)}, "
-          f"offsets {np.asarray(offs)}; pool util {pool.utilization():.2f}")
+    print(
+        f"[serve_lm] paged-KV learned lookup: positions [0,15,16,99] -> pages "
+        f"{np.asarray(pages)}, offsets {np.asarray(offs)}; pool util {pool.utilization():.2f}"
+    )
 
 
 if __name__ == "__main__":

@@ -64,7 +64,9 @@ def main():
     t0 = time.time()
     state, report = loop.run(
         step_fn, state, batcher.batch_at,
-        loop.LoopConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir, ckpt_every=50, log_every=10),
+        loop.LoopConfig(
+            total_steps=args.steps, ckpt_dir=args.ckpt_dir, ckpt_every=50, log_every=10
+        ),
     )
     dt = time.time() - t0
     toks = args.steps * p["batch"] * p["seq"]

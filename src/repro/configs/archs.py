@@ -75,7 +75,9 @@ def _lm_spec(cfg):
             ShapeCell("train_4k", "train", {"seq_len": 64, "global_batch": 4}),
             ShapeCell("prefill_32k", "prefill", {"seq_len": 128, "global_batch": 2}),
             ShapeCell("decode_32k", "decode", {"seq_len": 128, "global_batch": 4}),
-            ShapeCell("long_500k", "decode", {"seq_len": 256, "global_batch": 1, "seq_shard": True}),
+            ShapeCell(
+                "long_500k", "decode", {"seq_len": 256, "global_batch": 1, "seq_shard": True}
+            ),
         )
         return ArchSpec(cfg.name, "lm", _lm_reduced(cfg), shapes)
 
@@ -104,10 +106,26 @@ def _dimenet_full():
 def _dimenet_reduced():
     cfg = replace(DIMENET, n_blocks=2, d_hidden=32, n_bilinear=4, n_spherical=3, n_radial=4)
     shapes = (
-        ShapeCell("full_graph_sm", "graph_train", {"n_nodes": 64, "n_edges": 256, "d_feat": 32, "n_out": 7, "t_max": 3}),
-        ShapeCell("minibatch_lg", "graph_train", {"n_nodes": 124, "n_edges": 240, "d_feat": 16, "n_out": 5, "t_max": 3}),
-        ShapeCell("ogb_products", "graph_train", {"n_nodes": 128, "n_edges": 512, "d_feat": 16, "n_out": 8, "t_max": 2}),
-        ShapeCell("molecule", "graph_train", {"n_nodes": 10 * 4, "n_edges": 20 * 4, "n_graphs": 4, "t_max": 3, "energy": True}),
+        ShapeCell(
+            "full_graph_sm",
+            "graph_train",
+            {"n_nodes": 64, "n_edges": 256, "d_feat": 32, "n_out": 7, "t_max": 3},
+        ),
+        ShapeCell(
+            "minibatch_lg",
+            "graph_train",
+            {"n_nodes": 124, "n_edges": 240, "d_feat": 16, "n_out": 5, "t_max": 3},
+        ),
+        ShapeCell(
+            "ogb_products",
+            "graph_train",
+            {"n_nodes": 128, "n_edges": 512, "d_feat": 16, "n_out": 8, "t_max": 2},
+        ),
+        ShapeCell(
+            "molecule",
+            "graph_train",
+            {"n_nodes": 10 * 4, "n_edges": 20 * 4, "n_graphs": 4, "t_max": 3, "energy": True},
+        ),
     )
     return ArchSpec("dimenet", "gnn", cfg, shapes)
 

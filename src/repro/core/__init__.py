@@ -21,10 +21,22 @@ from .builder import build_index, model_reduction_factor
 from .cdf import as_table, reduction_factor, true_ranks
 
 __all__ = [
-    "atomic", "btree", "builder", "cdf", "kbfs", "pgm", "radix_spline",
-    "rmi", "search", "sy_rmi",
-    "KINDS", "build_index", "model_reduction_factor",
-    "as_table", "reduction_factor", "true_ranks",
+    "atomic",
+    "btree",
+    "builder",
+    "cdf",
+    "kbfs",
+    "pgm",
+    "radix_spline",
+    "rmi",
+    "search",
+    "sy_rmi",
+    "KINDS",
+    "build_index",
+    "model_reduction_factor",
+    "as_table",
+    "reduction_factor",
+    "true_ranks",
 ]
 
 

@@ -78,7 +78,8 @@ def poly_exact_eps(
             j = int(np.searchsorted(u_keys, uc, side="right")) - 1
             j = min(max(j, 0), len(ranks) - 1)
             pc = float(poly_eval_np(coef, np.array([uc]))[0])
-            eps_crit = max(eps_crit, abs(pc - ranks[j]), abs(pc - (ranks[j] + 1 if j + 1 < len(ranks) else ranks[j])))
+            nxt = ranks[j] + 1 if j + 1 < len(ranks) else ranks[j]
+            eps_crit = max(eps_crit, abs(pc - ranks[j]), abs(pc - nxt))
     return int(np.ceil(max(eps_keys, eps_crit))) + 1
 
 

@@ -19,6 +19,7 @@ import time
 from dataclasses import dataclass
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from . import search
@@ -84,6 +85,105 @@ class RMIModel:
         # slope + intercept (f64) + eps (i32) + rank fence (i64) per leaf
         # (the fence backs the correctness guarantee), + root.
         return self.b * (8 + 8 + 4 + 8) + 32 + 24
+
+
+def rmi_leaf_fit(u, root_coef, b: int):
+    """Array-native leaf fit: the jittable/vmappable core of ``build_rmi``.
+
+    Given the normalised keys ``u`` (f64, sorted) and a fitted monotone
+    root polynomial, performs the whole leaf stage on device — leaf
+    assignment, per-leaf least-squares via segment sums, extended-window
+    error bounds — mirroring the NumPy pipeline in :func:`build_rmi`
+    op-for-op.  ``vmap`` over ``(u, root_coef)`` builds many same-shape
+    RMIs in ONE trace (the batched-build path of :mod:`repro.tune`).
+
+    Floats can differ from the host fit by a few ulp (XLA scatter-add
+    reduction order vs ``np.bincount``'s sequential sums), but the error
+    bounds are measured against *this* fit's own predictions with the
+    same arithmetic the query path uses, so the predicted windows remain
+    guarantees and predecessor ranks are bit-identical either way.
+
+    Returns ``(slopes, icepts, eps, r)`` with shapes ``(b,)``/``(b+1,)``.
+    """
+    n = u.shape[0]
+    ranks = jnp.arange(n, dtype=jnp.float64)
+    p = poly_eval_jnp(root_coef, u)
+    leaf_of = jnp.clip(jnp.floor(p * (b / n)), 0, b - 1).astype(jnp.int64)
+    seg = jax.lax.cummax(leaf_of, axis=0)  # enforce monotone against fp jitter
+    r = jnp.searchsorted(seg, jnp.arange(b + 1, dtype=jnp.int64), side="left").astype(jnp.int64)
+    # vectorised per-leaf linear fits via segment sums (one scatter-add each)
+    z = jnp.zeros(b, dtype=jnp.float64)
+    cnt = z.at[seg].add(1.0)
+    su = z.at[seg].add(u)
+    sr = z.at[seg].add(ranks)
+    suu = z.at[seg].add(u * u)
+    sur = z.at[seg].add(u * ranks)
+    var = cnt * suu - su * su
+    cov = cnt * sur - su * sr
+    nz = (cnt > 1) & (var > 1e-30)
+    slopes = jnp.where(nz, jnp.maximum(cov / jnp.where(nz, var, 1.0), 0.0), 0.0)
+    icepts = jnp.where(nz, (sr - slopes * su) / jnp.where(nz, cnt, 1.0), 0.0)
+    icepts = jnp.where(cnt == 1, sr, icepts)
+    icepts = jnp.where(cnt == 0, r[:-1].astype(jnp.float64), icepts)  # predict range start
+    # per-leaf eps over rank range extended by one key each side
+    pred = slopes[seg] * u + icepts[seg]
+    eps_core = z.at[seg].max(jnp.abs(pred - ranks))
+    lo_idx = jnp.clip(r[:-1] - 1, 0, n - 1)
+    hi_idx = jnp.clip(r[1:], 0, n - 1)
+    err_lo = jnp.abs(slopes * u[lo_idx] + icepts - ranks[lo_idx])
+    err_hi = jnp.abs(slopes * u[hi_idx] + icepts - ranks[hi_idx])
+    eps_f = jnp.maximum(eps_core, jnp.maximum(err_lo, err_hi))
+    eps = jnp.ceil(jnp.minimum(eps_f, float(1 << 40))).astype(jnp.int64) + 1
+    return slopes, icepts, eps, r
+
+
+def fit_root(table_np: np.ndarray, root_type: str) -> tuple:
+    """Host root fit of ``build_rmi`` exposed for the batched builder.
+
+    Returns ``(root_coef, kmin, inv_span)`` — everything the array-native
+    leaf stage (:func:`rmi_leaf_fit`) needs.
+    """
+    n = len(table_np)
+    kmin, kmax = table_np[0], table_np[-1]
+    span = np.float64(kmax - kmin)
+    inv_span = np.float64(1.0) / span if span > 0 else np.float64(1.0)
+    u = (table_np.astype(np.float64) - np.float64(kmin)) * inv_span
+    ranks = np.arange(n, dtype=np.float64)
+    return _fit_root(u, ranks, root_type), np.float64(kmin), inv_span
+
+
+def assemble_rmi(
+    table_np: np.ndarray,
+    root_type: str,
+    root_coef: np.ndarray,
+    kmin: np.float64,
+    inv_span: np.float64,
+    slopes: np.ndarray,
+    icepts: np.ndarray,
+    eps: np.ndarray,
+    r: np.ndarray,
+    build_time: float = 0.0,
+) -> RMIModel:
+    """Assemble an :class:`RMIModel` from leaf-fit arrays (batched path)."""
+    b = len(slopes)
+    width = np.diff(r)  # leaf rank-range widths (+3: one-ulp fence slack)
+    max_window = int(np.max(np.minimum(2 * eps + 3, width + 3))) if b else 1
+    return RMIModel(
+        root_type=root_type,
+        root_coef=jnp.asarray(root_coef),
+        b=b,
+        leaf_slope=jnp.asarray(slopes),
+        leaf_icept=jnp.asarray(icepts),
+        leaf_eps=jnp.asarray(eps),
+        leaf_r=jnp.asarray(r),
+        kmin=jnp.float64(kmin),
+        inv_span=jnp.float64(inv_span),
+        max_eps=int(eps.max()) if b else 0,
+        max_window_=max_window,
+        n=len(table_np),
+        build_time=build_time,
+        name=f"RMI[{root_type},b={b}]",
+    )
 
 
 def _fit_root(u: np.ndarray, ranks: np.ndarray, root_type: str) -> np.ndarray:

@@ -90,29 +90,22 @@ def mine_sy_rmi(
     seed: int = 0,
     max_models: int = 10,
 ) -> SyRMIResult:
-    """Full mining pass over a set of same-tier tables (paper §4)."""
-    rng = np.random.default_rng(seed)
-    t0 = time.perf_counter()
-    all_models, votes, sizes, times_all = [], [], [], []
-    for table in tables:
-        models = cdfshop_sweep(table, max_models=max_models)
-        all_models.extend(models)
-        nq = max(16, int(n_queries * query_frac))
-        queries = rng.choice(table, size=nq, replace=True)
-        winner, times = pick_winner(models, table, queries)
-        votes.append(winner)
-        sizes.append([m.space_bytes() for m in models])
-        times_all.append(times)
-    ub = mine_ub(all_models)
-    # relative majority of per-table winners
-    roots, counts = np.unique(votes, return_counts=True)
-    winner_root = str(roots[np.argmax(counts)])
-    return SyRMIResult(
-        ub=ub,
-        winner_root=winner_root,
-        sweep_sizes=sizes,
-        sweep_times=times_all,
-        mining_time=time.perf_counter() - t0,
+    """Full mining pass over a set of same-tier tables (paper §4).
+
+    Delegates to :func:`repro.tune.mining.mine_sy_rmi` — the mining
+    procedure now runs on the batched grid builder (one vmapped
+    leaf-fit trace per branching factor, shared jitted lookup timing)
+    so mining and Pareto tuning share one engine.  Import is lazy to
+    keep ``repro.core`` free of upward dependencies.
+    """
+    from repro.tune.mining import mine_sy_rmi as _mine
+
+    return _mine(
+        tables,
+        query_frac=query_frac,
+        n_queries=n_queries,
+        seed=seed,
+        max_models=max_models,
     )
 
 

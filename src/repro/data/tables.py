@@ -99,7 +99,9 @@ def make_bench_tables(
     out = []
     max_n = max(tiers.values())
     for ds in datasets:
-        parent = distributions.generate(ds, int(max_n * scale) if scale != 1.0 else max_n, seed=seed)
+        parent = distributions.generate(
+            ds, int(max_n * scale) if scale != 1.0 else max_n, seed=seed
+        )
         for tier, n in tiers.items():
             n_eff = max(16, int(n * scale))
             if n_eff >= len(parent):

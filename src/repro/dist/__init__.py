@@ -11,7 +11,15 @@ collectively under ``shard_map`` (fence-route-answer-return pipeline).
 
 from . import collectives, sharded_index, sharding
 from .collectives import OVERLAP_XLA_FLAGS, apply_grad_compression, compressed_grad_leaf
-from .sharded_index import DROPPED, ShardedIndex, refresh_shard, sharded_lookup, stack_indexes
+from .sharded_index import (
+    DROPPED,
+    ShardedIndex,
+    refresh_shard,
+    reset_tier_metrics,
+    sharded_lookup,
+    stack_indexes,
+    tier_metrics,
+)
 from .sharding import ShardingCtx, single_device_ctx
 
 __all__ = [
@@ -26,6 +34,8 @@ __all__ = [
     "DROPPED",
     "ShardedIndex",
     "refresh_shard",
+    "reset_tier_metrics",
     "sharded_lookup",
     "stack_indexes",
+    "tier_metrics",
 ]

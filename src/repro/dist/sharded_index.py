@@ -73,6 +73,80 @@ from . import collectives
 #: Rank reported for queries dropped by the capacity-factored exchange.
 DROPPED = -2
 
+# ---------------------------------------------------------------------------
+# Tier telemetry: routing imbalance + drop-rate counters
+# ---------------------------------------------------------------------------
+
+_TIER_METRICS: dict = {}
+
+
+def _fresh_tier_metrics() -> dict:
+    return {
+        "lookups": 0,
+        "queries": 0,
+        "dropped": 0,
+        "routed_max": 0,  # busiest shard's queries, summed over lookups
+        "routed_even": 0.0,  # perfectly even per-shard load, summed
+        "imbalance_last": 0.0,
+        "imbalance_peak": 0.0,
+    }
+
+
+def reset_tier_metrics() -> None:
+    _TIER_METRICS.clear()
+    _TIER_METRICS.update(_fresh_tier_metrics())
+
+
+reset_tier_metrics()
+
+
+def derived_tier_metrics(counters: dict) -> dict:
+    """Raw routing counters + the derived rates (drop rate, mean
+    imbalance) — shared by the global view and per-tier sinks."""
+    m = dict(counters)
+    m["drop_rate"] = m["dropped"] / m["queries"] if m["queries"] else 0.0
+    m["imbalance_mean"] = m["routed_max"] / m["routed_even"] if m["routed_even"] else 0.0
+    return m
+
+
+def tier_metrics() -> dict:
+    """Routing-imbalance and drop-rate counters across every telemetry-
+    enabled :func:`sharded_lookup` in the process since the last reset.
+
+    ``imbalance_*`` is the busiest shard's load over the perfectly even
+    load (1.0 = uniform routing; ``n_shards`` = fully skewed);
+    ``drop_rate`` is the fraction of queries returned as
+    :data:`DROPPED` by the capacity-factored exchange.  Surfaced by
+    ``DecodeEngine.metrics()`` next to the lookup trace counts.  A
+    caller serving several tiers passes its own ``telemetry_sink`` to
+    :func:`sharded_lookup` for per-tier attribution (the global view
+    here aggregates all of them).
+    """
+    return derived_tier_metrics(_TIER_METRICS)
+
+
+@partial(jax.jit, static_argnames=("n_shards",))
+def _owner_histogram(fences, queries, n_shards: int):
+    owners = route_owners(fences, queries)
+    return jnp.bincount(owners.astype(jnp.int32), length=n_shards)
+
+
+def _record_tier_metrics(sidx: "ShardedIndex", queries, out, sink: dict | None = None) -> None:
+    hist = np.asarray(_owner_histogram(sidx.fences, queries, sidx.n_shards))
+    b = int(hist.sum())
+    even = b / sidx.n_shards
+    imb = float(hist.max() / even) if even > 0 else 0.0
+    dropped = int(np.asarray(out == DROPPED).sum())
+    targets = [_TIER_METRICS] if sink is None else [_TIER_METRICS, sink]
+    for m in targets:
+        m["lookups"] += 1
+        m["queries"] += b
+        m["dropped"] += dropped
+        m["routed_max"] += int(hist.max())
+        m["routed_even"] += even
+        m["imbalance_last"] = imb
+        m["imbalance_peak"] = max(m["imbalance_peak"], imb)
+
 _MAXKEY = np.uint64(np.iinfo(np.uint64).max)
 
 #: Static keys that hold bucketed loop trip counts: extra iterations are
@@ -481,6 +555,8 @@ def sharded_lookup(
     backend: str = "xla",
     mode: str = "auto",
     cap_factor: float = 2.0,
+    telemetry: bool = False,
+    telemetry_sink: dict | None = None,
 ):
     """Predecessor ranks of ``queries`` against the whole sharded tier.
 
@@ -500,6 +576,14 @@ def sharded_lookup(
     Ranks are bit-identical to ``Index.lookup`` on the concatenated
     table, except over-capacity drops in ``a2a`` mode, which report
     :data:`DROPPED`.
+
+    ``telemetry=True`` additionally records per-call routing-imbalance
+    and drop-rate counters (:func:`tier_metrics`) — one extra jitted
+    owner histogram plus a host sync, so serving loops opt in and
+    benchmarks stay untouched.  ``telemetry_sink`` (a counter dict in
+    :func:`_fresh_tier_metrics` shape) receives the same updates for
+    per-tier attribution when one process serves several tiers; the
+    global counters always aggregate.
     """
     if mode not in MODES:
         raise ValueError(f"unknown mode {mode!r}; choose from {MODES}")
@@ -524,17 +608,22 @@ def sharded_lookup(
             f"({n_shards}); use mode='ref' or 'auto'"
         )
     if mode == "ref":
-        return _lookup_vmapped(sidx, queries, backend)
-    if mode == "allgather":
-        return _lookup_allgather(sidx, queries, ctx.mesh, axes, backend)
-    b = queries.shape[0]
-    pad = (-b) % n_shards
-    if pad:
-        queries = jnp.concatenate([queries, jnp.zeros((pad,), queries.dtype)])
-    b_loc = queries.shape[0] // n_shards
-    cap = collectives.exchange_capacity(b_loc, n_shards, cap_factor)
-    out = _lookup_a2a(sidx, queries, ctx.mesh, axes, backend, cap)
-    return out[:b] if pad else out
+        out = _lookup_vmapped(sidx, queries, backend)
+    elif mode == "allgather":
+        out = _lookup_allgather(sidx, queries, ctx.mesh, axes, backend)
+    else:
+        b = queries.shape[0]
+        pad = (-b) % n_shards
+        padded = (
+            jnp.concatenate([queries, jnp.zeros((pad,), queries.dtype)]) if pad else queries
+        )
+        b_loc = padded.shape[0] // n_shards
+        cap = collectives.exchange_capacity(b_loc, n_shards, cap_factor)
+        out = _lookup_a2a(sidx, padded, ctx.mesh, axes, backend, cap)
+        out = out[:b] if pad else out
+    if telemetry:
+        _record_tier_metrics(sidx, queries, out, telemetry_sink)
+    return out
 
 
 # ---------------------------------------------------------------------------

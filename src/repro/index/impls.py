@@ -131,7 +131,9 @@ def _atomic_intervals(idx: Index, table, q):
 
 
 def _atomic_space(idx: Index) -> int:
-    return 8 * (idx.s("degree") + 1) + 16 + 8
+    # coef valid prefix (degree+1 of the padded 4) + kmin/inv_span + eps
+    a = idx.arrays
+    return 8 * (idx.s("degree") + 1) + a["kmin"].nbytes + a["inv_span"].nbytes + a["eps"].nbytes
 
 
 ATOMIC_IMPL = QueryImpl(
@@ -173,8 +175,11 @@ def _ko_intervals(idx: Index, table, q):
 
 
 def _ko_space(idx: Index) -> int:
-    k = idx.arrays["coef"].shape[0]
-    return k * (8 + 32 + 16 + 4) + 8
+    a = idx.arrays
+    return sum(
+        a[k].nbytes
+        for k in ("fences", "coef", "kmin_seg", "inv_span_seg", "eps", "seg_start")
+    )
 
 
 KO_IMPL = QueryImpl(intervals=_ko_intervals, space_bytes=_ko_space, pallas=_kary_pallas_fallback)
@@ -226,8 +231,13 @@ def _rmi_intervals(idx: Index, table, q):
 
 
 def _rmi_space(idx: Index) -> int:
-    b = idx.arrays["leaf_slope"].shape[0]
-    return b * (8 + 8 + 4 + 8) + 32 + 24
+    # the k_* leaves are the fused kernel's f32 re-encoding of the same
+    # model — a query-time cache, not model space, so they don't count
+    a = idx.arrays
+    return sum(
+        a[k].nbytes
+        for k in ("root_coef", "leaf_slope", "leaf_icept", "leaf_eps", "leaf_r", "kmin", "inv_span")
+    )
 
 
 def _rmi_pallas(idx: Index, table, q):
@@ -356,7 +366,15 @@ def _pgm_intervals(idx: Index, table, q):
 
 
 def _pgm_space(idx: Index) -> int:
-    return int(np.asarray(idx.arrays["sizes"]).sum()) * 24 + 16
+    # valid prefixes of the level-concatenated leaves (the pow2 sentinel
+    # pad is jit-cache bucketing, not model space) + level directories
+    a = idx.arrays
+    sizes = np.asarray(a["sizes"])
+    kv, rv = int(sizes.sum()), int((sizes + 1).sum())
+    per_seg = kv * (a["keys"].dtype.itemsize + a["slope"].dtype.itemsize)
+    ranks = rv * a["rank0"].dtype.itemsize
+    meta = a["off"].nbytes + a["off_r"].nbytes + a["sizes"].nbytes + a["eps"].nbytes
+    return per_seg + ranks + meta
 
 
 PGM_IMPL = QueryImpl(intervals=_pgm_intervals, space_bytes=_pgm_space, pallas=_kary_pallas_fallback)
@@ -438,8 +456,11 @@ def _rs_intervals(idx: Index, table, q):
 
 
 def _rs_space(idx: Index) -> int:
-    m = int(np.asarray(idx.arrays["m_valid"]))
-    return m * 16 + ((1 << idx.s("r_bits")) + 1) * 8 + 16
+    a = idx.arrays
+    m = int(np.asarray(a["m_valid"]))
+    knots = m * (a["knot_keys"].dtype.itemsize + a["knot_ranks"].dtype.itemsize)
+    scalars = a["kmin"].nbytes + a["shift"].nbytes + a["eps_eff"].nbytes + a["m_valid"].nbytes
+    return knots + a["radix_table"].nbytes + scalars
 
 
 RS_IMPL = QueryImpl(intervals=_rs_intervals, space_bytes=_rs_space, pallas=_kary_pallas_fallback)
@@ -501,7 +522,8 @@ def _btree_intervals(idx: Index, table, q):
 
 
 def _btree_space(idx: Index) -> int:
-    return int(np.asarray(idx.arrays["off"])[-1]) * 8 + 8
+    a = idx.arrays
+    return a["keys"].nbytes + a["off"].nbytes + a["valid"].nbytes
 
 
 BTREE_IMPL = QueryImpl(

@@ -127,9 +127,17 @@ class Index:
 
     # -- accounting / serialization --------------------------------------
     def space_bytes(self) -> int:
+        """Model space in the paper's sense: the bytes of the leaves that
+        constitute the model (valid prefixes of padded leaves; query-time
+        caches like the fused kernel's f32 re-encoding excluded)."""
         from . import impls
 
         return impls.query_impl(self.kind).space_bytes(self)
+
+    def nbytes(self) -> int:
+        """Total resident bytes of every pytree leaf as stored (padding
+        and kernel re-encodings included) — ``space_bytes`` <= this."""
+        return sum(int(v.nbytes) for v in self.arrays.values())
 
     def save(self, path) -> None:
         """npz round-trip: arrays bit-exact, kind/static/info as JSON."""

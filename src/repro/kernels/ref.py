@@ -17,7 +17,9 @@ def predecessor_ref(table_u64, queries_u64):
     return jnp.searchsorted(table_u64, queries_u64, side="right").astype(jnp.int32) - 1
 
 
-def rmi_predict_ref(u_f32, root_coef_f32, leaf_slope, leaf_icept, leaf_eps, leaf_rlo, leaf_rhi, b, n):
+def rmi_predict_ref(
+    u_f32, root_coef_f32, leaf_slope, leaf_icept, leaf_eps, leaf_rlo, leaf_rhi, b, n
+):
     """Window prediction half of the fused RMI kernel, in f32 (the kernel's
     own arithmetic) — used to check the predict stage in isolation."""
     u = u_f32.astype(jnp.float32)

@@ -322,7 +322,8 @@ def main():
                     r = entry.get("roofline", {})
                     print(
                         f"  OK lower {entry['lower_s']:.1f}s compile {entry['compile_s']:.1f}s"
-                        f" | dominant={r.get('dominant')} bound={r.get('step_time_bound_s', 0):.4f}s"
+                        f" | dominant={r.get('dominant')}"
+                        f" bound={r.get('step_time_bound_s', 0):.4f}s"
                         f" | coll={entry['collectives']['total'] / 1e9:.3f} GB/chip",
                         flush=True,
                     )

@@ -42,9 +42,28 @@ _CONST_RE = re.compile(r"\b[su](?:8|16|32|64)\[\]\s+constant\((\d+)\)")
 _CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
 
 _ELEMENTWISE = (
-    "add", "subtract", "multiply", "divide", "maximum", "minimum", "exponential",
-    "log", "rsqrt", "sqrt", "tanh", "logistic", "power", "select", "compare",
-    "and", "or", "xor", "negate", "abs", "floor", "ceil",
+    "add",
+    "subtract",
+    "multiply",
+    "divide",
+    "maximum",
+    "minimum",
+    "exponential",
+    "log",
+    "rsqrt",
+    "sqrt",
+    "tanh",
+    "logistic",
+    "power",
+    "select",
+    "compare",
+    "and",
+    "or",
+    "xor",
+    "negate",
+    "abs",
+    "floor",
+    "ceil",
 )
 _FREE_OPS = ("parameter", "constant", "tuple(", "get-tuple-element", "bitcast", "iota")
 _GATHERISH = ("gather(", "dynamic-slice(", "dynamic-update-slice(", "scatter(")

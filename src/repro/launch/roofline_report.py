@@ -12,9 +12,16 @@ from pathlib import Path
 
 MOVE_HINTS = {
     ("lm", "compute"): "raise arithmetic intensity (larger per-chip batch; fuse attention)",
-    ("lm", "memory"): "flash-attention Pallas kernel + fused softmax-xent remove materialised logits",
-    ("lm", "collective"): "overlap FSDP all-gathers with layer compute; grad compression for DP psum",
-    ("gnn", "collective"): "node-shard the segment-sum: exchange sorted edge partials instead of all-gathering messages",
+    ("lm", "memory"): (
+        "flash-attention Pallas kernel + fused softmax-xent remove materialised logits"
+    ),
+    ("lm", "collective"): (
+        "overlap FSDP all-gathers with layer compute; grad compression for DP psum"
+    ),
+    ("gnn", "collective"): (
+        "node-shard the segment-sum: exchange sorted edge partials instead of"
+        " all-gathering messages"
+    ),
     ("gnn", "memory"): "cache RBF/SBF bases across blocks; fuse gather+MLP",
     ("recsys", "collective"): "a2a owner-exchange lookup instead of masked-gather+psum",
     ("recsys", "memory"): "fuse embedding gather with interaction (one-hot matmul kernel)",
@@ -50,11 +57,18 @@ def dryrun_table(rows):
         c = e.get("collectives_raw_onepass", e.get("collectives", {}))
         counts = "/".join(
             str(c.get(f"n_{k}", "-"))
-            for k in ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+            for k in (
+                "all-reduce",
+                "all-gather",
+                "reduce-scatter",
+                "all-to-all",
+                "collective-permute",
+            )
         )
         out.append(
             f"| {e['arch']} | {e['cell']} | {e['mesh']} | {e['compile_s']:.1f}s "
-            f"| {ma.get('temp_size_in_bytes', 0) / 1e9:.2f} GB | {ma.get('argument_size_in_bytes', 0) / 1e9:.2f} GB "
+            f"| {ma.get('temp_size_in_bytes', 0) / 1e9:.2f} GB "
+            f"| {ma.get('argument_size_in_bytes', 0) / 1e9:.2f} GB "
             f"| {counts} |"
         )
     return "\n".join(out)
@@ -62,7 +76,8 @@ def dryrun_table(rows):
 
 def roofline_table(rows):
     out = [
-        "| arch | cell | t_compute | t_memory (ideal..upper) | t_collective | dominant | bound | MODEL/HLO flops | what moves the dominant term |",
+        "| arch | cell | t_compute | t_memory (ideal..upper) | t_collective | dominant"
+        " | bound | MODEL/HLO flops | what moves the dominant term |",
         "|---|---|---|---|---|---|---|---|---|",
     ]
     for e in rows:

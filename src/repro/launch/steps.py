@@ -347,11 +347,15 @@ def _cfg_for_cell(spec: ArchSpec, cell: ShapeCell):
         if d.get("energy"):
             cfg = replace(cfg, n_out=1, n_graphs=d["n_graphs"], d_feat=0, t_max=d.get("t_max", 4))
         else:
-            cfg = replace(cfg, n_out=d["n_out"], d_feat=d["d_feat"], n_graphs=0, t_max=d.get("t_max", 4))
+            cfg = replace(
+                cfg, n_out=d["n_out"], d_feat=d["d_feat"], n_graphs=0, t_max=d.get("t_max", 4)
+            )
     return cfg
 
 
-def build_step(spec: ArchSpec, cell: ShapeCell, ctx: ShardingCtx, tcfg: Optional[TrainConfig] = None):
+def build_step(
+    spec: ArchSpec, cell: ShapeCell, ctx: ShardingCtx, tcfg: Optional[TrainConfig] = None
+):
     tcfg = tcfg or TrainConfig()
     cfg = _cfg_for_cell(spec, cell)
     family = spec.family
@@ -361,7 +365,9 @@ def build_step(spec: ArchSpec, cell: ShapeCell, ctx: ShardingCtx, tcfg: Optional
             loss = partial(transformer.loss_fn, cfg=cfg, ctx=ctx)
             init_fn = lambda r: transformer.init(r, cfg)
             step = make_train_step(lambda p, b: loss(p, b), tcfg)
-            state_t = jax.eval_shape(lambda r: init_train_state(r, init_fn, tcfg), jax.random.key(0))
+            state_t = jax.eval_shape(
+                lambda r: init_train_state(r, init_fn, tcfg), jax.random.key(0)
+            )
             st_shard = state_shardings(state_t, family, ctx)
             return StepBundle(step, state_t, st_shard, _lm_input_shardings(cell, ctx), {"cfg": cfg})
         if cell.kind == "prefill":
@@ -408,7 +414,9 @@ def build_step(spec: ArchSpec, cell: ShapeCell, ctx: ShardingCtx, tcfg: Optional
         if cell.kind == "train":
             loss = partial(recsys.loss_fn, cfg=cfg, ctx=ctx)
             step = make_train_step(lambda p, b: loss(p, b), tcfg)
-            state_t = jax.eval_shape(lambda r: init_train_state(r, params_init, tcfg), jax.random.key(0))
+            state_t = jax.eval_shape(
+                lambda r: init_train_state(r, params_init, tcfg), jax.random.key(0)
+            )
             return StepBundle(step, state_t, state_shardings(state_t, family, ctx),
                               _recsys_input_shardings(cfg, cell, ctx), {"cfg": cfg})
         params_t = jax.eval_shape(params_init, jax.random.key(0))

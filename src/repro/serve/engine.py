@@ -11,10 +11,16 @@ host-side and masked in-device.  Greedy sampling (argmax) keeps the
 engine deterministic for tests.
 
 :meth:`DecodeEngine.metrics` exposes serving counters plus the learned
-index substrate's compile-cache telemetry
-(``repro.index.trace_counts()``): a serving loop that accidentally
-fragments the shared jitted lookup shows up as a climbing trace count,
-the same signal the benchmark-smoke CI gate asserts on.
+index substrate's telemetry: compile-cache trace counts
+(``repro.index.trace_counts()`` — a serving loop that accidentally
+fragments the shared jitted lookup shows up as a climbing count, the
+same signal the benchmark-smoke CI gate asserts on), the sharded tier's
+routing-imbalance / drop-rate counters
+(``repro.dist.tier_metrics()``), and — when the engine is built with a
+``tier`` (:class:`repro.tune.rebuild.TunedTier`) — the auto-tuner's
+rebuild counters.  ``tick()`` drives the tier's drift policy between
+decode steps, so shard refreshes and re-tunes happen on the serving
+loop without an external controller.
 """
 
 from __future__ import annotations
@@ -39,7 +45,9 @@ class Request:
 
 
 class DecodeEngine:
-    def __init__(self, params, cfg, ctx, *, batch_slots: int = 8, max_seq: int = 512):
+    def __init__(
+        self, params, cfg, ctx, *, batch_slots: int = 8, max_seq: int = 512, tier=None
+    ):
         self.params = params
         self.cfg = cfg
         self.ctx = ctx
@@ -54,12 +62,16 @@ class DecodeEngine:
         self.ticks = 0
         self.tokens_decoded = 0
         self.requests_finished = 0
+        # optional self-re-tuning index tier (repro.tune.rebuild.TunedTier):
+        # the engine drives its drift policy and surfaces its counters
+        self.tier = tier
 
     def metrics(self) -> dict:
-        """Serving counters + learned-index trace-count telemetry."""
+        """Serving counters + learned-index substrate telemetry."""
         from repro import index as ix
+        from repro.dist import tier_metrics
 
-        return {
+        out = {
             "ticks": self.ticks,
             "tokens_decoded": self.tokens_decoded,
             "requests_finished": self.requests_finished,
@@ -69,7 +81,11 @@ class DecodeEngine:
             "index_trace_counts": {
                 f"{kind}/{backend}": n for (kind, backend), n in sorted(ix.trace_counts().items())
             },
+            "tier_routing": tier_metrics(),
         }
+        if self.tier is not None:
+            out["tier"] = self.tier.metrics()
+        return out
 
     # -- device fns --------------------------------------------------------
     def _decode_impl(self, params, cache, tokens, pos_per_slot):
@@ -105,7 +121,10 @@ class DecodeEngine:
                 req.out_tokens.append(nxt)
 
     def tick(self):
-        """One continuous-batching step: admit, decode, retire."""
+        """One continuous-batching step: admit, decode, retire (and let
+        the tuned tier, if any, act on accumulated drift)."""
+        if self.tier is not None:
+            self.tier.maybe_rebuild()
         self._admit()
         live = [s for s in range(self.b) if self.slot_req[s] is not None]
         if not live:

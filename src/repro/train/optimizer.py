@@ -119,7 +119,9 @@ def adafactor_update(grads, state, params, cfg: AdafactorConfig, lr_scale=1.0):
     flat_g, tdef = jax.tree_util.tree_flatten(grads)
     flat_v = state["v"]
     # walk the v-tree in the same flattened order
-    flat_vs = jax.tree_util.tree_flatten(flat_v, is_leaf=lambda x: isinstance(x, dict) and ("v" in x or "vr" in x))[0]
+    flat_vs = jax.tree_util.tree_flatten(
+        flat_v, is_leaf=lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
+    )[0]
     flat_p = jax.tree_util.tree_leaves(params)
     vs, ps = [], []
     for g, v, p in zip(flat_g, flat_vs, flat_p):
@@ -136,7 +138,9 @@ def sgd_init(params):
 
 def sgd_update(grads, state, params, lr: float = 1e-2, lr_scale=1.0):
     ps = jax.tree.map(
-        lambda p, g: (p.astype(jnp.float32) - lr * lr_scale * g.astype(jnp.float32)).astype(p.dtype),
+        lambda p, g: (p.astype(jnp.float32) - lr * lr_scale * g.astype(jnp.float32)).astype(
+            p.dtype
+        ),
         params,
         grads,
     )

@@ -1,0 +1,51 @@
+"""repro.tune — batched builds + bi-criteria auto-tuning.
+
+PR-1 made every learned index a pytree with one shared jitted lookup;
+PR-2 stacked same-spec indexes into a served tier.  This package adds
+the layer that decides *which* index to serve:
+
+* :mod:`~repro.tune.batched` — ``build_many`` (one spec, many tables)
+  and ``build_grid`` (many specs, one table) with vmapped array-native
+  leaf fits and leaf-wise stacking (:class:`BatchedIndexes`).
+* :mod:`~repro.tune.pareto` — registry-derived candidate grids, the
+  measured time-space Pareto frontier, and ``best_spec_for_budget`` —
+  the paper's bi-criteria PGM selection generalised to every kind.
+* :mod:`~repro.tune.mining` — the SY-RMI/CDFShop mining procedure
+  ported onto the batched builder.
+* :mod:`~repro.tune.rebuild` — ``RebuildPolicy`` + ``TunedTier``:
+  serving-side drift detection, donated shard hot-swaps, full
+  re-tunes, and the counters ``DecodeEngine.metrics()`` reports.
+"""
+
+from .batched import FITS, BatchedIndexes, build_grid, build_many
+from .mining import cdfshop_grid, mine_sy_rmi
+from .pareto import (
+    Candidate,
+    best_candidate_for_budget,
+    best_spec_for_budget,
+    candidate_grid,
+    frontier_report,
+    pareto_frontier,
+    report_specs,
+    sweep,
+)
+from .rebuild import RebuildPolicy, TunedTier
+
+__all__ = [
+    "FITS",
+    "BatchedIndexes",
+    "build_grid",
+    "build_many",
+    "cdfshop_grid",
+    "mine_sy_rmi",
+    "Candidate",
+    "best_candidate_for_budget",
+    "best_spec_for_budget",
+    "candidate_grid",
+    "frontier_report",
+    "pareto_frontier",
+    "report_specs",
+    "sweep",
+    "RebuildPolicy",
+    "TunedTier",
+]

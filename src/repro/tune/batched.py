@@ -1,0 +1,407 @@
+"""Batched index construction: many tables or many specs, one engine.
+
+The unified :class:`~repro.index.Index` is a pytree of flat arrays
+precisely so that *construction*, not just lookup, can be batched:
+
+* :func:`build_many` — ONE spec over MANY tables (periodic rebuild under
+  ingest, per-shard tier builds, multi-tenant serving).  Default path
+  loops the registered host builder and stacks the results leaf-wise
+  (bit-exact with per-table ``build`` by construction); ``fit="vmap"``
+  runs the array-native leaf stage (:func:`repro.core.rmi.rmi_leaf_fit`
+  — segment-sum least squares + extended error bounds) for the whole
+  batch in ONE jitted ``vmap`` trace (RMI-family kinds).
+* :func:`build_grid` — MANY specs over ONE table (the CDFShop sweep and
+  the Pareto tuner's candidate grid).  RMI-family grid entries that
+  resolve to the same branching factor share one vmapped leaf-fit trace.
+
+The vmapped fit is numerically equivalent to the host fit — its error
+bounds are measured against its *own* predictions with the same
+arithmetic the query path uses, so predicted windows remain guarantees
+and predecessor ranks are bit-identical — but leaf floats may differ by
+a few ulp (XLA scatter-add reduction order vs ``np.bincount``).  Code
+that needs leaf-level bit-exactness with ``build`` uses the default
+``fit="host"``.
+
+Stacking reuses the sharded tier's padding idiom
+(:func:`repro.dist.sharded_index.stack_indexes`: per-leaf max shapes,
+max-key / edge-replication sentinels, PGM level-lifting), so a
+:class:`BatchedIndexes` round-trips: :meth:`BatchedIndexes.unstack`
+recovers every per-table index bit-exactly, inverting the PGM lift.
+
+:meth:`BatchedIndexes.lookup` answers a query batch against every table
+through one jitted vmapped body over the shared per-kind query path
+(:func:`repro.index.lookup_impl`) — at most one trace per (kind,
+backend) no matter how many tables the batch holds.
+"""
+
+from __future__ import annotations
+
+import time
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.cdf import POS_DTYPE
+from repro.core.rmi import assemble_rmi, fit_root, rmi_leaf_fit
+from repro.dist.sharded_index import (
+    _harmonize,
+    _pad_sorted_table,
+    _pow2ceil,
+    stack_indexes,
+)
+from repro.index import Index, count_trace, lookup_impl, registry
+from repro.index.specs import IndexSpec
+
+_MAXKEY = np.uint64(np.iinfo(np.uint64).max)
+
+#: Fit strategies: ``host`` loops the registered builder (bit-exact with
+#: per-table ``build``); ``vmap`` batches the array-native leaf stage
+#: (RMI family only); ``auto`` picks ``vmap`` where it applies.
+FITS = ("host", "vmap", "auto")
+
+#: Kinds whose leaf stage vmaps (two-level RMI family).
+VMAP_KINDS = ("RMI", "SY-RMI")
+
+#: Backends the batched lookup supports — ``Index.lookup`` minus
+#: ``pallas``, whose fused kernel is single-table only (the same
+#: restriction as the sharded tier's ``TIER_BACKENDS``).
+BATCH_BACKENDS = ("xla", "bbs", "ref")
+
+
+def _resolve_spec(kind_or_spec, **params) -> IndexSpec:
+    if isinstance(kind_or_spec, IndexSpec):
+        return kind_or_spec
+    return registry.spec_for(str(kind_or_spec), **params)
+
+
+def _rmi_plan(spec: IndexSpec, n: int) -> tuple:
+    """Resolve an RMI-family spec to its (b, root_type) for a table of
+    ``n`` keys — mirrors ``build_rmi`` / ``build_sy_rmi`` exactly."""
+    if spec.kind == "RMI":
+        return max(2, min(spec.b, n)), spec.root_type
+    if spec.kind == "SY-RMI":
+        budget = spec.space_pct / 100.0 * n * 8
+        return max(2, min(int(budget * spec.ub), n)), spec.winner_root
+    raise ValueError(f"kind {spec.kind!r} has no vmappable leaf stage (supported: {VMAP_KINDS})")
+
+
+# ---------------------------------------------------------------------------
+# The one-trace batched leaf fit
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("b",))
+def _leaf_fit_many(u, root_coefs, b: int):
+    """vmap of the array-native leaf stage: one trace per (n, b) shape."""
+    count_trace("fit:RMI", "vmap")  # python side effect: runs once per trace
+    return jax.vmap(rmi_leaf_fit, in_axes=(0, 0, None))(u, root_coefs, b)
+
+
+@jax.jit
+def _normalize_many(tables, kmin, inv_span):
+    # identical expression to build_rmi/query: subtract then multiply by
+    # the reciprocal — a divide here could flip a boundary key's leaf
+    u = (tables.astype(jnp.float64) - kmin[:, None]) * inv_span[:, None]
+    return jnp.clip(u, 0.0, 1.0)
+
+
+def _vmap_fit_rmi(specs: list, tables: list) -> list:
+    """Batched RMI-family build: host root fits (tiny), ONE vmapped
+    device trace for the whole batch's leaf stage, host assembly of the
+    per-table models (f32 kernel re-encoding included).
+
+    ``specs`` and ``tables`` are zipped per slot; every slot must resolve
+    to the same branching factor and table length (one trace).
+    """
+    from repro.index import impls
+
+    t0 = time.perf_counter()
+    n = len(tables[0])
+    if any(len(t) != n for t in tables):
+        raise ValueError("fit='vmap' needs same-length tables (pad first — see build_many)")
+    plans = [_rmi_plan(spec, len(t)) for spec, t in zip(specs, tables)]
+    bs = {b for b, _ in plans}
+    if len(bs) != 1:
+        raise ValueError(f"vmapped fit needs one branching factor, got {sorted(bs)}")
+    b = bs.pop()
+    roots = [fit_root(t, root_type) for t, (_, root_type) in zip(tables, plans)]
+    root_coefs = np.stack([rc for rc, _, _ in roots])
+    kmin = np.asarray([km for _, km, _ in roots])
+    inv_span = np.asarray([iv for _, _, iv in roots])
+    u = _normalize_many(jnp.asarray(np.stack(tables)), jnp.asarray(kmin), jnp.asarray(inv_span))
+    slopes, icepts, eps, r = _leaf_fit_many(u, jnp.asarray(root_coefs), b)
+    slopes, icepts = np.asarray(slopes), np.asarray(icepts)
+    eps, r = np.asarray(eps), np.asarray(r)
+    per_model_s = (time.perf_counter() - t0) / len(tables)  # batch wall time, shared evenly
+    out = []
+    for i, (spec, t, (_, root_type)) in enumerate(zip(specs, tables, plans)):
+        m = assemble_rmi(
+            t,
+            root_type,
+            root_coefs[i],
+            kmin[i],
+            inv_span[i],
+            slopes[i],
+            icepts[i],
+            eps[i],
+            r[i],
+            build_time=per_model_s,
+        )
+        extra = None
+        if spec.kind == "SY-RMI":
+            m.name = f"SY-RMI[{spec.space_pct}%]"
+            extra = {"space_pct": spec.space_pct}
+        out.append(impls.rmi_model_to_index(spec.kind, m, t, extra))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# BatchedIndexes: the stacked many-table artifact
+# ---------------------------------------------------------------------------
+
+
+class BatchedIndexes:
+    """N same-spec indexes over N tables, stacked leaf-wise.
+
+    Attributes
+    ----------
+    index:   stacked :class:`Index` — every leaf has leading table axis.
+    tables:  ``(N, m)`` uint64 — per-table keys, padded to a common
+             power-of-two ``m`` (strictly increasing continuation).
+    counts:  ``(N,)`` int64 — valid (unpadded) keys per table.
+    meta:    per-table host metadata (original static aux, harmonized
+             leaf shapes, build info) backing bit-exact :meth:`unstack`.
+    """
+
+    __slots__ = ("index", "tables", "counts", "meta", "info")
+
+    def __init__(self, index: Index, tables, counts, meta, info=None):
+        object.__setattr__(self, "index", index)
+        object.__setattr__(self, "tables", tables)
+        object.__setattr__(self, "counts", counts)
+        object.__setattr__(self, "meta", list(meta))
+        object.__setattr__(self, "info", dict(info or {}))
+
+    # -- pytree protocol --------------------------------------------------
+    def tree_flatten(self):
+        return (self.index, self.tables, self.counts), tuple(
+            (m["static"], tuple(sorted(m["shapes"].items()))) for m in self.meta
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        index, tables, counts = children
+        meta = [{"static": s, "shapes": dict(sh), "info": {}} for s, sh in aux]
+        return cls(index, tables, counts, meta)
+
+    # -- metadata ---------------------------------------------------------
+    @property
+    def n_tables(self) -> int:
+        return len(self.meta)
+
+    @property
+    def kind(self) -> str:
+        return self.index.kind
+
+    def __repr__(self):
+        return (
+            f"BatchedIndexes(kind={self.kind!r}, n_tables={self.n_tables}, "
+            f"m={int(self.tables.shape[1])})"
+        )
+
+    # -- unstack: recover the per-table indexes bit-exactly ---------------
+    def unstack(self) -> list:
+        lifted = self.index.s("levels") if _is_pgm(self.kind) else 0
+        out = []
+        for i, m in enumerate(self.meta):
+            arrays = {
+                k: v[i][tuple(slice(0, int(s)) for s in m["shapes"][k])]
+                for k, v in self.index.arrays.items()
+            }
+            if lifted:
+                orig_levels = dict(m["static"])["levels"]
+                arrays = _lower_pgm_arrays(arrays, lifted, orig_levels)
+            out.append(Index(self.kind, m["static"], arrays, info=m.get("info")))
+        return out
+
+    # -- batched lookup: one trace per (kind, backend) ---------------------
+    def lookup(self, queries, *, backend: str = "xla"):
+        """Predecessor ranks per table: ``(N, B)`` for ``(N, B)`` queries
+        (a ``(B,)`` batch is broadcast to every table)."""
+        if backend not in BATCH_BACKENDS:
+            raise ValueError(
+                f"unknown batched backend {backend!r}; choose from {BATCH_BACKENDS} "
+                "(the fused-pallas path is single-table only)"
+            )
+        queries = jnp.asarray(queries)
+        if queries.ndim == 1:
+            queries = jnp.broadcast_to(queries[None, :], (self.n_tables, queries.shape[0]))
+        if queries.ndim != 2 or queries.shape[0] != self.n_tables:
+            raise ValueError(
+                f"expected (B,) or ({self.n_tables}, B) queries, got {tuple(queries.shape)}"
+            )
+        return _lookup_many_jit(self.index, self.tables, self.counts, queries, backend)
+
+    def space_bytes(self) -> int:
+        """Summed per-table model bytes."""
+        return sum(i.space_bytes() for i in self.unstack())
+
+
+jax.tree_util.register_pytree_node_class(BatchedIndexes)
+
+
+def _is_pgm(kind: str) -> bool:
+    return registry.entry(kind).query_key == "pgm"
+
+
+@partial(jax.jit, static_argnames=("backend",))
+def _lookup_many_jit(index: Index, tables, counts, queries, backend: str):
+    count_trace(f"batched:{index.kind}", backend)  # python side effect: per trace
+
+    def one(idx, tab, cnt, q):
+        r = lookup_impl(idx, tab, q, backend)
+        # clamp hits in the padded tail back to the last real key
+        r = jnp.minimum(r.astype(POS_DTYPE), cnt - 1)
+        return r
+
+    return jax.vmap(one)(index, tables, counts, queries)
+
+
+def _lower_pgm_arrays(arrays: dict, lifted: int, target: int) -> dict:
+    """Invert :func:`repro.dist.sharded_index._lift_pgm_levels`: strip the
+    ``lifted - target`` synthetic one-segment root levels and re-pad.
+
+    The lift prepends trivial levels (key ``keys[0]``, slope 0, rank0
+    ``[0, 1]``, size 1) and the power-of-two sentinel pad is
+    deterministic, so stripping + re-padding reproduces the original
+    build's arrays bit-exactly.
+    """
+    from repro.index.impls import _pad_pow2
+
+    extra = lifted - target
+    if extra == 0:
+        return arrays
+    if extra < 0:
+        raise ValueError(f"cannot lower {lifted} levels to {target}: not lifted")
+    sizes = np.asarray(arrays["sizes"])
+    if not (sizes[:extra] == 1).all():
+        raise ValueError("leading levels are not synthetic one-segment roots")
+    kv = int(sizes.sum())
+    rv = int((sizes + 1).sum())
+    keys = np.asarray(arrays["keys"])[:kv][extra:]
+    slope = np.asarray(arrays["slope"])[:kv][extra:]
+    rank0 = np.asarray(arrays["rank0"])[:rv][2 * extra :]
+    new_sizes = sizes[extra:].astype(np.int64)
+    out = dict(arrays)
+    out["keys"] = jnp.asarray(_pad_pow2(keys, _MAXKEY))
+    out["slope"] = jnp.asarray(_pad_pow2(slope, 0.0))
+    out["rank0"] = jnp.asarray(_pad_pow2(rank0, rank0[-1]))
+    out["sizes"] = jnp.asarray(new_sizes)
+    out["off"] = jnp.asarray(np.concatenate([[0], np.cumsum(new_sizes)]).astype(np.int64))
+    out["off_r"] = jnp.asarray(np.concatenate([[0], np.cumsum(new_sizes + 1)]).astype(np.int64))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# build_many: one spec, many tables
+# ---------------------------------------------------------------------------
+
+
+def build_many(kind_or_spec, tables, *, fit: str = "host", **params) -> BatchedIndexes:
+    """Build one index per table, stacked into a :class:`BatchedIndexes`.
+
+    ``fit="host"`` (default) loops the registered builder — over
+    same-length tables the result :meth:`~BatchedIndexes.unstack`\\ s
+    bit-exactly to per-table ``build(spec, t)``.  Ragged batches first
+    pad every table to a common power-of-two length with the sharded
+    tier's strictly increasing continuation (ranks clamp back to the
+    last real key at lookup), and the per-table indexes are built over
+    those padded tables — the tier idiom of
+    :meth:`repro.dist.ShardedIndex.build`.
+
+    ``fit="vmap"`` batches the RMI-family leaf stage in one jitted
+    trace; ``fit="auto"`` picks ``vmap`` where it applies.
+    """
+    if fit not in FITS:
+        raise ValueError(f"unknown fit {fit!r}; choose from {FITS}")
+    spec = _resolve_spec(kind_or_spec, **params)
+    tables = [np.asarray(t, dtype=np.uint64) for t in tables]
+    if not tables:
+        raise ValueError("need at least one table")
+    counts = np.asarray([len(t) for t in tables], dtype=np.int64)
+    if len(set(counts.tolist())) == 1:
+        fit_tables = tables  # equal lengths: no padding, bit-exact with build()
+    else:
+        m = _pow2ceil(int(counts.max()))
+        fit_tables = [_pad_sorted_table(t, m) for t in tables]
+    entry = registry.entry(spec.kind)
+    use_vmap = fit == "vmap" or (fit == "auto" and spec.kind in VMAP_KINDS)
+    if use_vmap:
+        per = _vmap_fit_rmi([spec] * len(fit_tables), fit_tables)
+    else:
+        per = [entry.build(spec, t) for t in fit_tables]
+    return _stack_with_meta(spec, per, fit_tables, counts)
+
+
+def _stack_with_meta(spec: IndexSpec, per: list, fit_tables: list, counts) -> BatchedIndexes:
+    harmonized = _harmonize(spec.kind, per)
+    stacked = stack_indexes(harmonized)
+    meta = [
+        {"static": p.static, "shapes": {k: tuple(v.shape) for k, v in h.arrays.items()},
+         "info": dict(p.info)}
+        for p, h in zip(per, harmonized)
+    ]
+    info = {
+        "spec": spec.display_name(),
+        "n_tables": len(fit_tables),
+        "m": len(fit_tables[0]),
+    }
+    return BatchedIndexes(
+        index=stacked,
+        tables=jnp.asarray(np.stack(fit_tables)),
+        counts=jnp.asarray(counts),
+        meta=meta,
+        info=info,
+    )
+
+
+# ---------------------------------------------------------------------------
+# build_grid: many specs, one table
+# ---------------------------------------------------------------------------
+
+
+def build_grid(specs, table_np, *, fit: str = "auto") -> list:
+    """Build one index per spec over a single table, in spec order.
+
+    The grid engine behind the Pareto tuner and the CDFShop/SY-RMI
+    mining sweep.  Under ``fit="auto"``/``"vmap"``, RMI-family entries
+    that resolve to the same branching factor (e.g. every root type at
+    one ``b``) share ONE vmapped leaf-fit trace; every other entry uses
+    its registered host builder.  Specs of one kind + structure already
+    share their jitted *lookup* (the PR-1 invariant), so a full grid
+    sweep compiles O(kinds), not O(specs).
+    """
+    if fit not in FITS:
+        raise ValueError(f"unknown fit {fit!r}; choose from {FITS}")
+    specs = [_resolve_spec(s) for s in specs]
+    table_np = np.asarray(table_np, dtype=np.uint64)
+    n = len(table_np)
+    out: dict[int, Index] = {}
+    groups: dict[int, list] = {}
+    if fit in ("auto", "vmap"):
+        for i, spec in enumerate(specs):
+            if spec.kind in VMAP_KINDS:
+                b, _ = _rmi_plan(spec, n)
+                groups.setdefault(b, []).append((i, spec))
+    for members in groups.values():
+        if len(members) < 2:
+            continue  # a lone entry gains nothing from the batch axis
+        built = _vmap_fit_rmi([s for _, s in members], [table_np] * len(members))
+        for (i, _), idx in zip(members, built):
+            out[i] = idx
+    for i, spec in enumerate(specs):
+        if i not in out:
+            out[i] = registry.entry(spec.kind).build(spec, table_np)
+    return [out[i] for i in range(len(specs))]

@@ -1,0 +1,95 @@
+"""SY-RMI mining on the batched builder (paper §3.2/§4, Figure 4).
+
+The original mining engine (:mod:`repro.core.sy_rmi`) looped
+``build_rmi`` over the CDFShop grid and timed raw ``RMIModel``s.  This
+port runs the same procedure through the tuner's machinery so mining
+and Pareto tuning share ONE engine:
+
+* the CDFShop sweep is a grid of :class:`~repro.index.RMISpec`\\ s built
+  by :func:`repro.tune.batched.build_grid` — every root type at one
+  branching factor shares a single vmapped leaf-fit trace;
+* query timing goes through the shared jitted ``Index.lookup`` (one
+  trace per grid, not per model);
+* UB mining reads ``b`` / ``space_bytes`` off the built indexes.
+
+``mine_sy_rmi`` keeps the historical signature and
+:class:`~repro.core.sy_rmi.SyRMIResult` shape;
+``repro.core.sy_rmi.mine_sy_rmi`` now delegates here.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.rmi import ROOT_TYPES
+from repro.core.sy_rmi import SyRMIResult
+from repro.index.specs import RMISpec
+
+from .batched import build_grid
+from .pareto import _time_lookup
+
+
+def cdfshop_grid(n: int, max_models: int = 10) -> list:
+    """Deterministic CDFShop analogue as a spec grid: roots x geometric
+    branching factors, thinned to ``max_models`` with coverage of both
+    axes (the paper uses CDFShop's ~10 models per table)."""
+    bs = [b for b in (64, 256, 1024, 4096, 16384, 65536, 262144) if b <= max(n // 2, 2)]
+    combos = [(root, b) for root in ROOT_TYPES for b in bs]
+    if len(combos) > max_models:
+        idx = np.linspace(0, len(combos) - 1, max_models).astype(int)
+        combos = [combos[i] for i in idx]
+    return [RMISpec(b=b, root_type=root) for root, b in combos]
+
+
+def mine_ub(candidates) -> float:
+    """UB = median branching factor per byte of model space (§3.2)."""
+    ratios = [c.b / c.space_bytes() for c in candidates]
+    return float(np.median(ratios))
+
+
+def pick_winner(candidates, table_np: np.ndarray, queries_np: np.ndarray, reps: int = 3):
+    """Relative-majority winner by query time on the simulation set."""
+    import jax.numpy as jnp
+
+    table_j = jnp.asarray(table_np)
+    q_j = jnp.asarray(queries_np)
+    times = [_time_lookup(c, table_j, q_j, "xla", reps) / len(queries_np) for c in candidates]
+    best = int(np.argmin(times))
+    return candidates[best].root_type, times
+
+
+def mine_sy_rmi(
+    tables: Sequence[np.ndarray],
+    query_frac: float = 0.01,
+    n_queries: int = 1_000_000,
+    seed: int = 0,
+    max_models: int = 10,
+) -> SyRMIResult:
+    """Full mining pass over a set of same-tier tables (paper §4)."""
+    rng = np.random.default_rng(seed)
+    t0 = time.perf_counter()
+    all_cands, votes, sizes, times_all = [], [], [], []
+    for table in tables:
+        table = np.asarray(table, dtype=np.uint64)
+        specs = cdfshop_grid(len(table), max_models=max_models)
+        cands = build_grid(specs, table, fit="auto")
+        all_cands.extend(cands)
+        nq = max(16, int(n_queries * query_frac))
+        queries = rng.choice(table, size=nq, replace=True)
+        winner, times = pick_winner(cands, table, queries)
+        votes.append(winner)
+        sizes.append([c.space_bytes() for c in cands])
+        times_all.append(times)
+    ub = mine_ub(all_cands)
+    roots, counts = np.unique(votes, return_counts=True)
+    winner_root = str(roots[np.argmax(counts)])
+    return SyRMIResult(
+        ub=ub,
+        winner_root=winner_root,
+        sweep_sizes=sizes,
+        sweep_times=times_all,
+        mining_time=time.perf_counter() - t0,
+    )

@@ -1,0 +1,248 @@
+"""Bi-criteria Pareto auto-tuner: which index, for this table, within
+this space budget?
+
+The paper's central result is that *space* — not accuracy — is the key
+to learned-index efficiency: its bi-criteria PGM searches ε-space for
+the best model under a byte budget, and the SY-RMI mining procedure
+searches architecture-space the same way.  This module generalises that
+search to every registered kind:
+
+* :func:`candidate_grid` — the registry-derived spec grid (each
+  :class:`~repro.index.specs.IndexSpec` subclass exposes
+  ``default_grid(n_keys)``; registering a new kind automatically enrols
+  it in the tuner).
+* :func:`sweep` — build the grid through the batched builder
+  (:func:`repro.tune.batched.build_grid`) and measure the two criteria
+  per candidate: ``space_bytes`` (model bytes, the paper's accounting)
+  and jit-timed lookup latency through the ONE shared query path per
+  kind (a sweep compiles O(kinds), not O(candidates)).
+* :func:`pareto_frontier` — the non-dominated (space, time) set.
+* :func:`best_spec_for_budget` — the paper's bi-criteria selection for
+  all kinds at once: fastest candidate whose model fits the budget.
+
+Candidates and frontiers serialize to plain-dict JSON
+(:func:`frontier_report` / :func:`report_specs`) so benchmark artifacts
+and serving-side tuners share one format.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.index import registry
+from repro.index.specs import IndexSpec
+
+from .batched import build_grid
+
+
+@dataclass
+class Candidate:
+    """One measured point on the time-space plane."""
+
+    spec: IndexSpec
+    space_bytes: int
+    ns_per_query: float
+    build_s: float
+    exact: bool
+    index: object = None  # the built Index (not serialized)
+
+    @property
+    def kind(self) -> str:
+        return self.spec.kind
+
+    def space_pct_of(self, n_keys: int) -> float:
+        return 100.0 * self.space_bytes / (n_keys * 8)
+
+    def to_dict(self) -> dict:
+        return {
+            "kind": self.spec.kind,
+            "params": self.spec.params(),
+            "space_bytes": int(self.space_bytes),
+            "ns_per_query": float(self.ns_per_query),
+            "build_s": float(self.build_s),
+            "exact": bool(self.exact),
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Candidate":
+        spec = registry.entry(d["kind"]).spec_from_params(**d.get("params", {}))
+        return cls(
+            spec=spec,
+            space_bytes=int(d["space_bytes"]),
+            ns_per_query=float(d["ns_per_query"]),
+            build_s=float(d["build_s"]),
+            exact=bool(d.get("exact", True)),
+        )
+
+
+def candidate_grid(n_keys: int, kinds=None) -> list:
+    """Registry-derived default sweep grid, in the paper's kind order.
+
+    ``kinds`` restricts the sweep; spec classes shared by several kinds
+    (L/Q/C share :class:`AtomicSpec`) contribute their grid once.
+    """
+    specs: list[IndexSpec] = []
+    seen: set = set()
+    for kind in kinds or registry.kinds():
+        cls = registry.entry(kind).spec_cls
+        if cls in seen:
+            continue
+        seen.add(cls)
+        for spec in cls.default_grid(n_keys):
+            if kinds is None or spec.kind in kinds:
+                specs.append(spec)
+    return specs
+
+
+def _time_lookup(idx, table_j, queries_j, backend: str, reps: int) -> float:
+    """Best-of-reps wall seconds of the shared jitted lookup."""
+    idx.lookup(table_j, queries_j, backend=backend).block_until_ready()  # warmup/compile
+    best = np.inf
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        idx.lookup(table_j, queries_j, backend=backend).block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def sweep(
+    table_np,
+    specs=None,
+    *,
+    kinds=None,
+    queries=None,
+    n_queries: int = 4096,
+    backend: str = "xla",
+    reps: int = 3,
+    seed: int = 0,
+    fit: str = "auto",
+    check_exact: bool = False,
+) -> list:
+    """Measure every candidate spec on one table: (space, latency) per
+    candidate, batched builds, shared lookup traces.
+
+    ``queries`` defaults to ``n_queries`` keys sampled from the table
+    (the paper's simulation-query protocol).  ``check_exact=True`` also
+    verifies every candidate's ranks against ``searchsorted`` (slower;
+    benchmark gates use it, the serving tuner skips it).
+    """
+    table_np = np.asarray(table_np, dtype=np.uint64)
+    if specs is None:
+        specs = candidate_grid(len(table_np), kinds)
+    if queries is None:
+        rng = np.random.default_rng(seed)
+        queries = rng.choice(table_np, size=min(n_queries, max(16, len(table_np))))
+    queries = np.asarray(queries, dtype=np.uint64)
+    table_j, queries_j = jnp.asarray(table_np), jnp.asarray(queries)
+    want = None
+    if check_exact:
+        want = np.searchsorted(table_np, queries, side="right") - 1
+
+    t0 = time.perf_counter()
+    indexes = build_grid(specs, table_np, fit=fit)
+    build_s_total = time.perf_counter() - t0
+
+    out = []
+    for spec, idx in zip(specs, indexes):
+        dt = _time_lookup(idx, table_j, queries_j, backend, reps)
+        exact = True
+        if want is not None:
+            exact = bool(
+                np.array_equal(np.asarray(idx.lookup(table_j, queries_j, backend=backend)), want)
+            )
+        out.append(
+            Candidate(
+                spec=spec,
+                space_bytes=int(idx.space_bytes()),
+                ns_per_query=dt / len(queries) * 1e9,
+                build_s=float(idx.info.get("build_time", build_s_total / len(specs))),
+                exact=exact,
+                index=idx,
+            )
+        )
+    return out
+
+
+def pareto_frontier(candidates) -> list:
+    """Non-dominated candidates, sorted by ascending space.
+
+    A candidate is dominated if another is no larger *and* no slower
+    (strictly better in at least one criterion).  Along the returned
+    frontier space strictly increases and latency strictly decreases —
+    the bi-criteria curve the paper plots.
+    """
+    ordered = sorted(candidates, key=lambda c: (c.space_bytes, c.ns_per_query))
+    front: list[Candidate] = []
+    best_t = np.inf
+    for c in ordered:
+        # the sort puts the fastest candidate of each space first, so a
+        # strict time improvement implies a strictly larger space too
+        if c.ns_per_query < best_t:
+            front.append(c)
+            best_t = c.ns_per_query
+    return front
+
+
+def best_candidate_for_budget(candidates, n_keys: int, space_budget_pct: float):
+    """Fastest candidate whose model space fits the budget (% of the
+    table's key bytes), or ``None`` when nothing fits."""
+    budget = space_budget_pct / 100.0 * n_keys * 8
+    fits = [c for c in candidates if c.space_bytes <= budget]
+    return min(fits, key=lambda c: c.ns_per_query) if fits else None
+
+
+def best_spec_for_budget(table_np, space_budget_pct: float, **sweep_kw) -> IndexSpec:
+    """The paper's bi-criteria selection generalised to every registered
+    kind: sweep the grid, keep candidates within ``space_budget_pct`` %
+    of the table bytes, return the fastest one's spec.
+
+    Raises ``ValueError`` if no candidate fits (the default grid's
+    atomic models are ~56 bytes, so realistic budgets always have one).
+    """
+    table_np = np.asarray(table_np, dtype=np.uint64)
+    cands = sweep(table_np, **sweep_kw)
+    best = best_candidate_for_budget(cands, len(table_np), space_budget_pct)
+    if best is None:
+        floor = min(c.space_bytes for c in cands)
+        raise ValueError(
+            f"no candidate fits {space_budget_pct}% of {len(table_np)} keys "
+            f"({space_budget_pct / 100.0 * len(table_np) * 8:.0f} bytes); "
+            f"smallest candidate is {floor} bytes"
+        )
+    return best.spec
+
+
+DEFAULT_BUDGET_PCTS = (0.05, 0.7, 2.0, 10.0)
+
+
+def frontier_report(
+    table_np, candidates, frontier=None, *, budget_pcts=DEFAULT_BUDGET_PCTS, extra=None
+) -> dict:
+    """JSON-ready report: every candidate, the frontier, budget picks."""
+    table_np = np.asarray(table_np)
+    n = len(table_np)
+    frontier = pareto_frontier(candidates) if frontier is None else frontier
+    picks = {}
+    for pct in budget_pcts:
+        best = best_candidate_for_budget(candidates, n, pct)
+        if best is not None:
+            picks[str(pct)] = best.to_dict()
+    report = {
+        "n_keys": int(n),
+        "table_bytes": int(n * 8),
+        "candidates": [c.to_dict() for c in candidates],
+        "frontier": [c.to_dict() for c in frontier],
+        "budget_picks": picks,
+    }
+    report.update(extra or {})
+    return report
+
+
+def report_specs(report: dict, section: str = "frontier") -> list:
+    """Rebuild the :class:`IndexSpec`s from a report section (the
+    round-trip used by serving-side tuners loading a mined artifact)."""
+    return [Candidate.from_dict(d).spec for d in report[section]]

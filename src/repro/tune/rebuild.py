@@ -1,0 +1,190 @@
+"""Serving-side re-tuning: drift detection + donated hot swaps.
+
+A production tier is not static: keys are ingested, distributions
+drift, and the spec that won the time-space trade-off at build time
+stops being the winner.  :class:`TunedTier` closes the loop between the
+Pareto tuner and the serving path:
+
+* **steady state** — lookups run through the shard_map'd
+  :func:`repro.dist.sharded_lookup` with telemetry on (routing
+  imbalance + drop-rate counters feed ``DecodeEngine.metrics()``);
+* **shard drift** — ingested keys are routed to their owner shard by
+  the tier's own fences and buffered; once a shard's pending fraction
+  crosses :attr:`RebuildPolicy.shard_refresh_frac`, the shard is
+  rebuilt *with the tier's current spec* and hot-swapped through the
+  donated ``refresh_shard`` path (``donate_argnums=0`` — the old
+  stacked buffers are reused, no host round-trip);
+* **tier drift** — when total ingest crosses
+  :attr:`RebuildPolicy.retune_frac` (or a shard outgrows the stacked
+  leaf/table capacity, or its trip-count statics), the whole tier is
+  re-*tuned*: :func:`repro.tune.pareto.best_spec_for_budget` re-runs
+  the bi-criteria selection on the merged table at the policy's space
+  budget and the tier is restacked under the (possibly different)
+  winning spec.
+
+Every decision is a counter in :meth:`TunedTier.metrics`, surfaced by
+the serving engine next to the lookup trace counts.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.dist.sharded_index import (
+    ShardedIndex,
+    _fresh_tier_metrics,
+    derived_tier_metrics,
+    refresh_shard,
+    route_owners,
+    sharded_lookup,
+)
+from repro.index import registry
+from repro.index.specs import IndexSpec
+
+from .pareto import best_spec_for_budget
+
+
+@dataclass(frozen=True)
+class RebuildPolicy:
+    """When to refresh a shard, when to re-tune the whole tier."""
+
+    space_budget_pct: float = 2.0  # bi-criteria budget for re-tuning
+    shard_refresh_frac: float = 0.05  # pending/resident keys that triggers a shard refresh
+    retune_frac: float = 0.25  # total ingested fraction that triggers a full re-tune
+    kinds: tuple | None = None  # restrict the re-tune grid (None = every registered kind)
+    n_queries: int = 2048  # simulation-query batch for the re-tune sweep
+    backend: str = "xla"
+
+
+@dataclass
+class _Counters:
+    lookups: int = 0
+    ingested: int = 0
+    shard_refreshes: int = 0
+    retunes: int = 0
+    forced_restacks: int = 0  # refresh_shard rejected (capacity/static) -> full restack
+    pending: int = 0
+
+
+class TunedTier:
+    """A served, self-re-tuning sharded index tier.
+
+    Build with a spec to pin the architecture, or without one to let the
+    bi-criteria tuner pick it for the policy's space budget.
+    """
+
+    def __init__(self, table_np, n_shards: int, policy: RebuildPolicy | None = None, *,
+                 spec: IndexSpec | None = None, ctx=None):
+        self.policy = policy or RebuildPolicy()
+        self.ctx = ctx
+        table_np = np.asarray(table_np, dtype=np.uint64)
+        if spec is None:
+            spec = self._tune(table_np)
+        self.spec = spec
+        self.sidx = ShardedIndex.build(spec, table_np, n_shards=n_shards)
+        self._pending: list[list] = [[] for _ in range(n_shards)]
+        self.counters = _Counters()
+        self._routing = _fresh_tier_metrics()  # this tier's own sink
+
+    # -- serving path ------------------------------------------------------
+    def lookup(self, queries, **kw):
+        """Tier lookup with telemetry on (imbalance/drop counters,
+        attributed to this tier's own sink as well as the global view)."""
+        self.counters.lookups += 1
+        kw.setdefault("telemetry", True)
+        kw.setdefault("telemetry_sink", self._routing)
+        kw.setdefault("backend", self.policy.backend)
+        return sharded_lookup(self.sidx, queries, self.ctx, **kw)
+
+    # -- drift -------------------------------------------------------------
+    def ingest(self, new_keys) -> None:
+        """Buffer new keys with their owner shards (fence routing), then
+        refresh / re-tune if the policy's thresholds are crossed."""
+        new_keys = np.unique(np.asarray(new_keys, dtype=np.uint64))
+        if len(new_keys) == 0:
+            return
+        owners = np.asarray(route_owners(self.sidx.fences, new_keys))
+        for s in range(self.sidx.n_shards):
+            mine = new_keys[owners == s]
+            if len(mine):
+                self._pending[s].append(mine)
+        self.counters.ingested += len(new_keys)
+        self.counters.pending += len(new_keys)
+        self.maybe_rebuild()
+
+    def _shard_keys(self, s: int) -> np.ndarray:
+        cnt = int(self.sidx.counts[s])
+        return np.asarray(self.sidx.tables[s][:cnt])
+
+    def _merged_table(self) -> np.ndarray:
+        parts = [self._shard_keys(s) for s in range(self.sidx.n_shards)]
+        parts += [k for p in self._pending for k in p]
+        return np.unique(np.concatenate(parts))
+
+    def _pending_count(self, s: int) -> int:
+        return sum(len(k) for k in self._pending[s])
+
+    # -- rebuild machinery -------------------------------------------------
+    def maybe_rebuild(self) -> str | None:
+        """Apply the policy: ``"retune"``, ``"refresh"`` or ``None``."""
+        total = int(self.sidx.counts.sum())
+        if self.counters.pending >= max(1, int(self.policy.retune_frac * total)):
+            self.retune()
+            return "retune"
+        did = None
+        for s in range(self.sidx.n_shards):
+            resident = int(self.sidx.counts[s])
+            if self._pending_count(s) >= max(1, int(self.policy.shard_refresh_frac * resident)):
+                self.refresh(s)
+                did = "refresh"
+        return did
+
+    def refresh(self, s: int) -> None:
+        """Rebuild shard ``s`` with the tier's spec and hot-swap it via
+        the donated ``refresh_shard`` path; fall back to a full restack
+        when the rebuilt shard no longer fits the stacked structure."""
+        merged = np.unique(np.concatenate([self._shard_keys(s)] + self._pending[s]))
+        new_index = registry.entry(self.spec.kind).build(self.spec, merged)
+        try:
+            self.sidx = refresh_shard(self.sidx, s, new_index, merged)
+        except ValueError:
+            # outgrew the tier's table capacity / leaf shapes / statics
+            self.counters.forced_restacks += 1
+            self._restack(self._merged_table(), self.spec)
+            return
+        self.counters.shard_refreshes += 1
+        self.counters.pending -= self._pending_count(s)
+        self._pending[s] = []
+
+    def retune(self) -> None:
+        """Re-run the bi-criteria selection on the merged table and
+        restack the tier under the winning spec."""
+        merged = self._merged_table()
+        self._restack(merged, self._tune(merged))
+        self.counters.retunes += 1
+
+    def _tune(self, table_np: np.ndarray) -> IndexSpec:
+        p = self.policy
+        return best_spec_for_budget(
+            table_np, p.space_budget_pct, kinds=p.kinds, n_queries=p.n_queries, backend=p.backend
+        )
+
+    def _restack(self, table_np: np.ndarray, spec: IndexSpec) -> None:
+        self.spec = spec
+        self.sidx = ShardedIndex.build(spec, table_np, n_shards=self.sidx.n_shards)
+        self._pending = [[] for _ in range(self.sidx.n_shards)]
+        self.counters.pending = 0
+
+    # -- telemetry ---------------------------------------------------------
+    def metrics(self) -> dict:
+        """Rebuild counters + this tier's own routing/drop counters."""
+        return {
+            "spec": self.spec.display_name(),
+            "n_shards": self.sidx.n_shards,
+            "n_keys": int(self.sidx.counts.sum()),
+            "space_bytes": int(self.sidx.space_bytes()),
+            **self.counters.__dict__,
+            "routing": derived_tier_metrics(self._routing),
+        }

@@ -96,3 +96,46 @@ def test_decode_engine_continuous_batching():
     # learned-index trace telemetry rides along (dict, possibly empty)
     assert isinstance(m["index_trace_counts"], dict)
     assert m["index_traces"] == sum(m["index_trace_counts"].values())
+    # sharded-tier routing counters ride along too (engine has no tier
+    # here, so they are the module-level dist counters)
+    assert {"drop_rate", "imbalance_mean", "lookups"} <= set(m["tier_routing"])
+
+
+def test_decode_engine_drives_tuned_tier():
+    from repro.dist import reset_tier_metrics
+    from repro.index import RMISpec
+    from repro.tune import RebuildPolicy, TunedTier
+    from repro.core import as_table, true_ranks
+
+    spec = get_arch("qwen2-0.5b", reduced=True)
+    cfg = spec.config
+    ctx = single_device_ctx()
+    params = transformer.init(jax.random.key(0), cfg)
+    rng = np.random.default_rng(5)
+    table = as_table(rng.integers(0, 2**61, size=2048, dtype=np.uint64))
+    reset_tier_metrics()
+    tier = TunedTier(
+        table,
+        n_shards=2,
+        policy=RebuildPolicy(shard_refresh_frac=0.01, retune_frac=10.0, n_queries=128),
+        spec=RMISpec(b=32),  # pinned spec: the test exercises the refresh path
+    )
+    eng = DecodeEngine(params, cfg, ctx, batch_slots=2, max_seq=64, tier=tier)
+    qs = rng.choice(table, size=256).astype(np.uint64)
+    np.testing.assert_array_equal(np.asarray(tier.lookup(qs, mode="ref")), true_ranks(table, qs))
+    # ingest drift, then let the engine's tick drive the rebuild policy
+    new_keys = np.setdiff1d(
+        np.unique(rng.integers(0, 2**61, size=64, dtype=np.uint64)), table
+    )
+    tier._pending[0].append(new_keys)  # buffer only: engine tick applies the policy
+    tier.counters.pending += len(new_keys)
+    eng.submit(Request(rid=0, prompt=np.array([1, 2], np.int32), max_new_tokens=2))
+    eng.run_until_drained(max_ticks=50)
+    m = eng.metrics()
+    assert m["tier"]["shard_refreshes"] + m["tier"]["forced_restacks"] >= 1
+    assert m["tier"]["routing"]["lookups"] >= 1
+    merged = np.union1d(table, new_keys)
+    q2 = rng.choice(merged, size=256).astype(np.uint64)
+    np.testing.assert_array_equal(
+        np.asarray(tier.lookup(q2, mode="ref")), true_ranks(merged, q2)
+    )

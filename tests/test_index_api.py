@@ -47,9 +47,7 @@ def _tables(rng, n=4000):
 
 def test_registry_completeness():
     """Every legacy KIND is registered, in the paper's order."""
-    assert ix.kinds() == (
-        "L", "Q", "C", "KO", "RMI", "SY-RMI", "PGM", "PGM_M", "RS", "BTREE"
-    )
+    assert ix.kinds() == ("L", "Q", "C", "KO", "RMI", "SY-RMI", "PGM", "PGM_M", "RS", "BTREE")
     assert KINDS == ix.kinds()  # deprecated alias resolves to the registry
     assert set(SPEC_PER_KIND) == set(ix.kinds())
     for kind in ix.kinds():

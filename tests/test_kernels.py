@@ -66,7 +66,9 @@ def test_embedding_bag_kernel(rng, v, d, n_items, bags, vtile):
     w = rng.normal(size=n_items).astype(np.float32)
     got = np.asarray(ops.embedding_bag(table, ids, seg, w, num_bags=bags, v_tile=vtile))
     want = np.asarray(
-        ref.embedding_bag_ref(jnp.asarray(table), jnp.asarray(ids), jnp.asarray(seg), jnp.asarray(w), bags)
+        ref.embedding_bag_ref(
+            jnp.asarray(table), jnp.asarray(ids), jnp.asarray(seg), jnp.asarray(w), bags
+        )
     )
     np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
 

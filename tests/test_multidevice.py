@@ -82,7 +82,9 @@ table = jnp.asarray(rng2.normal(size=(64, 8)).astype(np.float32))
 ids = jnp.asarray(rng2.integers(0, 64, size=(16, 3)).astype(np.int32))
 with mesh:
     out_ar = jax.jit(lambda t, i: sharded_lookup(t, i, ctx, mode="allreduce"))(table, ids)
-    out_a2a = jax.jit(lambda t, i: sharded_lookup(t, i, ctx, mode="a2a", cap_factor=16.0))(table, ids)
+    out_a2a = jax.jit(lambda t, i: sharded_lookup(t, i, ctx, mode="a2a", cap_factor=16.0))(
+        table, ids
+    )
 np.testing.assert_allclose(np.asarray(out_ar), np.asarray(out_a2a), rtol=1e-5, atol=1e-6)
 print("OK a2a == allreduce embedding lookup")
 
@@ -94,9 +96,13 @@ params2 = transformer.init(jax.random.key(1), cfg2)
 cache2 = transformer.init_cache(cfg2, cell2.dims["global_batch"], cell2.dims["seq_len"])
 batch2 = steps.make_inputs(spec2, cell2, abstract=False)
 with mesh:
-    lg8, _ = jax.jit(lambda p, c, b, s: transformer.decode_step(p, c, b["tokens"], s, cfg2, ctx))(params2, cache2, batch2, jnp.int32(3))
+    lg8, _ = jax.jit(lambda p, c, b, s: transformer.decode_step(p, c, b["tokens"], s, cfg2, ctx))(
+        params2, cache2, batch2, jnp.int32(3)
+    )
 with mesh1:
-    lg1, _ = jax.jit(lambda p, c, b, s: transformer.decode_step(p, c, b["tokens"], s, cfg2, ctx1))(params2, cache2, batch2, jnp.int32(3))
+    lg1, _ = jax.jit(
+        lambda p, c, b, s: transformer.decode_step(p, c, b["tokens"], s, cfg2, ctx1)
+    )(params2, cache2, batch2, jnp.int32(3))
 np.testing.assert_allclose(np.asarray(lg8), np.asarray(lg1), rtol=5e-2, atol=5e-2)
 print("OK decode step sharded == single")
 print("ALL MULTIDEVICE OK")

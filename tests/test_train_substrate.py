@@ -90,7 +90,9 @@ def test_checkpoint_roundtrip(tmp_path):
     assert checkpoint.latest_step(tmp_path) == 7
     restored, step = checkpoint.restore(tmp_path, state)
     assert step == 7
-    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]), np.asarray(state["params"]["w"]))
+    np.testing.assert_array_equal(
+        np.asarray(restored["params"]["w"]), np.asarray(state["params"]["w"])
+    )
     assert int(restored["opt"]["step"]) == 7
 
 
@@ -127,11 +129,23 @@ def test_restart_equivalence(tmp_path):
     # interrupted run: 6 steps, checkpoint, "crash", restore, continue
     d1 = tmp_path / "ckpt"
     st = init_train_state(jax.random.key(0), init_fn, tcfg)
-    st, rep = loop.run(step_fn, st, batch_at, loop.LoopConfig(total_steps=6, ckpt_dir=str(d1), ckpt_every=3, log_every=0))
+    st, rep = loop.run(
+        step_fn,
+        st,
+        batch_at,
+        loop.LoopConfig(total_steps=6, ckpt_dir=str(d1), ckpt_every=3, log_every=0),
+    )
     st2 = init_train_state(jax.random.key(0), init_fn, tcfg)  # fresh process
-    st2, rep2 = loop.run(step_fn, st2, batch_at, loop.LoopConfig(total_steps=12, ckpt_dir=str(d1), ckpt_every=100, log_every=0))
+    st2, rep2 = loop.run(
+        step_fn,
+        st2,
+        batch_at,
+        loop.LoopConfig(total_steps=12, ckpt_dir=str(d1), ckpt_every=100, log_every=0),
+    )
     assert rep2.restored_from == 6
-    np.testing.assert_allclose(np.asarray(st2["params"]["w"]), np.asarray(ref["params"]["w"]), rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(st2["params"]["w"]), np.asarray(ref["params"]["w"]), rtol=1e-6
+    )
 
 
 def test_preemption_checkpoint(tmp_path):
@@ -149,7 +163,10 @@ def test_preemption_checkpoint(tmp_path):
         return flag["n"] >= 4
 
     st, rep = loop.run(
-        step_fn, st, lambda s: {}, loop.LoopConfig(total_steps=100, ckpt_dir=str(tmp_path), ckpt_every=0, log_every=0),
+        step_fn,
+        st,
+        lambda s: {},
+        loop.LoopConfig(total_steps=100, ckpt_dir=str(tmp_path), ckpt_every=0, log_every=0),
         preempt_flag=preempt,
     )
     assert rep.preempted

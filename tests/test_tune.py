@@ -1,0 +1,353 @@
+"""The repro.tune subsystem: batched builds, Pareto tuner, rebuilds.
+
+Covers the PR's acceptance contract:
+
+* ``build_many`` output is bit-exact vs per-table ``build`` for every
+  registered kind (host fit, equal-length tables), with at most one
+  shared-lookup trace per (kind, backend);
+* ``space_bytes`` agrees with the summed nbytes of the model's
+  constituent leaves for every registered kind;
+* frontier reports JSON-round-trip and ``best_spec_for_budget``
+  respects the budget on every bench tier;
+* the tuned tier refreshes drifted shards through the donated swap and
+  re-tunes on large drift.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+import repro  # noqa: F401
+import jax.numpy as jnp
+
+from repro import index as ix
+from repro import tune
+from repro.core import true_ranks
+
+from conftest import make_table
+
+PARAMS = {
+    "L": {},
+    "Q": {},
+    "C": {},
+    "KO": {"k": 7},
+    "RMI": {"b": 64},
+    "SY-RMI": {"space_pct": 2.0, "ub": 0.04},
+    "PGM": {"eps": 16},
+    "PGM_M": {"space_pct": 2.0, "a": 1.0},
+    "RS": {"eps": 16, "r_bits": 8},
+    "BTREE": {"fanout": 8},
+}
+
+
+def _tables(rng, n=2048):
+    # distributions with different PGM segment structures, so stacking
+    # exercises the level lift and unstack exercises its inverse
+    return [make_table(rng, k, n) for k in ("uniform", "sequential", "clustered")]
+
+
+def _queries(rng, tables, n=512):
+    qs = rng.choice(np.concatenate(tables), size=n).astype(np.uint64)
+    extremes = np.array([0, np.iinfo(np.uint64).max], dtype=np.uint64)
+    return np.concatenate([qs, extremes])
+
+
+# ---------------------------------------------------------------------------
+# space accounting
+# ---------------------------------------------------------------------------
+
+
+def _leaf_nbytes(idx, names):
+    return sum(int(np.asarray(idx.arrays[k]).nbytes) for k in names)
+
+
+def expected_model_bytes(idx) -> int:
+    """Summed nbytes of the model-constituent leaves, independently of
+    the per-kind ``space_bytes`` implementations (valid prefixes for
+    padded leaves; the RMI family's f32 kernel re-encoding excluded)."""
+    a = idx.arrays
+    key = ix.entry(idx.kind).query_key
+    if key == "atomic":
+        return 8 * (idx.s("degree") + 1) + _leaf_nbytes(idx, ("kmin", "inv_span", "eps"))
+    if key == "ko":
+        return _leaf_nbytes(
+            idx, ("fences", "coef", "kmin_seg", "inv_span_seg", "eps", "seg_start")
+        )
+    if key == "rmi":
+        return _leaf_nbytes(
+            idx,
+            ("root_coef", "leaf_slope", "leaf_icept", "leaf_eps", "leaf_r", "kmin", "inv_span"),
+        )
+    if key == "pgm":
+        sizes = np.asarray(a["sizes"])
+        kv, rv = int(sizes.sum()), int((sizes + 1).sum())
+        return (
+            kv * 16 + rv * 8 + _leaf_nbytes(idx, ("off", "off_r", "sizes", "eps"))
+        )
+    if key == "rs":
+        m = int(np.asarray(a["m_valid"]))
+        return m * 16 + _leaf_nbytes(idx, ("radix_table", "kmin", "shift", "eps_eff", "m_valid"))
+    if key == "btree":
+        return _leaf_nbytes(idx, ("keys", "off", "valid"))
+    raise AssertionError(key)
+
+
+def test_space_bytes_agrees_with_leaf_nbytes(rng):
+    table = make_table(rng, "uniform", 4096)
+    for kind in ix.kinds():
+        idx = ix.build(kind, table, **PARAMS[kind])
+        assert idx.space_bytes() == expected_model_bytes(idx), kind
+        # the model is never accounted larger than its resident arrays
+        assert idx.space_bytes() <= idx.nbytes(), kind
+
+
+# ---------------------------------------------------------------------------
+# build_many
+# ---------------------------------------------------------------------------
+
+
+def test_build_many_bit_exact_all_kinds(rng):
+    tables = _tables(rng)
+    qs = _queries(rng, tables)
+    for kind in ix.kinds():
+        spec = ix.spec_for(kind, **PARAMS[kind])
+        bm = tune.build_many(spec, tables)
+        singles = [ix.build(spec, t) for t in tables]
+        for i, (got, want) in enumerate(zip(bm.unstack(), singles)):
+            assert got.kind == want.kind, kind
+            assert got.static == want.static, (kind, i)
+            assert set(got.arrays) == set(want.arrays), kind
+            for name in want.arrays:
+                assert np.array_equal(
+                    np.asarray(got.arrays[name]), np.asarray(want.arrays[name])
+                ), (kind, i, name)
+        # the batched lookup answers every table exactly
+        outs = np.asarray(bm.lookup(qs))
+        for i, t in enumerate(tables):
+            np.testing.assert_array_equal(outs[i], true_ranks(t, qs), err_msg=f"{kind}/{i}")
+        assert bm.space_bytes() == sum(s.space_bytes() for s in singles), kind
+
+
+def test_build_many_ragged_tables_lookup_exact(rng):
+    tables = [make_table(rng, "uniform", n) for n in (1500, 700, 1024)]
+    qs = _queries(rng, tables, n=256)
+    for kind in ("RMI", "PGM", "RS", "BTREE"):
+        bm = tune.build_many(ix.spec_for(kind, **PARAMS[kind]), tables)
+        outs = np.asarray(bm.lookup(qs))
+        for i, t in enumerate(tables):
+            np.testing.assert_array_equal(outs[i], true_ranks(t, qs), err_msg=f"{kind}/{i}")
+
+
+def test_build_many_vmap_fit_equivalent(rng):
+    tables = [make_table(rng, k, 2048) for k in ("uniform", "lognormal", "bursty")]
+    qs = _queries(rng, tables, n=256)
+    for kind, params in (
+        ("RMI", {"b": 128, "root_type": "cubic"}),
+        ("SY-RMI", {"space_pct": 2.0, "ub": 0.04}),
+    ):
+        spec = ix.spec_for(kind, **params)
+        bm = tune.build_many(spec, tables, fit="vmap")
+        singles = [ix.build(spec, t) for t in tables]
+        for i, (got, want) in enumerate(zip(bm.unstack(), singles)):
+            # same structure as the host fit: leaf shapes/dtypes equal;
+            # bucketed trip counts may shift one 4-step bucket when an
+            # ulp-level eps difference crosses an integer boundary
+            assert [k for k, _ in got.static] == [k for k, _ in want.static], (kind, i)
+            for (name, g_v), (_, w_v) in zip(got.static, want.static):
+                if name in ("epi", "ksteps"):
+                    assert abs(g_v - w_v) <= 4, (kind, i, name, g_v, w_v)
+                else:
+                    assert g_v == w_v, (kind, i, name)
+            for name in want.arrays:
+                g, w = np.asarray(got.arrays[name]), np.asarray(want.arrays[name])
+                assert g.shape == w.shape and g.dtype == w.dtype, (kind, i, name)
+        # ... and exact predecessor ranks (the windows stay guarantees)
+        outs = np.asarray(bm.lookup(qs))
+        for i, t in enumerate(tables):
+            np.testing.assert_array_equal(outs[i], true_ranks(t, qs), err_msg=f"{kind}/{i}")
+
+    with pytest.raises(ValueError):
+        tune.build_many(ix.PGMSpec(eps=16), tables, fit="vmap")
+
+
+def test_build_many_one_trace_per_kind_backend(backend, rng):
+    if backend == "pallas":
+        pytest.skip("fused pallas path is single-table only (BATCH_BACKENDS)")
+    tables = _tables(rng, n=1024)
+    qs = _queries(rng, tables, n=128)
+    ix.reset_trace_counts()
+    for kind in ix.kinds():
+        bm = tune.build_many(ix.spec_for(kind, **PARAMS[kind]), tables)
+        bm.lookup(qs, backend=backend)
+        bm.lookup(qs[: len(qs)], backend=backend)  # same shapes: no retrace
+    for key, n in ix.trace_counts().items():
+        assert n == 1, (key, n, ix.trace_counts())
+
+
+# ---------------------------------------------------------------------------
+# build_grid
+# ---------------------------------------------------------------------------
+
+
+def test_build_grid_shares_vmapped_fit_trace(rng):
+    # table length / branching factor unique to this test: the fit-trace
+    # assertion must not be satisfied by another test's cached trace
+    table = make_table(rng, "uniform", 1600)
+    qs = _queries(rng, [table], n=256)
+    specs = [ix.RMISpec(b=96, root_type=r) for r in ("linear", "cubic", "spline")]
+    specs += [ix.PGMSpec(eps=16), ix.BTreeSpec(fanout=8)]
+    ix.reset_trace_counts()
+    built = tune.build_grid(specs, table)
+    assert ix.trace_counts().get(("fit:RMI", "vmap"), 0) == 1
+    assert [b.kind for b in built] == [s.kind for s in specs]
+    tj, qj = jnp.asarray(table), jnp.asarray(qs)
+    for spec, idx in zip(specs, built):
+        np.testing.assert_array_equal(
+            np.asarray(idx.lookup(tj, qj)), true_ranks(table, qs), err_msg=str(spec)
+        )
+
+
+def test_build_grid_host_fit_matches_build(rng):
+    table = make_table(rng, "clustered", 1024)
+    specs = [ix.RMISpec(b=64), ix.PGMSpec(eps=16), ix.RSSpec(eps=16, r_bits=8)]
+    for spec, idx in zip(specs, tune.build_grid(specs, table, fit="host")):
+        want = ix.build(spec, table)
+        assert idx.static == want.static
+        for name in want.arrays:
+            assert np.array_equal(np.asarray(idx.arrays[name]), np.asarray(want.arrays[name]))
+
+
+# ---------------------------------------------------------------------------
+# pareto tuner
+# ---------------------------------------------------------------------------
+
+
+def test_candidate_grid_covers_registry():
+    specs = tune.candidate_grid(1 << 20)
+    assert {s.kind for s in specs} == set(ix.kinds())
+    restricted = tune.candidate_grid(1 << 20, kinds=("RMI", "PGM"))
+    assert {s.kind for s in restricted} == {"RMI", "PGM"}
+
+
+def test_frontier_monotone_and_json_roundtrip(rng):
+    table = make_table(rng, "uniform", 4096)
+    cands = tune.sweep(table, n_queries=256, reps=1, check_exact=True)
+    assert all(c.exact for c in cands)
+    front = tune.pareto_frontier(cands)
+    assert front
+    spaces = [c.space_bytes for c in front]
+    times = [c.ns_per_query for c in front]
+    assert spaces == sorted(spaces) and len(set(spaces)) == len(spaces)
+    assert all(times[i] > times[i + 1] for i in range(len(times) - 1))
+    report = tune.frontier_report(table, cands, front)
+    decoded = json.loads(json.dumps(report))
+    assert decoded["n_keys"] == len(table)
+    assert tune.report_specs(decoded, "frontier") == [c.spec for c in front]
+    assert tune.report_specs(decoded, "candidates") == [c.spec for c in cands]
+
+
+def test_best_spec_for_budget_respects_budget_on_all_tiers(rng):
+    from repro.data import tables as dtables
+
+    # the bench tiers, scaled to test size (same shape: one table per
+    # tier subsampled CDF-preservingly from the largest)
+    tiers = {"L1": 2048, "L2": 8192, "L3": 16384}
+    bts = dtables.make_bench_tables(datasets=("osm",), tiers=tiers, seed=3)
+    assert {bt.tier for bt in bts} == set(tiers)
+    for bt in bts:
+        for pct in (0.7, 2.0, 10.0):
+            spec = tune.best_spec_for_budget(bt.table, pct, n_queries=128, reps=1)
+            built = ix.build(spec, bt.table)
+            budget = pct / 100.0 * len(bt.table) * 8
+            assert built.space_bytes() <= budget, (bt.tier, pct, spec, built.space_bytes())
+
+
+def test_best_spec_for_budget_impossible_budget(rng):
+    table = make_table(rng, "uniform", 1024)
+    with pytest.raises(ValueError):
+        tune.best_spec_for_budget(table, 0.01, n_queries=64, reps=1)
+
+
+# ---------------------------------------------------------------------------
+# rebuild policy / tuned tier
+# ---------------------------------------------------------------------------
+
+
+def test_tuned_tier_refresh_and_retune(rng):
+    from repro.dist import reset_tier_metrics, tier_metrics
+
+    table = make_table(rng, "uniform", 4096)
+    reset_tier_metrics()
+    tier = tune.TunedTier(
+        table,
+        n_shards=4,
+        policy=tune.RebuildPolicy(
+            space_budget_pct=2.0,
+            shard_refresh_frac=0.02,
+            retune_frac=0.5,
+            n_queries=128,
+            kinds=("RMI", "PGM", "BTREE"),
+        ),
+    )
+    budget = 2.0 / 100.0 * len(table) * 8
+    assert tier.sidx.space_bytes() <= budget * 4  # per-shard models + router
+    qs = rng.choice(table, size=512).astype(np.uint64)
+    np.testing.assert_array_equal(np.asarray(tier.lookup(qs, mode="ref")), true_ranks(table, qs))
+
+    # small drift: shard refresh (donated swap) or forced restack
+    new_keys = np.setdiff1d(
+        np.unique(rng.integers(0, 2**63, size=300, dtype=np.uint64)), table
+    )
+    tier.ingest(new_keys)
+    c = tier.counters
+    assert c.shard_refreshes + c.forced_restacks + c.retunes >= 1
+    merged = np.union1d(table, new_keys)
+    q2 = rng.choice(merged, size=512).astype(np.uint64)
+    np.testing.assert_array_equal(np.asarray(tier.lookup(q2, mode="ref")), true_ranks(merged, q2))
+
+    # large drift: full re-tune through the bi-criteria sweep
+    big = np.setdiff1d(
+        np.unique(rng.integers(0, 2**63, size=3000, dtype=np.uint64)), merged
+    )
+    tier.ingest(big)
+    assert tier.counters.retunes >= 1
+    merged2 = np.union1d(merged, big)
+    q3 = rng.choice(merged2, size=512).astype(np.uint64)
+    np.testing.assert_array_equal(
+        np.asarray(tier.lookup(q3, mode="ref")), true_ranks(merged2, q3)
+    )
+
+    m = tier.metrics()
+    assert m["n_keys"] == len(merged2)
+    assert m["routing"]["lookups"] == tier_metrics()["lookups"] >= 3
+    assert m["routing"]["imbalance_last"] >= 1.0
+    assert m["routing"]["drop_rate"] == 0.0
+
+
+def test_sharded_lookup_telemetry_counters(rng):
+    from repro.dist import reset_tier_metrics, tier_metrics
+    from repro.dist.sharded_index import ShardedIndex, sharded_lookup
+
+    table = make_table(rng, "uniform", 2048)
+    sidx = ShardedIndex.build("RMI", table, n_shards=4, b=32)
+    qs = rng.choice(table, size=256).astype(np.uint64)
+    reset_tier_metrics()
+    sharded_lookup(sidx, qs)  # telemetry off by default
+    assert tier_metrics()["lookups"] == 0
+    sharded_lookup(sidx, qs, telemetry=True)
+    m = tier_metrics()
+    assert m["lookups"] == 1 and m["queries"] == len(qs)
+    assert m["imbalance_last"] >= 1.0 and m["imbalance_mean"] >= 1.0
+    assert m["dropped"] == 0 and m["drop_rate"] == 0.0
+    # skewed batch: every query owned by one shard -> imbalance ~ n_shards
+    skew = np.full(256, np.asarray(table)[-1], dtype=np.uint64)
+    sharded_lookup(sidx, skew, telemetry=True)
+    assert tier_metrics()["imbalance_peak"] == pytest.approx(4.0)
+    # a per-tier sink receives its own counters; the global view aggregates
+    from repro.dist.sharded_index import _fresh_tier_metrics
+
+    sink = _fresh_tier_metrics()
+    sharded_lookup(sidx, qs, telemetry=True, telemetry_sink=sink)
+    assert sink["lookups"] == 1 and sink["queries"] == len(qs)
+    assert tier_metrics()["lookups"] == 3
