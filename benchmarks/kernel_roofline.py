@@ -5,6 +5,12 @@ per DESIGN.md §7 each kernel's analytic HBM/VMEM traffic and FLOPs are
 derived from its BlockSpec tiling and reported as v5e roofline seconds,
 alongside the measured XLA-path wall time (the production fallback) for
 a like-for-like functional check.
+
+The fused PGM / RadixSpline kernels and the batched (table, q_tile)
+RMI kernel get the same treatment, plus a small-table exactness +
+trace-count smoke: the ``kernel/compiles`` row reports how many times
+the shared pallas lookup traced across the sweep, and the CI bench gate
+fails when it exceeds the budget (a per-model-retrace regression).
 """
 
 from __future__ import annotations
@@ -15,7 +21,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import as_table, search
+from repro import index as ix
+from repro import tune
+from repro.core import as_table, search, true_ranks
 from repro.core.rmi import build_rmi
 from repro.kernels import ops
 
@@ -63,6 +71,89 @@ def run():
         nq * (8 + steps_b * 8 + 4) / HBM_BW / nq * 1e6,
         f"steps={steps_b}",
     )
+
+    # ---- fused PGM descent ----
+    pgm = ix.build(ix.PGMSpec(eps=64), table)
+    levels = pgm.s("levels")
+    psteps = pgm.s("pksteps")
+    # per query: u(4) + q limbs(8) + per level (u0+slope+r0/r1 gathers
+    # ~20B + window-search limb gathers) + final window + result(4)
+    traffic = nq * (4 + 8 + levels * (20 + psteps * 8) + psteps * 8 + 4)
+    emit(
+        "kernel/pgm_search/v5e_mem_bound",
+        traffic / HBM_BW / nq * 1e6,
+        f"levels={levels};steps={psteps};bytes/q={traffic / nq:.0f}",
+    )
+    xla = jax.jit(lambda t, q: pgm.lookup(t, q))
+    emit(
+        "kernel/pgm_search/xla_cpu",
+        time_fn(xla, jnp.asarray(table), jnp.asarray(qs)) / nq * 1e6,
+        "functional fallback",
+    )
+
+    # ---- fused RadixSpline lookup ----
+    rs = ix.build(ix.RSSpec(eps=64, r_bits=12), table)
+    ksteps = rs.s("ksteps")
+    rsteps = rs.s("rk_epi")
+    # per query: u(4) + prefix(4) + q limbs(8) + radix gather(16) +
+    # knot search + knot params (y1/u0/slope ~12B) + window + result(4)
+    traffic = nq * (4 + 4 + 8 + 16 + ksteps * 8 + 12 + rsteps * 8 + 4)
+    emit(
+        "kernel/rs_search/v5e_mem_bound",
+        traffic / HBM_BW / nq * 1e6,
+        f"ksteps={ksteps};steps={rsteps};bytes/q={traffic / nq:.0f}",
+    )
+    xla = jax.jit(lambda t, q: rs.lookup(t, q))
+    emit(
+        "kernel/rs_search/xla_cpu",
+        time_fn(xla, jnp.asarray(table), jnp.asarray(qs)) / nq * 1e6,
+        "functional fallback",
+    )
+
+    # ---- batched fused RMI (tier of tables, grid over (table, q_tile)) ----
+    n_tables = 8
+    n_loc = n // n_tables
+    parts = [np.sort(rng.choice(table, n_loc, replace=False)) for _ in range(n_tables)]
+    bm = tune.build_many(ix.RMISpec(b=4096 // n_tables), [as_table(p) for p in parts])
+    bsteps = bm.index.s("ksteps")
+    # per (table, query): same shape as the single-table fused RMI row;
+    # the batch amortises the table/param residency across q tiles
+    traffic = n_tables * nq * (4 + 8 + 24 + bsteps * 8 + 4)
+    emit(
+        "kernel/rmi_search_batched/v5e_mem_bound",
+        traffic / HBM_BW / (n_tables * nq) * 1e6,
+        f"tables={n_tables};steps={bsteps};bytes/q={traffic / (n_tables * nq):.0f}",
+    )
+    xla_b = jax.jit(lambda q: bm.lookup(q))
+    dt = time_fn(xla_b, jnp.asarray(qs))
+    emit("kernel/rmi_search_batched/xla_cpu", dt / (n_tables * nq) * 1e6, "functional fallback")
+
+    # ---- pallas exactness + trace-count smoke (small tables) ----
+    ix.reset_trace_counts()
+    small = table[:: max(1, n // 8192)]
+    sq = rng.choice(small, 2048).astype(np.uint64)
+    want = true_ranks(small, sq)
+    exact = True
+    for spec in (ix.RMISpec(b=256), ix.PGMSpec(eps=32), ix.RSSpec(eps=32, r_bits=10)):
+        m = ix.build(spec, small)
+        got = np.asarray(m.lookup(jnp.asarray(small), jnp.asarray(sq), backend="pallas"))
+        got2 = np.asarray(m.lookup(jnp.asarray(small), jnp.asarray(sq), backend="pallas"))
+        exact &= bool(np.array_equal(got, want) and np.array_equal(got2, want))
+    sparts = [
+        as_table(np.sort(rng.choice(small, len(small) // 4, replace=False))) for _ in range(4)
+    ]
+    bsm = tune.build_many(ix.RMISpec(b=64), sparts)
+    outs = np.asarray(bsm.lookup(sq, backend="pallas"))
+    for i, p in enumerate(sparts):
+        exact &= bool(np.array_equal(outs[i], true_ranks(p, sq)))
+    traces = sum(ix.trace_counts().values())
+    per_kind = {}
+    for (k, _), v in sorted(ix.trace_counts().items()):
+        per_kind[k] = per_kind.get(k, 0) + v
+    emit("kernel/pallas_smoke/exact", float(exact), "1.0 == bit-exact")
+    # one shared trace per (kind, backend) + one batched trace: a
+    # per-model retrace would multiply this by the model count
+    emit("kernel/compiles", traces, f"per_kind={per_kind}")
 
     # ---- embedding bag ----
     v, d, items, bags = 4096, 128, 8192, 1024

@@ -72,6 +72,18 @@ def run(tiers=None, datasets=None):
             emit(f"query_param/{bt.name}/{label}", dt / nq * 1e6, f"space={pct:.4f}%")
             results.append((bt.name, label, dt / nq, pct))
 
+        # fused-kernel leg (smallest tier only — interpret mode off-TPU
+        # makes larger sweeps pointless): every learned family through
+        # backend="pallas", traces counted by the same compile budget
+        if bt.tier == "L1":
+            for label, m in models:
+                if not any(label.startswith(p) for p in ("SY-RMI2", "PGM_M2", "RS")):
+                    continue
+                n_models += 1
+                dt = time_fn(lambda t, q: m.lookup(t, q, backend="pallas"), tj, qj)
+                emit(f"query_param/{bt.name}/{label}/pallas", dt / nq * 1e6, "fused kernel")
+                results.append((bt.name, f"{label}/pallas", dt / nq, None))
+
     traces = ix.trace_counts()
     n_traces = sum(traces.values())
     per_kind = {}

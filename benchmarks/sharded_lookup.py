@@ -62,7 +62,7 @@ def run(
     n_queries: int = 1 << 12,
     shard_counts=(1, 2, 4),
     kinds=DEFAULT_KINDS,
-    backends=("xla", "bbs"),
+    backends=("xla", "bbs", "pallas"),
 ):
     from repro.core import as_table
 
@@ -134,7 +134,7 @@ def main() -> None:
     ap.add_argument("--queries", type=int, default=1 << 12, help="query batch")
     ap.add_argument("--shards", default="1,2,4", help="comma-separated shard counts")
     ap.add_argument("--kinds", default=",".join(DEFAULT_KINDS))
-    ap.add_argument("--backends", default="xla,bbs")
+    ap.add_argument("--backends", default="xla,bbs,pallas")
     ap.add_argument("--json", default=None, help="write the JSON report here")
     ap.add_argument(
         "--trace-budget",

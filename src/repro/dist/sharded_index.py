@@ -65,7 +65,7 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.core.cdf import POS_DTYPE
-from repro.index import Index, count_trace, lookup_impl, registry
+from repro.index import Index, batched_pallas_impl, count_trace, lookup_impl, registry
 from repro.index.specs import IndexSpec
 
 from . import collectives
@@ -150,8 +150,9 @@ def _record_tier_metrics(sidx: "ShardedIndex", queries, out, sink: dict | None =
 _MAXKEY = np.uint64(np.iinfo(np.uint64).max)
 
 #: Static keys that hold bucketed loop trip counts: extra iterations are
-#: no-ops, so stacking may take the max across shards.
-_STEP_KEYS = ("epi", "ksteps")
+#: no-ops, so stacking may take the max across shards.  ``pksteps`` /
+#: ``rk_epi`` are the fused PGM / RadixSpline kernels' trip counts.
+_STEP_KEYS = ("epi", "ksteps", "pksteps", "rk_epi")
 
 
 def _pow2ceil(x: int) -> int:
@@ -197,17 +198,25 @@ def _lift_pgm_levels(idx: Index, target: int) -> Index:
     keys = np.asarray(idx.arrays["keys"])
     slope = np.asarray(idx.arrays["slope"])
     rank0 = np.asarray(idx.arrays["rank0"])
+    pk_u0 = np.asarray(idx.arrays["pk_u0"])
+    pk_slope = np.asarray(idx.arrays["pk_slope"])
     kv = int(sizes.sum())  # valid prefix before the pow2 sentinel pad
     rv = int((sizes + 1).sum())
     new_keys = np.concatenate([np.full(extra, keys[0], keys.dtype), keys[:kv]])
     new_slope = np.concatenate([np.zeros(extra, slope.dtype), slope[:kv]])
     synth_rank0 = np.tile(np.asarray([0, 1], rank0.dtype), extra)
     new_rank0 = np.concatenate([synth_rank0, rank0[:rv]])
+    # the synthetic roots anchor at keys[0], whose kernel coordinate is
+    # pk_u0[0]; slope 0 keeps the fused descent's window at [0, 0] too
+    new_pk_u0 = np.concatenate([np.full(extra, pk_u0[0], pk_u0.dtype), pk_u0[:kv]])
+    new_pk_slope = np.concatenate([np.zeros(extra, pk_slope.dtype), pk_slope[:kv]])
     new_sizes = np.concatenate([np.ones(extra, sizes.dtype), sizes]).astype(np.int64)
     arrays = dict(idx.arrays)
     arrays["keys"] = jnp.asarray(_pad_pow2(new_keys, _MAXKEY))
     arrays["slope"] = jnp.asarray(_pad_pow2(new_slope, 0.0))
     arrays["rank0"] = jnp.asarray(_pad_pow2(new_rank0, new_rank0[-1]))
+    arrays["pk_u0"] = jnp.asarray(_pad_pow2(new_pk_u0, np.float32(1.0)))
+    arrays["pk_slope"] = jnp.asarray(_pad_pow2(new_pk_slope, np.float32(0.0)))
     arrays["sizes"] = jnp.asarray(new_sizes)
     arrays["off"] = jnp.asarray(np.concatenate([[0], np.cumsum(new_sizes)]).astype(np.int64))
     arrays["off_r"] = jnp.asarray(
@@ -467,10 +476,19 @@ def _lookup_vmapped(sidx: ShardedIndex, queries, backend: str):
     count_trace(f"sharded:{sidx.kind}", f"ref:{backend}")
     owners = route_owners(sidx.fences, queries)
 
-    def one(idx, tab, cnt, off):
-        return _answer_local(idx, tab, cnt, off, queries, backend)
+    if backend == "pallas":
+        # one batched (table, q_tile)-grid kernel answers every shard;
+        # clamp + rebase mirror _answer_local exactly
+        bq = jnp.broadcast_to(queries[None, :], (sidx.n_shards, queries.shape[0]))
+        r = batched_pallas_impl(sidx.index, sidx.tables, bq)
+        r = jnp.minimum(r.astype(POS_DTYPE), sidx.counts[:, None] - 1)
+        granks = jnp.where(r < 0, jnp.asarray(-1, POS_DTYPE), sidx.offsets[:, None] + r)
+    else:
 
-    granks = jax.vmap(one)(sidx.index, sidx.tables, sidx.counts, sidx.offsets)
+        def one(idx, tab, cnt, off):
+            return _answer_local(idx, tab, cnt, off, queries, backend)
+
+        granks = jax.vmap(one)(sidx.index, sidx.tables, sidx.counts, sidx.offsets)
     return jnp.take_along_axis(granks, owners[None, :].astype(POS_DTYPE), axis=0)[0]
 
 
@@ -542,9 +560,11 @@ def _lookup_allgather(sidx: ShardedIndex, queries, mesh, axes, backend: str):
 
 MODES = ("auto", "a2a", "allgather", "ref")
 
-#: Backends the tier's local answer supports (``Index.lookup`` minus
-#: ``pallas``, whose fused kernel is single-table only).
-TIER_BACKENDS = ("xla", "bbs", "ref")
+#: Backends the tier's local answer supports — the full ``Index.lookup``
+#: set.  Under ``pallas`` the shard_map paths run each shard's fused
+#: kernel on its resident block, and the vmapped fallback dispatches the
+#: batched ``(table, q_tile)``-grid kernels across the whole tier.
+TIER_BACKENDS = ("xla", "bbs", "pallas", "ref")
 
 
 def sharded_lookup(
@@ -577,6 +597,20 @@ def sharded_lookup(
     table, except over-capacity drops in ``a2a`` mode, which report
     :data:`DROPPED`.
 
+    ``backend`` selects the per-shard answer path (any
+    :data:`TIER_BACKENDS` entry): under ``"pallas"`` the shard_map
+    modes run each shard's fused kernel on its resident block, and the
+    vmapped fallback answers the whole tier with ONE batched
+    ``(table, q_tile)``-grid kernel call.
+
+    Example — a 4-shard PGM tier on a ``tp=4`` mesh::
+
+        sidx = ShardedIndex.build("PGM", table, n_shards=4, eps=64)
+        ctx = ShardingCtx(mesh=jax.make_mesh((1, 4), ("data", "model")))
+        ranks = sharded_lookup(sidx, queries, ctx, backend="pallas")
+        # single-device fallback, still exact, no collectives:
+        ranks = sharded_lookup(sidx, queries, mode="ref")
+
     ``telemetry=True`` additionally records per-call routing-imbalance
     and drop-rate counters (:func:`tier_metrics`) — one extra jitted
     owner histogram plus a host sync, so serving loops opt in and
@@ -588,11 +622,7 @@ def sharded_lookup(
     if mode not in MODES:
         raise ValueError(f"unknown mode {mode!r}; choose from {MODES}")
     if backend not in TIER_BACKENDS:
-        raise ValueError(
-            f"unknown tier backend {backend!r}; choose from {TIER_BACKENDS} "
-            "(the fused-pallas path is single-table only — it does not "
-            "compose with the vmapped/shard_map'd tier answer)"
-        )
+        raise ValueError(f"unknown tier backend {backend!r}; choose from {TIER_BACKENDS}")
     queries = jnp.asarray(queries)
     if queries.ndim != 1:
         raise ValueError("sharded_lookup expects a flat (B,) query vector")

@@ -28,6 +28,7 @@ Quick start::
 from .index import (
     BACKENDS,
     Index,
+    batched_pallas_impl,
     build,
     count_trace,
     lookup_impl,
@@ -51,6 +52,7 @@ from . import impls as _impls  # noqa: F401  — populates the registry
 __all__ = [
     "BACKENDS",
     "Index",
+    "batched_pallas_impl",
     "build",
     "count_trace",
     "lookup_impl",

@@ -6,8 +6,12 @@ Each kind contributes:
   runs the existing fitting code in :mod:`repro.core` and flattens the
   resulting model into the Index's array leaves + static aux;
 * a **query impl** (:data:`QUERY_IMPLS`) with ``intervals`` /
-  ``epi_steps`` / ``space_bytes`` / ``pallas`` operating purely on the
-  array leaves — the data-driven form of the old per-class methods.
+  ``epi_steps`` / ``space_bytes`` / ``pallas`` / ``pallas_batched``
+  operating purely on the array leaves — the data-driven form of the
+  old per-class methods.  ``pallas`` is the kind's fused kernel where
+  one exists (RMI family, PGM family, RS) and the lane-wide k-ary
+  kernel otherwise; ``pallas_batched`` is its ``(table, q_tile)``-grid
+  batched counterpart used by tiers and batches.
 
 Two deliberate normalisations make jit caches collide across instances:
 
@@ -91,10 +95,28 @@ class QueryImpl:
     intervals: Callable  # (index, table, q) -> (lo, hi)
     space_bytes: Callable  # (index) -> int
     pallas: Callable  # (index, table, q) -> ranks
+    pallas_batched: Callable = None  # (stacked index, tables, queries) -> ranks
     epi_key: str = "epi"
+
+    def __post_init__(self):
+        # kinds without a fused batched kernel answer tiers/batches with
+        # the model-free batched k-ary kernel (exact, shared trace)
+        if self.pallas_batched is None:
+            self.pallas_batched = _kary_pallas_batched
 
     def epi_steps(self, index: Index) -> int:
         return index.s(self.epi_key)
+
+
+def _pad_queries(arrs, tile: int, axis: int = 0):
+    """Zero-pad query-shaped arrays to a tile multiple along ``axis``."""
+    nq = arrs[0].shape[axis]
+    pad = (-nq) % tile
+    if pad == 0:
+        return arrs
+    widths = [(0, 0)] * arrs[0].ndim
+    widths[axis] = (0, pad)
+    return [jnp.pad(a, widths) for a in arrs]
 
 
 def _kary_pallas_fallback(index: Index, table, q):
@@ -107,13 +129,26 @@ def _kary_pallas_fallback(index: Index, table, q):
     qhi, qlo = split_u64(q)
     nq = q.shape[0]
     tile = min(512, _pow2ceil(nq))
-    pad = (-nq) % tile
-    if pad:
-        qhi = jnp.concatenate([qhi, jnp.zeros((pad,), qhi.dtype)])
-        qlo = jnp.concatenate([qlo, jnp.zeros((pad,), qlo.dtype)])
+    qhi, qlo = _pad_queries([qhi, qlo], tile)
     interpret = jax.default_backend() != "tpu"
     out = kary_search_pallas(qhi, qlo, thi, tlo, k=LANES, tile_q=tile, interpret=interpret)
     return out[:nq].astype(POS_DTYPE)
+
+
+def _kary_pallas_batched(index: Index, tables, queries):
+    """Batched k-ary kernel over ``(n_tables, m)`` tables: the Pallas
+    tier/batch baseline for kinds without a fused batched kernel."""
+    from repro.kernels.kary_search import batched_kary_search_pallas, LANES
+    from repro.kernels.ops import split_u64
+
+    thi, tlo = split_u64(tables)
+    qhi, qlo = split_u64(queries)
+    nq = queries.shape[1]
+    tile = min(512, _pow2ceil(nq))
+    qhi, qlo = _pad_queries([qhi, qlo], tile, axis=1)
+    interpret = jax.default_backend() != "tpu"
+    out = batched_kary_search_pallas(qhi, qlo, thi, tlo, k=LANES, tile_q=tile, interpret=interpret)
+    return out[:, :nq].astype(POS_DTYPE)
 
 
 # -- atomic (L / Q / C) ------------------------------------------------------
@@ -254,11 +289,7 @@ def _rmi_pallas(idx: Index, table, q):
     thi, tlo = split_u64(table)
     nq = q.shape[0]
     tile = min(512, _pow2ceil(nq))
-    pad = (-nq) % tile
-    if pad:
-        u = jnp.concatenate([u, jnp.zeros((pad,), u.dtype)])
-        qhi = jnp.concatenate([qhi, jnp.zeros((pad,), qhi.dtype)])
-        qlo = jnp.concatenate([qlo, jnp.zeros((pad,), qlo.dtype)])
+    u, qhi, qlo = _pad_queries([u, qhi, qlo], tile)
     out = fused_rmi_search_pallas(
         u,
         qhi,
@@ -278,7 +309,50 @@ def _rmi_pallas(idx: Index, table, q):
     return out[:nq].astype(POS_DTYPE)
 
 
-RMI_IMPL = QueryImpl(intervals=_rmi_intervals, space_bytes=_rmi_space, pallas=_rmi_pallas)
+def _rmi_pallas_batched(idx: Index, tables, queries):
+    """Batched fused RMI kernel: grid over (table, q_tile), per-table
+    parameter blocks from the stacked ``k_*`` leaves.  The bucketed
+    ``ksteps`` static took the max across tables at stack time, so one
+    trip count covers the widest per-table window."""
+    from repro.kernels.ops import split_u64
+    from repro.kernels.rmi_search import batched_rmi_search_pallas
+
+    a = idx.arrays
+    u = jnp.clip(
+        (queries.astype(jnp.float64) - a["kmin"][:, None]) * a["inv_span"][:, None],
+        0.0,
+        1.0,
+    ).astype(jnp.float32)
+    qhi, qlo = split_u64(queries)
+    thi, tlo = split_u64(tables)
+    nq = queries.shape[1]
+    tile = min(512, _pow2ceil(nq))
+    u, qhi, qlo = _pad_queries([u, qhi, qlo], tile, axis=1)
+    out = batched_rmi_search_pallas(
+        u,
+        qhi,
+        qlo,
+        thi,
+        tlo,
+        a["k_root"],
+        a["k_slope"],
+        a["k_icept"],
+        a["k_eps"],
+        a["k_rlo"],
+        a["k_rhi"],
+        steps=idx.s("ksteps"),
+        tile_q=tile,
+        interpret=jax.default_backend() != "tpu",
+    )
+    return out[:, :nq].astype(POS_DTYPE)
+
+
+RMI_IMPL = QueryImpl(
+    intervals=_rmi_intervals,
+    space_bytes=_rmi_space,
+    pallas=_rmi_pallas,
+    pallas_batched=_rmi_pallas_batched,
+)
 
 
 def rmi_model_to_index(kind: str, m, table_np: np.ndarray, extra_info=None) -> Index:
@@ -377,10 +451,53 @@ def _pgm_space(idx: Index) -> int:
     return per_seg + ranks + meta
 
 
-PGM_IMPL = QueryImpl(intervals=_pgm_intervals, space_bytes=_pgm_space, pallas=_kary_pallas_fallback)
+def _pgm_pallas(idx: Index, table, q):
+    """Fused PGM descent (root route + per-level segment gather +
+    ε-window search); the f32 re-anchored segment models were folded
+    into the Index leaves at build time (``pk_*`` arrays)."""
+    from repro.kernels.ops import split_u64
+    from repro.kernels.pgm_search import fused_pgm_search_pallas
+
+    a = idx.arrays
+    u = jnp.clip((q.astype(jnp.float64) - a["pk_kmin"]) * a["pk_inv_span"], 0.0, 1.0).astype(
+        jnp.float32
+    )
+    qhi, qlo = split_u64(q)
+    thi, tlo = split_u64(table)
+    khi, klo = split_u64(a["keys"])
+    nq = q.shape[0]
+    tile = min(512, _pow2ceil(nq))
+    u, qhi, qlo = _pad_queries([u, qhi, qlo], tile)
+    out = fused_pgm_search_pallas(
+        u,
+        qhi,
+        qlo,
+        thi,
+        tlo,
+        khi,
+        klo,
+        a["pk_u0"],
+        a["pk_slope"],
+        a["rank0"].astype(jnp.int32),
+        a["off"].astype(jnp.int32),
+        a["off_r"].astype(jnp.int32),
+        a["sizes"].astype(jnp.int32),
+        a["pk_eps"].reshape(1),
+        levels=idx.s("levels"),
+        steps=idx.s("pksteps"),
+        tile_q=tile,
+        interpret=jax.default_backend() != "tpu",
+    )
+    return out[:nq].astype(POS_DTYPE)
 
 
-def _pgm_to_index(kind: str, m, extra_info=None) -> Index:
+PGM_IMPL = QueryImpl(intervals=_pgm_intervals, space_bytes=_pgm_space, pallas=_pgm_pallas)
+
+
+def _pgm_to_index(kind: str, m, table_np: np.ndarray, extra_info=None) -> Index:
+    from repro.kernels.ops import pgm_kernel_arrays
+
+    karr, pksteps = pgm_kernel_arrays(m, table_np)
     level_keys = [np.asarray(k) for k in m.level_keys]
     level_slope = [np.asarray(s) for s in m.level_slope]
     level_rank0 = [np.asarray(r) for r in m.level_rank0]
@@ -398,10 +515,17 @@ def _pgm_to_index(kind: str, m, extra_info=None) -> Index:
         "off_r": jnp.asarray(off_r),
         "sizes": jnp.asarray(sizes),
         "eps": _scalar(m.eps, jnp.int64),
+        # fused-kernel re-encoding (query-time cache, not model space)
+        "pk_u0": jnp.asarray(_pad_pow2(karr["u0"], np.float32(1.0))),
+        "pk_slope": jnp.asarray(_pad_pow2(karr["slope"], np.float32(0.0))),
+        "pk_eps": _scalar(karr["eps"], jnp.int32),
+        "pk_kmin": _scalar(karr["kmin"], jnp.float64),
+        "pk_inv_span": _scalar(karr["inv_span"], jnp.float64),
     }
     static = (
         ("levels", len(level_keys)),
         ("epi", _bucket_steps(min(2 * (m.eps + 2) + 3, m.n))),
+        ("pksteps", _bucket_steps(1 << pksteps)),
     )
     info = {
         "name": m.name,
@@ -415,14 +539,14 @@ def _pgm_to_index(kind: str, m, extra_info=None) -> Index:
 
 
 def _build_pgm_index(spec: PGMSpec, table_np: np.ndarray) -> Index:
-    return _pgm_to_index(spec.kind, build_pgm(table_np, eps=spec.eps))
+    return _pgm_to_index(spec.kind, build_pgm(table_np, eps=spec.eps), table_np)
 
 
 def _build_pgm_m_index(spec: PGMBicriteriaSpec, table_np: np.ndarray) -> Index:
     m = build_pgm_bicriteria(
         table_np, space_budget_bytes=spec.budget_for(len(table_np)), a=spec.a
     )
-    return _pgm_to_index(spec.kind, m, {"a": spec.a})
+    return _pgm_to_index(spec.kind, m, table_np, {"a": spec.a})
 
 
 # -- RadixSpline -------------------------------------------------------------
@@ -463,11 +587,60 @@ def _rs_space(idx: Index) -> int:
     return knots + a["radix_table"].nbytes + scalars
 
 
-RS_IMPL = QueryImpl(intervals=_rs_intervals, space_bytes=_rs_space, pallas=_kary_pallas_fallback)
+def _rs_pallas(idx: Index, table, q):
+    """Fused RadixSpline lookup (radix gather + knot search + ε-window
+    probe); the f32 re-anchored spline was folded into the Index leaves
+    at build time (``rk_*`` arrays).  The radix prefix is query-side
+    integer work and is computed here, outside the kernel."""
+    from repro.kernels.ops import split_u64
+    from repro.kernels.rs_search import fused_rs_search_pallas
+
+    a = idx.arrays
+    r_bits = idx.s("r_bits")
+    qc = jnp.maximum(q, a["kmin"])
+    prefix = jnp.minimum((qc - a["kmin"]) >> a["shift"], jnp.uint64((1 << r_bits) - 1)).astype(
+        jnp.int32
+    )
+    u = jnp.clip((q.astype(jnp.float64) - a["rk_kmin"]) * a["rk_inv_span"], 0.0, 1.0).astype(
+        jnp.float32
+    )
+    qhi, qlo = split_u64(q)
+    thi, tlo = split_u64(table)
+    khi, klo = split_u64(a["knot_keys"])
+    nq = q.shape[0]
+    tile = min(512, _pow2ceil(nq))
+    u, qhi, qlo, prefix = _pad_queries([u, qhi, qlo, prefix], tile)
+    out = fused_rs_search_pallas(
+        u,
+        qhi,
+        qlo,
+        prefix,
+        thi,
+        tlo,
+        khi,
+        klo,
+        a["rk_u0"],
+        a["rk_slope"],
+        a["knot_ranks"].astype(jnp.int32),
+        a["radix_table"].astype(jnp.int32),
+        a["m_valid"].reshape(1).astype(jnp.int32),
+        a["rk_eps"].reshape(1),
+        ksteps=idx.s("ksteps"),
+        steps=idx.s("rk_epi"),
+        tile_q=tile,
+        interpret=jax.default_backend() != "tpu",
+    )
+    return out[:nq].astype(POS_DTYPE)
+
+
+RS_IMPL = QueryImpl(intervals=_rs_intervals, space_bytes=_rs_space, pallas=_rs_pallas)
 
 
 def _build_rs_index(spec: RSSpec, table_np: np.ndarray) -> Index:
+    from repro.kernels.ops import rs_kernel_arrays
+
     m = build_rs(table_np, eps=spec.eps, r_bits=spec.r_bits)
+    karr, rksteps = rs_kernel_arrays(m, table_np)
     knot_keys = np.asarray(m.knot_keys)
     knot_ranks = np.asarray(m.knot_ranks)
     arrays = {
@@ -478,11 +651,18 @@ def _build_rs_index(spec: RSSpec, table_np: np.ndarray) -> Index:
         "shift": _scalar(m.shift, jnp.uint64),
         "eps_eff": _scalar(m.eps_eff, jnp.int64),
         "m_valid": _scalar(m.m, jnp.int64),
+        # fused-kernel re-encoding (query-time cache, not model space)
+        "rk_u0": jnp.asarray(_pad_pow2(karr["u0"], np.float32(1.0))),
+        "rk_slope": jnp.asarray(_pad_pow2(karr["slope"], np.float32(0.0))),
+        "rk_eps": _scalar(karr["eps"], jnp.int32),
+        "rk_kmin": _scalar(karr["kmin"], jnp.float64),
+        "rk_inv_span": _scalar(karr["inv_span"], jnp.float64),
     }
     static = (
         ("r_bits", m.r_bits),
         ("ksteps", _bucket_steps(_pow2ceil(len(knot_keys)))),
         ("epi", _bucket_steps(min(2 * m.eps_eff + 3, m.n))),
+        ("rk_epi", _bucket_steps(1 << rksteps)),
     )
     info = {
         "name": m.name,

@@ -22,8 +22,12 @@ Backends (``lookup(..., backend=...)``):
 
 * ``"xla"``    — intervals + branch-free bounded search (default);
 * ``"bbs"``    — intervals + branchy early-exit epilogue (paper's \*-BBS);
-* ``"pallas"`` — fused RMI Pallas kernel for RMI/SY-RMI, lane-wide k-ary
-  Pallas kernel for every other kind (interpret mode off-TPU);
+* ``"pallas"`` — fused Pallas kernels for the learned-model families
+  (RMI/SY-RMI predict+search, PGM descent, RadixSpline radix+knot+probe)
+  and the lane-wide k-ary kernel for the model-free kinds (atomic / KO /
+  B+-tree); interpret mode off-TPU.  Batched/tier lookups dispatch the
+  ``(table, q_tile)``-grid batched kernel variants via
+  :func:`batched_pallas_impl`;
 * ``"ref"``    — ``jnp.searchsorted`` oracle (parity testing).
 """
 
@@ -191,6 +195,24 @@ def lookup_impl(index: Index, table, queries, backend: str):
     if backend == "bbs":
         return search.bounded_bbs_branchy(table, queries, lo, hi)
     return search.bounded_bfs(table, queries, lo, hi, max_window=1 << impl.epi_steps(index))
+
+
+def batched_pallas_impl(index: Index, tables, queries):
+    """Traceable batched-Pallas lookup body: ``(n_tables, B)`` raw local
+    predecessor ranks for stacked leaves / tables / queries.
+
+    The ``backend="pallas"`` counterpart of ``vmap``-over-
+    :func:`lookup_impl`: instead of vmapping the single-table kernels,
+    it dispatches the kind's batched kernel (fused RMI with a
+    ``(table, q_tile)`` grid; batched lane-wide k-ary otherwise), so a
+    whole tier/batch is one ``pallas_call``.  Callers own the valid-count
+    clamp and any rank rebasing, exactly as with ``vmap``'d
+    ``lookup_impl`` — see ``BatchedIndexes.lookup`` and the sharded
+    tier's fallback path.
+    """
+    from . import impls
+
+    return impls.query_impl(index.kind).pallas_batched(index, tables, queries)
 
 
 def count_trace(kind: str, backend: str) -> None:

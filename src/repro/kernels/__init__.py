@@ -1,14 +1,23 @@
 """Pallas TPU kernels for the paper's compute hot spots (validated in
 interpret mode on CPU; see DESIGN.md §3 for the TPU-native adaptations).
 
-- rmi_search:      fused RMI predict + ε-bounded branch-free search
-- kary_search:     lane-wide (k=128) k-ary search — TPU-native K-BFS
+- rmi_search:      fused RMI predict + ε-bounded branch-free search,
+                   single-table and batched (table, q_tile) grids
+- pgm_search:      fused PGM descent — root route + per-level segment
+                   gather + ε-window bounded search
+- rs_search:       fused RadixSpline — radix gather + knot search +
+                   error-window probe
+- kary_search:     lane-wide (k=128) k-ary search — TPU-native K-BFS,
+                   single-table and batched variants
 - embedding_bag:   one-hot-matmul EmbeddingBag over vocab tiles
 - decode_attention: flash-decode GQA attention for the serve path
 
 The search kernels are reached through ``repro.index``: the f32/i32
-re-encoding (``rmi_kernel_arrays``) is folded into ``Index`` build and
-``Index.lookup(..., backend="pallas")`` dispatches here.  The old
+re-encodings (``rmi_kernel_arrays`` / ``pgm_kernel_arrays`` /
+``rs_kernel_arrays``) are folded into ``Index`` build as the
+``k_*``/``pk_*``/``rk_*`` leaves, ``Index.lookup(..., backend="pallas")``
+dispatches the fused kernels, and ``repro.index.batched_pallas_impl``
+dispatches the batched grids for tiers/batches.  The old
 ``prepare_rmi_kernel_index`` / ``fused_rmi_search`` pair remains as a
 deprecated shim.
 """
@@ -19,7 +28,9 @@ from .ops import (
     embedding_bag,
     fused_rmi_search,
     kary_search,
+    pgm_kernel_arrays,
     prepare_rmi_kernel_index,
     rmi_kernel_arrays,
+    rs_kernel_arrays,
     split_u64,
 )

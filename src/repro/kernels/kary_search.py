@@ -50,11 +50,9 @@ def kary_owner_route(boundaries, q, *, k: int = LANES):
     return ub.astype(jnp.int32)
 
 
-def _kary_kernel(qhi_ref, qlo_ref, thi_ref, tlo_ref, out_ref, *, n: int, k: int, steps: int):
-    qhi = qhi_ref[...]
-    qlo = qlo_ref[...]
-    thi = thi_ref[...]
-    tlo = tlo_ref[...]
+def _kary_body(qhi, qlo, thi, tlo, *, n: int, k: int, steps: int):
+    """The lane-wide k-ary search on plain arrays (shared by the
+    single-table and batched kernels)."""
     tq = qhi.shape[0]
 
     base = jnp.zeros((tq,), jnp.int32)
@@ -84,7 +82,24 @@ def _kary_kernel(qhi_ref, qlo_ref, thi_ref, tlo_ref, out_ref, *, n: int, k: int,
     vlo = jnp.take(tlo, idx)
     le = _le_u64(vhi, vlo, qhi[:, None], qlo[:, None]) & (offs < length[:, None])
     cnt = jnp.sum(le, axis=1, dtype=jnp.int32)
-    out_ref[...] = base + cnt - 1
+    return base + cnt - 1
+
+
+def _kary_kernel(qhi_ref, qlo_ref, thi_ref, tlo_ref, out_ref, *, n: int, k: int, steps: int):
+    out_ref[...] = _kary_body(
+        qhi_ref[...], qlo_ref[...], thi_ref[...], tlo_ref[...], n=n, k=k, steps=steps
+    )
+
+
+def _kary_steps(n: int, k: int) -> int:
+    """Splitting steps until the window is <= k (then one lane sweep)."""
+    steps = max(0, int(math.ceil(math.log(max(n, 2)) / math.log(k))) - 1) + (
+        1 if n > k else 0
+    )
+    # conservative: ensure k^steps * k >= n
+    while k ** (steps + 1) < n:
+        steps += 1
+    return steps
 
 
 def kary_search_pallas(
@@ -100,13 +115,7 @@ def kary_search_pallas(
     nq = q_hi.shape[0]
     n = table_hi.shape[0]
     assert nq % tile_q == 0
-    # steps until the window is <= k
-    steps = max(0, int(math.ceil(math.log(max(n, 2)) / math.log(k))) - 1) + (
-        1 if n > k else 0
-    )
-    # conservative: ensure k^steps * k >= n
-    while k ** (steps + 1) < n:
-        steps += 1
+    steps = _kary_steps(n, k)
     grid = (nq // tile_q,)
 
     kernel = functools.partial(_kary_kernel, n=n, k=k, steps=steps)
@@ -118,5 +127,46 @@ def kary_search_pallas(
         in_specs=[qspec, qspec, full, full],
         out_specs=qspec,
         out_shape=jax.ShapeDtypeStruct((nq,), jnp.int32),
+        interpret=interpret,
+    )(q_hi, q_lo, table_hi, table_lo)
+
+
+def _kary_kernel_batched(qhi_ref, qlo_ref, thi_ref, tlo_ref, out_ref, *, n, k, steps):
+    out_ref[0, :] = _kary_body(
+        qhi_ref[0], qlo_ref[0], thi_ref[0], tlo_ref[0], n=n, k=k, steps=steps
+    )
+
+
+def batched_kary_search_pallas(
+    q_hi,
+    q_lo,
+    table_hi,
+    table_lo,
+    *,
+    k: int = LANES,
+    tile_q: int = DEFAULT_TILE_Q,
+    interpret: bool = True,
+):
+    """Batched/tier variant: ``(n_tables, nq)`` queries against
+    ``(n_tables, n)`` tables, grid over ``(table, q_tile)``.
+
+    The model-free Pallas baseline for the batched/sharded lookup of
+    kinds without a fused kernel (same role :func:`kary_search_pallas`
+    plays for single-table ``backend="pallas"``).
+    """
+    nt, nq = q_hi.shape
+    n = table_hi.shape[1]
+    assert nq % tile_q == 0
+    steps = _kary_steps(n, k)
+    grid = (nt, nq // tile_q)
+    qspec = pl.BlockSpec((1, tile_q), lambda t, i: (t, i))
+    per_table = pl.BlockSpec((1, n), lambda t, i: (t, 0))
+    kernel = functools.partial(_kary_kernel_batched, n=n, k=k, steps=steps)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[qspec, qspec, per_table, per_table],
+        out_specs=qspec,
+        out_shape=jax.ShapeDtypeStruct((nt, nq), jnp.int32),
         interpret=interpret,
     )(q_hi, q_lo, table_hi, table_lo)

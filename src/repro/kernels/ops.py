@@ -14,6 +14,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core.cdf import ceil_log2
+
 from .rmi_search import fused_rmi_search_pallas, DEFAULT_TILE_Q
 from .kary_search import kary_search_pallas, LANES
 from .embedding_bag import embedding_bag_pallas
@@ -117,6 +119,133 @@ def rmi_kernel_arrays(model, table_np: np.ndarray):
     steps = max(1, int(math.ceil(math.log2(max(max_window, 2)))))
 
     arrays = {"root": root, "slope": slopes, "icept": icepts, "eps": eps_i, "rlo": rlo, "rhi": rhi}
+    return arrays, steps
+
+
+def pgm_kernel_arrays(model, table_np: np.ndarray):
+    """Re-encode a :class:`repro.core.pgm.PGMModel` for the fused Pallas
+    descent (:mod:`repro.kernels.pgm_search`), re-verifying ε.
+
+    The kernel predicts per segment in f32 ``u`` space, anchored at the
+    segment's own coordinate: ``pred = r0 + slope_u * max(u - u0, 0)``
+    with ``slope_u = slope * span``.  This function re-measures every
+    level's prediction error *with exactly that arithmetic* at every
+    child entry (exact segment assignment — routing in the kernel is an
+    exact limb-compare search) and widens ε so the window remains a
+    guarantee; f32 rounding is monotone, so queries between keys stay
+    covered, and the level fence clamp absorbs gap extrapolation just
+    like the f64 path.
+
+    Returns ``(arrays, steps)``: ``arrays`` holds the level-concatenated
+    f32 leaves (``u0``, ``slope``) plus the scalar ``eps`` / ``kmin`` /
+    ``inv_span``; ``steps`` is the unbucketed trip count for every
+    in-kernel bounded search.  :mod:`repro.index.impls` folds these into
+    the Index pytree as the ``pk_*`` leaves at build time, exactly as
+    :func:`rmi_kernel_arrays` does for the RMI family.
+
+    Example::
+
+        m = build_pgm(table, eps=32)
+        arrays, steps = pgm_kernel_arrays(m, table)
+        assert arrays["u0"].shape[0] == sum(m.level_sizes)
+    """
+    n = model.n
+    kmin = np.float64(table_np[0])
+    span = np.float64(table_np[-1]) - kmin
+    inv_span = np.float64(1.0) / span if span > 0 else np.float64(1.0)
+
+    def u_of(keys_u64):
+        u = (keys_u64.astype(np.float64) - kmin) * inv_span
+        return np.clip(u, 0.0, 1.0).astype(np.float32)
+
+    levels = len(model.level_keys)
+    u0_parts, slope_parts = [], []
+    max_err = 0.0
+    for lvl in range(levels):
+        keys_l = np.asarray(model.level_keys[lvl])
+        u0_l = u_of(keys_l)
+        slope_u = (np.asarray(model.level_slope[lvl]) * span).astype(np.float32)
+        u0_parts.append(u0_l)
+        slope_parts.append(slope_u)
+        child = np.asarray(model.level_keys[lvl + 1]) if lvl + 1 < levels else table_np
+        # exact segment assignment — mirrors the kernel's limb-compare route
+        s = np.clip(np.searchsorted(keys_l, child, side="right") - 1, 0, len(keys_l) - 1)
+        r0 = np.asarray(model.level_rank0[lvl])[s].astype(np.float32)
+        du = np.maximum(u_of(child) - u0_l[s], np.float32(0.0))
+        pred = r0 + slope_u[s] * du  # the kernel's f32 arithmetic, verbatim
+        err = np.abs(pred.astype(np.float64) - np.arange(len(child), dtype=np.float64))
+        if len(err):
+            max_err = max(max_err, float(err.max()))
+    # +2: one for between-keys interpolation drift beyond the widened ±1
+    # the query path already adds, one for XLA fusing mul+add into an FMA
+    eps = int(min(np.ceil(max_err) + 2, n))
+    steps = ceil_log2(min(2 * (eps + 1) + 3, max(n, 2)))
+    arrays = {
+        "u0": np.concatenate(u0_parts),
+        "slope": np.concatenate(slope_parts),
+        "eps": eps,
+        "kmin": kmin,
+        "inv_span": inv_span,
+    }
+    return arrays, steps
+
+
+def rs_kernel_arrays(model, table_np: np.ndarray):
+    """Re-encode a :class:`repro.core.radix_spline.RSModel` for the fused
+    Pallas lookup (:mod:`repro.kernels.rs_search`), re-verifying ε.
+
+    Interpolation between knots is re-anchored in f32 ``u`` space with a
+    precomputed per-knot-segment slope: ``pred = y1 + slope_j *
+    max(u - u1, 0)``.  The error of that exact arithmetic is re-measured
+    at every table key *and* at every knot evaluated under its left
+    neighbour's segment (the boundary a query can reach just below a
+    knot), and ε widens accordingly, so the reported window stays a
+    guarantee under f32 rounding (which is monotone between knots).
+
+    Returns ``(arrays, steps)``: f32 ``u0``/``slope`` per knot plus the
+    scalar ``eps``/``kmin``/``inv_span``, and the unbucketed trip count
+    of the final window probe.  Folded into the Index as ``rk_*`` leaves
+    at build time.
+
+    Example::
+
+        m = build_rs(table, eps=32, r_bits=10)
+        arrays, steps = rs_kernel_arrays(m, table)
+        assert arrays["u0"].shape[0] == m.m
+    """
+    n = model.n
+    m = model.m
+    knot_keys = np.asarray(model.knot_keys)[:m]
+    knot_ranks = np.asarray(model.knot_ranks)[:m]
+    kmin = np.float64(np.asarray(model.kmin))
+    span = np.float64(table_np[-1]) - kmin
+    inv_span = np.float64(1.0) / span if span > 0 else np.float64(1.0)
+
+    def u_of(keys_u64):
+        u = (keys_u64.astype(np.float64) - kmin) * inv_span
+        return np.clip(u, 0.0, 1.0).astype(np.float32)
+
+    u0 = u_of(knot_keys)
+    slope = np.zeros(m, dtype=np.float32)
+    if m >= 2:
+        dy = (knot_ranks[1:] - knot_ranks[:-1]).astype(np.float32)
+        du = u0[1:] - u0[:-1]
+        # u-collided knot pairs (f32 resolution) predict y1 flat; the
+        # measured ε absorbs the rank span they cover
+        np.divide(dy, du, out=slope[:-1], where=du > 0)
+        j = np.clip(np.searchsorted(knot_keys, table_np, side="right") - 1, 0, m - 2)
+        y1 = knot_ranks[j].astype(np.float32)
+        pred = y1 + slope[j] * np.maximum(u_of(table_np) - u0[j], np.float32(0.0))
+        err = np.abs(pred.astype(np.float64) - np.arange(n, dtype=np.float64))
+        # boundary extension: each knot under its left segment's model
+        pred_b = knot_ranks[:-1].astype(np.float32) + slope[:-1] * np.maximum(du, np.float32(0.0))
+        err_b = np.abs(pred_b.astype(np.float64) - knot_ranks[1:].astype(np.float64))
+        max_err = max(float(err.max()), float(err_b.max()))
+        eps = int(min(np.ceil(max_err) + 2, n))
+    else:
+        eps = max(int(n), 1)
+    steps = ceil_log2(min(2 * eps + 3, max(n, 2)))
+    arrays = {"u0": u0, "slope": slope, "eps": eps, "kmin": kmin, "inv_span": inv_span}
     return arrays, steps
 
 

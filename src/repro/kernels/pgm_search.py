@@ -1,0 +1,237 @@
+"""Fused PGM descent — root route + per-level segment gather + ε-window
+bounded search, one Pallas kernel.
+
+The PGM query (paper §3.2) is a top-down walk: at each level, the
+current segment's linear model predicts a window over the level below,
+and an exact bounded search of that window yields the next level's
+segment.  The XLA path in :mod:`repro.index.impls` unrolls this as one
+``jnp`` stage per level; this kernel fuses the whole descent so every
+level's gather + predict + search happens on the same resident query
+tile (the paper's "tight search kernel" requirement for learned models
+to beat binary search).
+
+TPU adaptations, mirroring :mod:`rmi_search`:
+
+* keys travel as u32 limb pairs; every search compare is the
+  lexicographic limb compare (exact, so **routing is exact** — only the
+  predictions are approximate);
+* per-segment predictions are re-anchored into the f32 CDF coordinate
+  ``u`` pre-normalised outside the kernel: ``pred = r0 + slope_u *
+  max(u - u0, 0)`` with ``slope_u = slope * span``.  Anchoring at the
+  segment's own ``u0`` keeps the multiplicand small (Sterbenz regime),
+  so cancellation cannot blow the window;
+* the build re-measures every level's prediction error with exactly
+  this f32 arithmetic and widens ε accordingly
+  (:func:`repro.kernels.ops.pgm_kernel_arrays`); f32 rounding is
+  monotone, so the widened window stays a guarantee for queries between
+  keys, and the exact ``[r0-1, r1-1]`` fence clamp absorbs
+  gap-extrapolation blow-ups exactly as in the f64 path;
+* the level directories (``off``/``off_r``/``sizes``) are tiny i32
+  arrays indexed by the *static* level counter, so the level loop fully
+  unrolls with static offsets into the flat padded leaf arrays —
+  the same padded-leaf encoding ``_lift_pgm_levels`` produces for
+  shard-stacking, which is what makes this kernel tier-stackable.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from .rmi_search import _le_u64, DEFAULT_TILE_Q
+
+
+def _bounded_ub_limbs(khi, klo, qhi, qlo, base, length, *, steps: int):
+    """First index in [base, base+length) with key > q (limb compare);
+    ``base + length`` if none.  Fixed-trip Khuong–Morin loop."""
+
+    def body(_, carry):
+        b, n = carry
+        half = n >> 1
+        mid = b + half
+        go_right = _le_u64(jnp.take(khi, mid), jnp.take(klo, mid), qhi, qlo) & (n > 1)
+        b = jnp.where(go_right, mid, b)
+        n = n - jnp.where(n > 1, half, 0)
+        return b, n
+
+    b, _ = lax.fori_loop(0, steps, body, (base, length))
+    le = _le_u64(jnp.take(khi, b), jnp.take(klo, b), qhi, qlo)
+    return b + le.astype(jnp.int32)
+
+
+def _pgm_body(
+    u,
+    qhi,
+    qlo,
+    thi,
+    tlo,
+    khi,
+    klo,
+    u0_a,
+    slope_a,
+    r0_a,
+    off,
+    off_r,
+    sizes,
+    eps,
+    *,
+    levels: int,
+    n: int,
+    steps: int,
+):
+    """The fused descent on plain arrays (shared single/batched body)."""
+    seg = jnp.zeros(u.shape, dtype=jnp.int32)
+    for lvl in range(levels):  # static unroll: off[lvl] reads are scalar
+        base_k = off[lvl]
+        base_r = off_r[lvl]
+        u0 = jnp.take(u0_a, base_k + seg)
+        slope = jnp.take(slope_a, base_k + seg)
+        r0 = jnp.take(r0_a, base_r + seg)
+        r1 = jnp.take(r0_a, base_r + seg + 1)
+        pred = r0.astype(jnp.float32) + slope * jnp.maximum(u - u0, 0.0)
+        pred = jnp.clip(pred, -1.0e9, 1.0e9)  # gap blow-ups: clamp pre-cast
+        b_lo = jnp.maximum(r0 - 1, 0)
+        b_hi = r1 - 1
+        lo = jnp.clip(jnp.floor(pred).astype(jnp.int32) - (eps + 1), b_lo, b_hi)
+        hi = jnp.clip(jnp.ceil(pred).astype(jnp.int32) + (eps + 1), b_lo, b_hi)
+        if lvl + 1 < levels:
+            base_n = off[lvl + 1]
+            ub = _bounded_ub_limbs(khi, klo, qhi, qlo, base_n + lo, hi - lo + 1, steps=steps)
+            seg = jnp.clip(ub - base_n - 1, 0, sizes[lvl + 1] - 1)
+        else:
+            # leaf level: r0 indexes the table — final ε-window search
+            lo = jnp.clip(lo, 0, n - 1)
+            hi = jnp.clip(hi, 0, n - 1)
+            ub = _bounded_ub_limbs(thi, tlo, qhi, qlo, lo, hi - lo + 1, steps=steps)
+            return ub - 1
+    raise AssertionError("unreachable")
+
+
+def _pgm_kernel(
+    u_ref,
+    qhi_ref,
+    qlo_ref,
+    thi_ref,
+    tlo_ref,
+    khi_ref,
+    klo_ref,
+    u0_ref,
+    slope_ref,
+    r0_ref,
+    off_ref,
+    off_r_ref,
+    sizes_ref,
+    eps_ref,
+    out_ref,
+    *,
+    levels: int,
+    n: int,
+    steps: int,
+):
+    out_ref[...] = _pgm_body(
+        u_ref[...],
+        qhi_ref[...],
+        qlo_ref[...],
+        thi_ref[...],
+        tlo_ref[...],
+        khi_ref[...],
+        klo_ref[...],
+        u0_ref[...],
+        slope_ref[...],
+        r0_ref[...],
+        off_ref[...],
+        off_r_ref[...],
+        sizes_ref[...],
+        eps_ref[0],
+        levels=levels,
+        n=n,
+        steps=steps,
+    )
+
+
+def fused_pgm_search_pallas(
+    u_f32,
+    q_hi,
+    q_lo,
+    table_hi,
+    table_lo,
+    keys_hi,
+    keys_lo,
+    pk_u0,
+    pk_slope,
+    rank0_i32,
+    off_i32,
+    off_r_i32,
+    sizes_i32,
+    eps_i32,
+    *,
+    levels: int,
+    steps: int,
+    tile_q: int = DEFAULT_TILE_Q,
+    interpret: bool = True,
+):
+    """pallas_call wrapper for the fused PGM descent.
+
+    ``keys_hi/lo`` are the limb split of the level-concatenated padded
+    segment keys; ``pk_u0``/``pk_slope`` the f32 re-anchored segment
+    models (:func:`repro.kernels.ops.pgm_kernel_arrays`); ``rank0_i32``
+    the concatenated level directories; ``eps_i32`` a one-element array
+    holding the f32-widened ε.  Queries must be padded to a tile
+    multiple.
+    """
+    nq = u_f32.shape[0]
+    n = table_hi.shape[0]
+    kn = keys_hi.shape[0]
+    rn = rank0_i32.shape[0]
+    assert nq % tile_q == 0, "pad queries to a tile multiple (see ops.py)"
+    grid = (nq // tile_q,)
+
+    def qspec():
+        return pl.BlockSpec((tile_q,), lambda i: (i,))
+
+    def full(m):
+        return pl.BlockSpec((m,), lambda i: (0,))
+
+    kernel = functools.partial(_pgm_kernel, levels=levels, n=n, steps=steps)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            qspec(),  # u
+            qspec(),  # q_hi
+            qspec(),  # q_lo
+            full(n),  # table_hi
+            full(n),  # table_lo
+            full(kn),  # keys_hi
+            full(kn),  # keys_lo
+            full(kn),  # pk_u0
+            full(kn),  # pk_slope
+            full(rn),  # rank0
+            full(levels + 1),  # off
+            full(levels + 1),  # off_r
+            full(levels),  # sizes
+            full(1),  # eps
+        ],
+        out_specs=qspec(),
+        out_shape=jax.ShapeDtypeStruct((nq,), jnp.int32),
+        interpret=interpret,
+    )(
+        u_f32,
+        q_hi,
+        q_lo,
+        table_hi,
+        table_lo,
+        keys_hi,
+        keys_lo,
+        pk_u0,
+        pk_slope,
+        rank0_i32,
+        off_i32,
+        off_r_i32,
+        sizes_i32,
+        eps_i32,
+    )

@@ -1,0 +1,202 @@
+"""Fused RadixSpline lookup — radix-table gather + spline-knot search +
+error-window probe, one Pallas kernel.
+
+The RadixSpline query (paper §3.2) is three dependent stages: a radix
+table over the top ``r`` bits narrows the knot range, a bounded search
+finds the enclosing knot pair, and linear interpolation between the
+knots predicts an ε-window over the table.  The XLA path runs these as
+separate gathers through :mod:`repro.index.impls`; here they fuse onto
+one resident query tile, including the final ε-window probe (the
+"radix-table gather + knot search fuses cleanly" item from ROADMAP).
+
+TPU adaptations, mirroring :mod:`rmi_search` / :mod:`pgm_search`:
+
+* the radix prefix ``(q - kmin) >> shift`` is pure query-side integer
+  work, pre-computed outside the kernel in native u64 (no limb shifts
+  in-kernel);
+* knot selection is the exact limb-compare bounded search, so the knot
+  pair is **exact**; only the interpolation is approximate;
+* interpolation is re-anchored in f32 ``u`` space: ``pred = y1 +
+  slope_j * (u - u1)`` with per-knot-segment slopes precomputed at
+  build (:func:`repro.kernels.ops.rs_kernel_arrays`), which re-measures
+  the prediction error of every table key *and every knot boundary*
+  with exactly this f32 arithmetic and widens ε so the window stays a
+  guarantee (f32 rounding is monotone between knots).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .pgm_search import _bounded_ub_limbs
+from .rmi_search import DEFAULT_TILE_Q
+
+
+def _rs_body(
+    u,
+    qhi,
+    qlo,
+    prefix,
+    thi,
+    tlo,
+    khi,
+    klo,
+    u0_a,
+    slope_a,
+    rank_a,
+    radix,
+    m_valid,
+    eps,
+    *,
+    n: int,
+    ksteps: int,
+    steps: int,
+):
+    """The fused three-stage lookup on plain arrays."""
+    # --- stage 1: radix-table gather bounds the knot range ---
+    lo_k = jnp.maximum(jnp.take(radix, prefix) - 1, 0)
+    hi_k = jnp.take(radix, prefix + 1)
+    length = jnp.maximum(hi_k - lo_k, 1)
+
+    # --- stage 2: exact knot search (limb compare) + f32 interpolation ---
+    ub = _bounded_ub_limbs(khi, klo, qhi, qlo, lo_k, length, steps=ksteps)
+    j = jnp.clip(ub - 1, 0, m_valid - 2)
+    y1 = jnp.take(rank_a, j).astype(jnp.float32)
+    pred = y1 + jnp.take(slope_a, j) * jnp.maximum(u - jnp.take(u0_a, j), 0.0)
+    pred = jnp.clip(pred, -1.0e9, 1.0e9)
+    lo = jnp.clip(jnp.floor(pred).astype(jnp.int32) - eps, 0, n - 1)
+    hi = jnp.clip(jnp.ceil(pred).astype(jnp.int32) + eps, 0, n - 1)
+
+    # --- stage 3: ε-window probe over the table limbs ---
+    ub_t = _bounded_ub_limbs(thi, tlo, qhi, qlo, lo, hi - lo + 1, steps=steps)
+    return ub_t - 1
+
+
+def _rs_kernel(
+    u_ref,
+    qhi_ref,
+    qlo_ref,
+    prefix_ref,
+    thi_ref,
+    tlo_ref,
+    khi_ref,
+    klo_ref,
+    u0_ref,
+    slope_ref,
+    rank_ref,
+    radix_ref,
+    mv_ref,
+    eps_ref,
+    out_ref,
+    *,
+    n: int,
+    ksteps: int,
+    steps: int,
+):
+    out_ref[...] = _rs_body(
+        u_ref[...],
+        qhi_ref[...],
+        qlo_ref[...],
+        prefix_ref[...],
+        thi_ref[...],
+        tlo_ref[...],
+        khi_ref[...],
+        klo_ref[...],
+        u0_ref[...],
+        slope_ref[...],
+        rank_ref[...],
+        radix_ref[...],
+        mv_ref[0],
+        eps_ref[0],
+        n=n,
+        ksteps=ksteps,
+        steps=steps,
+    )
+
+
+def fused_rs_search_pallas(
+    u_f32,
+    q_hi,
+    q_lo,
+    prefix_i32,
+    table_hi,
+    table_lo,
+    knot_hi,
+    knot_lo,
+    rk_u0,
+    rk_slope,
+    knot_rank_i32,
+    radix_i32,
+    m_valid_i32,
+    eps_i32,
+    *,
+    ksteps: int,
+    steps: int,
+    tile_q: int = DEFAULT_TILE_Q,
+    interpret: bool = True,
+):
+    """pallas_call wrapper for the fused RadixSpline lookup.
+
+    ``prefix_i32`` is the per-query radix prefix (pre-computed outside,
+    clipped to ``[0, 2^r - 1]``); ``knot_hi/lo`` the limb split of the
+    padded knot keys; ``rk_u0``/``rk_slope`` the f32 re-anchored spline
+    (:func:`repro.kernels.ops.rs_kernel_arrays`); ``m_valid_i32`` /
+    ``eps_i32`` one-element arrays with the valid knot count and the
+    f32-widened ε.  Queries must be padded to a tile multiple.
+    """
+    nq = u_f32.shape[0]
+    n = table_hi.shape[0]
+    mk = knot_hi.shape[0]
+    rn = radix_i32.shape[0]
+    assert nq % tile_q == 0, "pad queries to a tile multiple (see ops.py)"
+    grid = (nq // tile_q,)
+
+    def qspec():
+        return pl.BlockSpec((tile_q,), lambda i: (i,))
+
+    def full(m):
+        return pl.BlockSpec((m,), lambda i: (0,))
+
+    kernel = functools.partial(_rs_kernel, n=n, ksteps=ksteps, steps=steps)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            qspec(),  # u
+            qspec(),  # q_hi
+            qspec(),  # q_lo
+            qspec(),  # prefix
+            full(n),  # table_hi
+            full(n),  # table_lo
+            full(mk),  # knot_hi
+            full(mk),  # knot_lo
+            full(mk),  # rk_u0
+            full(mk),  # rk_slope
+            full(mk),  # knot ranks
+            full(rn),  # radix table
+            full(1),  # m_valid
+            full(1),  # eps
+        ],
+        out_specs=qspec(),
+        out_shape=jax.ShapeDtypeStruct((nq,), jnp.int32),
+        interpret=interpret,
+    )(
+        u_f32,
+        q_hi,
+        q_lo,
+        prefix_i32,
+        table_hi,
+        table_lo,
+        knot_hi,
+        knot_lo,
+        rk_u0,
+        rk_slope,
+        knot_rank_i32,
+        radix_i32,
+        m_valid_i32,
+        eps_i32,
+    )

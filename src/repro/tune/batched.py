@@ -51,7 +51,7 @@ from repro.dist.sharded_index import (
     _pow2ceil,
     stack_indexes,
 )
-from repro.index import Index, count_trace, lookup_impl, registry
+from repro.index import Index, batched_pallas_impl, count_trace, lookup_impl, registry
 from repro.index.specs import IndexSpec
 
 _MAXKEY = np.uint64(np.iinfo(np.uint64).max)
@@ -64,10 +64,12 @@ FITS = ("host", "vmap", "auto")
 #: Kinds whose leaf stage vmaps (two-level RMI family).
 VMAP_KINDS = ("RMI", "SY-RMI")
 
-#: Backends the batched lookup supports — ``Index.lookup`` minus
-#: ``pallas``, whose fused kernel is single-table only (the same
-#: restriction as the sharded tier's ``TIER_BACKENDS``).
-BATCH_BACKENDS = ("xla", "bbs", "ref")
+#: Backends the batched lookup supports — the full ``Index.lookup``
+#: set.  ``pallas`` dispatches the batched ``(table, q_tile)``-grid
+#: kernels via :func:`repro.index.batched_pallas_impl` (fused RMI for
+#: the RMI family, lane-wide k-ary otherwise) instead of vmapping the
+#: single-table path, mirroring the sharded tier's ``TIER_BACKENDS``.
+BATCH_BACKENDS = ("xla", "bbs", "pallas", "ref")
 
 
 def _resolve_spec(kind_or_spec, **params) -> IndexSpec:
@@ -232,8 +234,7 @@ class BatchedIndexes:
         (a ``(B,)`` batch is broadcast to every table)."""
         if backend not in BATCH_BACKENDS:
             raise ValueError(
-                f"unknown batched backend {backend!r}; choose from {BATCH_BACKENDS} "
-                "(the fused-pallas path is single-table only)"
+                f"unknown batched backend {backend!r}; choose from {BATCH_BACKENDS}"
             )
         queries = jnp.asarray(queries)
         if queries.ndim == 1:
@@ -259,6 +260,12 @@ def _is_pgm(kind: str) -> bool:
 @partial(jax.jit, static_argnames=("backend",))
 def _lookup_many_jit(index: Index, tables, counts, queries, backend: str):
     count_trace(f"batched:{index.kind}", backend)  # python side effect: per trace
+
+    if backend == "pallas":
+        # one batched (table, q_tile)-grid kernel call for the whole
+        # batch instead of a vmap of the single-table kernel
+        r = batched_pallas_impl(index, tables, queries)
+        return jnp.minimum(r.astype(POS_DTYPE), counts[:, None] - 1)
 
     def one(idx, tab, cnt, q):
         r = lookup_impl(idx, tab, q, backend)
@@ -293,11 +300,15 @@ def _lower_pgm_arrays(arrays: dict, lifted: int, target: int) -> dict:
     keys = np.asarray(arrays["keys"])[:kv][extra:]
     slope = np.asarray(arrays["slope"])[:kv][extra:]
     rank0 = np.asarray(arrays["rank0"])[:rv][2 * extra :]
+    pk_u0 = np.asarray(arrays["pk_u0"])[:kv][extra:]
+    pk_slope = np.asarray(arrays["pk_slope"])[:kv][extra:]
     new_sizes = sizes[extra:].astype(np.int64)
     out = dict(arrays)
     out["keys"] = jnp.asarray(_pad_pow2(keys, _MAXKEY))
     out["slope"] = jnp.asarray(_pad_pow2(slope, 0.0))
     out["rank0"] = jnp.asarray(_pad_pow2(rank0, rank0[-1]))
+    out["pk_u0"] = jnp.asarray(_pad_pow2(pk_u0, np.float32(1.0)))
+    out["pk_slope"] = jnp.asarray(_pad_pow2(pk_slope, np.float32(0.0)))
     out["sizes"] = jnp.asarray(new_sizes)
     out["off"] = jnp.asarray(np.concatenate([[0], np.cumsum(new_sizes)]).astype(np.int64))
     out["off_r"] = jnp.asarray(np.concatenate([[0], np.cumsum(new_sizes + 1)]).astype(np.int64))
@@ -323,6 +334,14 @@ def build_many(kind_or_spec, tables, *, fit: str = "host", **params) -> BatchedI
 
     ``fit="vmap"`` batches the RMI-family leaf stage in one jitted
     trace; ``fit="auto"`` picks ``vmap`` where it applies.
+
+    Example — one spec, a tier of tables, every backend incl. the
+    batched Pallas kernels::
+
+        bm = build_many(RMISpec(b=1024), [t0, t1, t2])
+        ranks = bm.lookup(queries)                    # (3, B), one trace
+        ranks = bm.lookup(queries, backend="pallas")  # one pallas_call
+        per_table = bm.unstack()                      # bit-exact Indexes
     """
     if fit not in FITS:
         raise ValueError(f"unknown fit {fit!r}; choose from {FITS}")
@@ -382,6 +401,13 @@ def build_grid(specs, table_np, *, fit: str = "auto") -> list:
     its registered host builder.  Specs of one kind + structure already
     share their jitted *lookup* (the PR-1 invariant), so a full grid
     sweep compiles O(kinds), not O(specs).
+
+    Example — the CDFShop-style sweep behind the Pareto tuner::
+
+        specs = [RMISpec(b=512, root_type=r) for r in ("linear", "cubic")]
+        specs += [PGMSpec(eps=64), RSSpec(eps=32)]
+        built = build_grid(specs, table)   # spec order preserved
+        sizes = [idx.space_bytes() for idx in built]
     """
     if fit not in FITS:
         raise ValueError(f"unknown fit {fit!r}; choose from {FITS}")

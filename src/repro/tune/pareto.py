@@ -202,6 +202,18 @@ def best_spec_for_budget(table_np, space_budget_pct: float, **sweep_kw) -> Index
 
     Raises ``ValueError`` if no candidate fits (the default grid's
     atomic models are ~56 bytes, so realistic budgets always have one).
+
+    Extra keyword arguments flow to :func:`sweep` (``kinds=`` restricts
+    the grid, ``backend=`` picks the timed query path, ``reps``/
+    ``n_queries`` trade precision for sweep time).
+
+    Example — pick and build the fastest index that fits 2% of the
+    table, then serve it::
+
+        spec = best_spec_for_budget(table, 2.0, n_queries=4096)
+        idx = repro.index.build(spec, table)
+        assert idx.space_bytes() <= 0.02 * table.nbytes
+        ranks = idx.lookup(table, queries, backend="pallas")
     """
     table_np = np.asarray(table_np, dtype=np.uint64)
     cands = sweep(table_np, **sweep_kw)

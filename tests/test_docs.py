@@ -1,0 +1,32 @@
+"""The docs tree stays consistent with the code (the CI docs-check gate
+run as a tier-1 test, so local runs catch doc rot before CI does)."""
+
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "tools"))
+
+import docs_check  # noqa: E402
+
+
+def test_backend_matrix_covers_registry():
+    assert docs_check.check_backend_matrix() == []
+
+
+def test_readme_and_docs_links_resolve():
+    assert docs_check.check_links() == []
+
+
+def test_required_docs_exist():
+    for rel in ("README.md", "docs/architecture.md", "docs/backends.md", "docs/benchmarks.md"):
+        assert (ROOT / rel).exists(), rel
+
+
+def test_matrix_check_catches_missing_kind(monkeypatch):
+    """The gate actually gates: drop a kind's row and it must fail."""
+    text = (ROOT / "docs" / "backends.md").read_text()
+    broken = "\n".join(ln for ln in text.splitlines() if not ln.startswith("| RMI |"))
+    monkeypatch.setattr(docs_check.Path, "read_text", lambda self, *a, **k: broken, raising=True)
+    errors = docs_check.check_backend_matrix()
+    assert any("RMI" in e for e in errors)

@@ -2,8 +2,11 @@
 
 Search kernels assert exact integer equality; float kernels use
 tolerances calibrated to f32 reduction error.  The search kernels are
-reached through the unified ``repro.index`` API (``backend="pallas"``);
-the legacy ``prepare_rmi_kernel_index`` shim keeps one smoke test.
+reached through the unified ``repro.index`` API (``backend="pallas"``):
+fused RMI, fused PGM descent, fused RadixSpline, the batched
+(table, q_tile)-grid RMI kernel, and the k-ary fallback — every
+registered kind must be bit-exact vs ``backend="ref"``.  The legacy
+``prepare_rmi_kernel_index`` shim keeps one smoke test.
 """
 
 import numpy as np
@@ -40,6 +43,111 @@ def test_fused_rmi_kernel_legacy_shim(rng):
     kidx = ops.prepare_rmi_kernel_index(m, table)
     got = np.asarray(ops.fused_rmi_search(kidx, qs, tile_q=128))
     np.testing.assert_array_equal(got, true_ranks(table, qs))
+
+
+def _edge_queries(rng, table, n_random=200):
+    """Query mix aimed at ε-window edges: exact keys (window centre),
+    keys ± 1 (boundary predecessors — one sits at the previous rank,
+    one is an equality hit), uniform misses, and the extremes."""
+    keys = rng.choice(table, min(len(table), 150)).astype(np.uint64)
+    return np.concatenate(
+        [
+            keys,
+            keys - np.uint64(1),  # just below a key: predecessor rank - 1
+            keys + np.uint64(1),  # just above: same rank as the key
+            rng.integers(0, 2**64 - 1, n_random, dtype=np.uint64),
+            np.array(
+                [0, table.min() - 1, table.min(), table.max(), table.max() + 1, 2**64 - 1],
+                dtype=np.uint64,
+            ),
+        ]
+    ).astype(np.uint64)
+
+
+@pytest.mark.parametrize("kind", ["uniform", "clustered", "bursty", "sequential"])
+@pytest.mark.parametrize("n", [64, 1000, 65536])
+def test_fused_pgm_kernel(rng, kind, n):
+    """Fused PGM descent == searchsorted, incl. boundary predecessors,
+    out-of-range keys and ε-window edges, on every table shape."""
+    table = make_table(rng, kind, n)
+    qs = _edge_queries(rng, table)
+    want = true_ranks(table, qs)
+    m = ix.build(ix.PGMSpec(eps=max(4, n // 256)), table)
+    got = np.asarray(m.lookup(table, qs, backend="pallas"))
+    np.testing.assert_array_equal(got, want)
+    # bit-exact vs the ref backend too (the acceptance contract)
+    ref_ranks = np.asarray(m.lookup(table, qs, backend="ref"))
+    np.testing.assert_array_equal(got, ref_ranks)
+
+
+@pytest.mark.parametrize("kind", ["uniform", "clustered", "bursty", "sequential"])
+@pytest.mark.parametrize("n", [64, 1000, 65536])
+def test_fused_rs_kernel(rng, kind, n):
+    """Fused RadixSpline lookup == searchsorted across table shapes."""
+    table = make_table(rng, kind, n)
+    qs = _edge_queries(rng, table)
+    want = true_ranks(table, qs)
+    m = ix.build(ix.RSSpec(eps=16, r_bits=10), table)
+    got = np.asarray(m.lookup(table, qs, backend="pallas"))
+    np.testing.assert_array_equal(got, want)
+    np.testing.assert_array_equal(got, np.asarray(m.lookup(table, qs, backend="ref")))
+
+
+def test_pallas_bit_exact_all_kinds(rng):
+    """Acceptance: lookup(backend="pallas") is bit-exact vs
+    backend="ref" for EVERY registered kind."""
+    table = make_table(rng, "lognormal", 8192)
+    qs = _edge_queries(rng, table)
+    params = {
+        "L": {},
+        "Q": {},
+        "C": {},
+        "KO": {"k": 7},
+        "RMI": {"b": 128},
+        "SY-RMI": {"space_pct": 2.0, "ub": 0.04},
+        "PGM": {"eps": 32},
+        "PGM_M": {"space_pct": 2.0, "a": 1.0},
+        "RS": {"eps": 32, "r_bits": 10},
+        "BTREE": {"fanout": 16},
+    }
+    assert set(params) == set(ix.kinds())
+    for kind in ix.kinds():
+        m = ix.build(kind, table, **params[kind])
+        got = np.asarray(m.lookup(table, qs, backend="pallas"))
+        want = np.asarray(m.lookup(table, qs, backend="ref"))
+        np.testing.assert_array_equal(got, want, err_msg=kind)
+
+
+def test_batched_rmi_kernel(rng):
+    """The batched (table, q_tile)-grid fused RMI kernel answers every
+    table of a stacked batch exactly, with one merged trip count
+    covering heterogeneous per-table windows."""
+    from repro import tune
+    from repro.core import true_ranks as tr
+
+    tables = [make_table(rng, k, 2048) for k in ("uniform", "clustered", "bursty")]
+    qs = _edge_queries(rng, np.concatenate(tables))
+    for spec in (ix.RMISpec(b=64), ix.SYRMISpec(space_pct=2.0, ub=0.04)):
+        bm = tune.build_many(spec, tables)
+        # the merged static is the max of the per-table trip counts
+        singles = [ix.build(spec, t) for t in tables]
+        assert bm.index.s("ksteps") == max(s.s("ksteps") for s in singles)
+        outs = np.asarray(bm.lookup(qs, backend="pallas"))
+        for i, t in enumerate(tables):
+            np.testing.assert_array_equal(outs[i], tr(t, qs), err_msg=f"{spec.kind}/{i}")
+
+
+def test_pgm_rs_kernel_f32_widening(rng):
+    """The fused kernels' f32 re-encodings carry their own re-measured
+    ε and stay within sane bounds (the window must remain a guarantee
+    without degenerating to the whole table on benign data)."""
+    table = make_table(rng, "clustered", 20000)
+    pgm = ix.build(ix.PGMSpec(eps=16), table)
+    assert 1 <= int(np.asarray(pgm.arrays["pk_eps"])) < len(table)
+    assert pgm.s("pksteps") >= 4
+    rs = ix.build(ix.RSSpec(eps=16, r_bits=10), table)
+    assert 1 <= int(np.asarray(rs.arrays["rk_eps"])) < len(table)
+    assert rs.s("rk_epi") >= 4
 
 
 @pytest.mark.parametrize("k", [8, 128])

@@ -99,8 +99,6 @@ def test_sharding_ctx_n_multidevice_extent():
 def test_sharded_matches_concat_reference(rng, kind, backend):
     """Acceptance: sharded lookup == single-table Index.lookup on the
     concatenated table, for every registered kind."""
-    if backend == "pallas":
-        pytest.skip("tier answers locally via the xla/bbs/ref query paths")
     table, qs = _table_and_queries(rng)
     want = true_ranks(table, qs)
     ref_idx = ix.build(kind, table, **PARAMS_PER_KIND[kind])
@@ -258,9 +256,11 @@ def test_sharded_lookup_rejects_unknown_backend(rng):
     table, qs = _table_and_queries(rng, n=256, nq=16)
     sidx = si.ShardedIndex.build("RMI", table, n_shards=2, b=64)
     with pytest.raises(ValueError, match="tier backend"):
-        si.sharded_lookup(sidx, qs, backend="pallas")
-    with pytest.raises(ValueError, match="tier backend"):
         si.sharded_lookup(sidx, qs, backend="xIa")
+    # pallas is a first-class tier backend (batched fused kernels)
+    assert "pallas" in si.TIER_BACKENDS
+    got = np.asarray(si.sharded_lookup(sidx, qs, backend="pallas"))
+    np.testing.assert_array_equal(got, true_ranks(table, qs))
 
 
 # ---------------------------------------------------------------------------
@@ -271,8 +271,6 @@ def test_sharded_lookup_rejects_unknown_backend(rng):
 @pytest.mark.parametrize("mode", ["a2a", "allgather"])
 @pytest.mark.parametrize("n_shards", [2, 4])
 def test_spmd_modes_match_reference(rng, n_shards, mode, backend):
-    if backend == "pallas":
-        pytest.skip("tier answers locally via the xla/bbs/ref query paths")
     ctx = _mesh_ctx(n_shards)
     if ctx is None:
         pytest.skip(f"needs {n_shards} devices (multihost CI leg / subprocess test)")

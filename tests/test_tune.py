@@ -139,6 +139,28 @@ def test_build_many_ragged_tables_lookup_exact(rng):
             np.testing.assert_array_equal(outs[i], true_ranks(t, qs), err_msg=f"{kind}/{i}")
 
 
+def test_batched_lookup_pallas_exact_all_kinds(rng):
+    """Acceptance: BATCH_BACKENDS includes pallas, and the batched
+    (table, q_tile)-grid kernels answer every kind exactly — fused
+    batched RMI for the RMI family, batched lane-wide k-ary otherwise —
+    including padded-tail clamping on ragged batches."""
+    assert "pallas" in tune.BATCH_BACKENDS
+    tables = _tables(rng)
+    qs = _queries(rng, tables)
+    for kind in ix.kinds():
+        bm = tune.build_many(ix.spec_for(kind, **PARAMS[kind]), tables)
+        outs = np.asarray(bm.lookup(qs, backend="pallas"))
+        for i, t in enumerate(tables):
+            np.testing.assert_array_equal(outs[i], true_ranks(t, qs), err_msg=f"{kind}/{i}")
+    # ragged: lookups against the padded tables clamp back to real keys
+    ragged = [make_table(rng, "uniform", n) for n in (1500, 700, 1024)]
+    for kind in ("RMI", "SY-RMI", "PGM", "RS"):
+        bm = tune.build_many(ix.spec_for(kind, **PARAMS[kind]), ragged)
+        outs = np.asarray(bm.lookup(qs, backend="pallas"))
+        for i, t in enumerate(ragged):
+            np.testing.assert_array_equal(outs[i], true_ranks(t, qs), err_msg=f"{kind}/{i}")
+
+
 def test_build_many_vmap_fit_equivalent(rng):
     tables = [make_table(rng, k, 2048) for k in ("uniform", "lognormal", "bursty")]
     qs = _queries(rng, tables, n=256)
@@ -172,8 +194,6 @@ def test_build_many_vmap_fit_equivalent(rng):
 
 
 def test_build_many_one_trace_per_kind_backend(backend, rng):
-    if backend == "pallas":
-        pytest.skip("fused pallas path is single-table only (BATCH_BACKENDS)")
     tables = _tables(rng, n=1024)
     qs = _queries(rng, tables, n=128)
     ix.reset_trace_counts()

@@ -1,0 +1,124 @@
+#!/usr/bin/env python
+"""Docs consistency gate (the CI ``docs-check`` step).
+
+Two checks, both stdlib + repro only:
+
+1. **Backend support matrix** — the table tagged
+   ``<!-- docs-check:backend-matrix -->`` in ``docs/backends.md`` must
+   have one row per *registered* index kind (``registry.kinds()``) and
+   one column per query backend (``repro.index.BACKENDS``), every cell
+   non-empty.  Registering a new kind or backend without documenting it
+   fails CI — the matrix can never silently rot.
+2. **Links and anchors** — every relative markdown link in README.md
+   and docs/*.md must resolve to an existing file, and ``#anchor``
+   fragments must match a heading in the target (GitHub slugification).
+
+Run from the repo root::
+
+    PYTHONPATH=src python tools/docs_check.py
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+MATRIX_TAG = "<!-- docs-check:backend-matrix -->"
+LINK_RE = re.compile(r"(?<!!)\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+def parse_matrix(md_text: str):
+    """The first markdown table after MATRIX_TAG: (columns, {row: cells})."""
+    try:
+        tail = md_text.split(MATRIX_TAG, 1)[1]
+    except IndexError:
+        raise ValueError(f"docs/backends.md is missing the {MATRIX_TAG!r} tag")
+    lines = [ln.strip() for ln in tail.splitlines()]
+    rows = [ln for ln in lines if ln.startswith("|")]
+    if len(rows) < 3:
+        raise ValueError("backend matrix table not found after the docs-check tag")
+    split = lambda ln: [c.strip() for c in ln.strip("|").split("|")]
+    header = split(rows[0])
+    body = {}
+    for ln in rows[2:]:  # rows[1] is the |---| separator
+        cells = split(ln)
+        if len(cells) != len(header):
+            raise ValueError(f"matrix row has {len(cells)} cells, header has {len(header)}: {ln}")
+        body[cells[0]] = dict(zip(header[1:], cells[1:]))
+    return header[1:], body
+
+
+def check_backend_matrix() -> list:
+    from repro.index import BACKENDS, registry
+
+    errors = []
+    columns, rows = parse_matrix((ROOT / "docs" / "backends.md").read_text())
+    for backend in BACKENDS:
+        if backend not in columns:
+            errors.append(f"backend {backend!r} missing from the docs/backends.md matrix columns")
+    for kind in registry.kinds():
+        if kind not in rows:
+            errors.append(f"registered kind {kind!r} has no row in the docs/backends.md matrix")
+            continue
+        for backend in BACKENDS:
+            if backend in columns and not rows[kind].get(backend):
+                errors.append(f"matrix cell ({kind}, {backend}) is empty")
+    for kind in rows:
+        if kind not in registry.kinds():
+            errors.append(f"matrix documents unregistered kind {kind!r}")
+    return errors
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style heading -> anchor slug."""
+    h = re.sub(r"[`*_]", "", heading.strip().lower())
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def doc_files() -> list:
+    return [ROOT / "README.md"] + sorted((ROOT / "docs").glob("*.md"))
+
+
+def check_links() -> list:
+    errors = []
+    anchors = {}  # path -> set of slugs
+
+    def anchors_of(path: Path):
+        if path not in anchors:
+            anchors[path] = {slugify(h) for h in HEADING_RE.findall(path.read_text())}
+        return anchors[path]
+
+    for doc in doc_files():
+        rel = doc.relative_to(ROOT)
+        for target in LINK_RE.findall(doc.read_text()):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path_part, _, fragment = target.partition("#")
+            dest = doc if not path_part else (doc.parent / path_part).resolve()
+            if not dest.exists():
+                errors.append(f"{rel}: broken link -> {target}")
+                continue
+            if fragment and dest.suffix == ".md":
+                if slugify(fragment) not in anchors_of(dest):
+                    errors.append(f"{rel}: broken anchor -> {target}")
+    return errors
+
+
+def main() -> int:
+    errors = check_backend_matrix() + check_links()
+    for e in errors:
+        print(f"docs-check: {e}", file=sys.stderr)
+    if errors:
+        print(f"docs-check: FAILED ({len(errors)} problem(s))", file=sys.stderr)
+        return 1
+    n_docs = len(doc_files())
+    print(f"docs-check: OK ({n_docs} files, matrix covers the registry)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
