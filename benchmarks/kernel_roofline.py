@@ -7,14 +7,22 @@ alongside the measured XLA-path wall time (the production fallback) for
 a like-for-like functional check.
 
 The fused PGM / RadixSpline kernels and the batched (table, q_tile)
-RMI kernel get the same treatment, plus a small-table exactness +
-trace-count smoke: the ``kernel/compiles`` row reports how many times
-the shared pallas lookup traced across the sweep, and the CI bench gate
-fails when it exceeds the budget (a per-model-retrace regression).
+RMI / PGM / RS kernels get the same treatment, plus a small-table
+exactness + trace-count smoke: the ``kernel/compiles`` row reports how
+many times the shared pallas lookup traced across the sweep, and the CI
+bench gate fails when it exceeds the budget (a per-model-retrace
+regression).
+
+``--json PATH`` additionally writes the emitted metrics + trace counts
+as a JSON artifact (the ``bench-trend`` baseline format)::
+
+    PYTHONPATH=src python -m benchmarks.kernel_roofline --json out.json
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import math
 
 import numpy as np
@@ -27,13 +35,21 @@ from repro.core import as_table, search, true_ranks
 from repro.core.rmi import build_rmi
 from repro.kernels import ops
 
-from .common import emit, time_fn
+from .common import emit as _emit, time_fn
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
 
+_METRICS: dict = {}
+
+
+def emit(name: str, value: float, derived: str = ""):
+    _METRICS[name] = float(value)
+    _emit(name, value, derived)
+
 
 def run():
+    _METRICS.clear()
     rng = np.random.default_rng(3)
     n = 1 << 20
     table = as_table(rng.integers(0, 2**64 - 1, size=int(n * 1.2), dtype=np.uint64))[:n]
@@ -128,6 +144,34 @@ def run():
     dt = time_fn(xla_b, jnp.asarray(qs))
     emit("kernel/rmi_search_batched/xla_cpu", dt / (n_tables * nq) * 1e6, "functional fallback")
 
+    # ---- batched fused PGM descent (tier of tables) ----
+    bpgm = tune.build_many(ix.PGMSpec(eps=64), [as_table(p) for p in parts], fit="vmap")
+    blv = bpgm.index.s("levels")
+    bps = bpgm.index.s("pksteps")
+    traffic = n_tables * nq * (4 + 8 + blv * (20 + bps * 8) + bps * 8 + 4)
+    emit(
+        "kernel/pgm_search_batched/v5e_mem_bound",
+        traffic / HBM_BW / (n_tables * nq) * 1e6,
+        f"tables={n_tables};levels={blv};steps={bps};bytes/q={traffic / (n_tables * nq):.0f}",
+    )
+    xla_bp = jax.jit(lambda q: bpgm.lookup(q))
+    dt = time_fn(xla_bp, jnp.asarray(qs))
+    emit("kernel/pgm_search_batched/xla_cpu", dt / (n_tables * nq) * 1e6, "functional fallback")
+
+    # ---- batched fused RadixSpline (tier of tables) ----
+    brs = tune.build_many(ix.RSSpec(eps=64, r_bits=12), [as_table(p) for p in parts], fit="vmap")
+    bks = brs.index.s("ksteps")
+    brr = brs.index.s("rk_epi")
+    traffic = n_tables * nq * (4 + 4 + 8 + 16 + bks * 8 + 12 + brr * 8 + 4)
+    emit(
+        "kernel/rs_search_batched/v5e_mem_bound",
+        traffic / HBM_BW / (n_tables * nq) * 1e6,
+        f"tables={n_tables};ksteps={bks};steps={brr};bytes/q={traffic / (n_tables * nq):.0f}",
+    )
+    xla_br = jax.jit(lambda q: brs.lookup(q))
+    dt = time_fn(xla_br, jnp.asarray(qs))
+    emit("kernel/rs_search_batched/xla_cpu", dt / (n_tables * nq) * 1e6, "functional fallback")
+
     # ---- pallas exactness + trace-count smoke (small tables) ----
     ix.reset_trace_counts()
     small = table[:: max(1, n // 8192)]
@@ -142,17 +186,20 @@ def run():
     sparts = [
         as_table(np.sort(rng.choice(small, len(small) // 4, replace=False))) for _ in range(4)
     ]
-    bsm = tune.build_many(ix.RMISpec(b=64), sparts)
-    outs = np.asarray(bsm.lookup(sq, backend="pallas"))
-    for i, p in enumerate(sparts):
-        exact &= bool(np.array_equal(outs[i], true_ranks(p, sq)))
+    # every family with a batched fused kernel answers its batch in ONE
+    # pallas_call: fused RMI, fused PGM descent, fused RadixSpline
+    for spec in (ix.RMISpec(b=64), ix.PGMSpec(eps=32), ix.RSSpec(eps=32, r_bits=10)):
+        bsm = tune.build_many(spec, sparts)
+        outs = np.asarray(bsm.lookup(sq, backend="pallas"))
+        for i, p in enumerate(sparts):
+            exact &= bool(np.array_equal(outs[i], true_ranks(p, sq)))
     traces = sum(ix.trace_counts().values())
     per_kind = {}
     for (k, _), v in sorted(ix.trace_counts().items()):
         per_kind[k] = per_kind.get(k, 0) + v
     emit("kernel/pallas_smoke/exact", float(exact), "1.0 == bit-exact")
-    # one shared trace per (kind, backend) + one batched trace: a
-    # per-model retrace would multiply this by the model count
+    # one shared trace per (kind, backend) + one batched trace per
+    # family: a per-model retrace would multiply this by the model count
     emit("kernel/compiles", traces, f"per_kind={per_kind}")
 
     # ---- embedding bag ----
@@ -186,3 +233,24 @@ def run():
         max(t_cmp, t_memd) * 1e6,
         f"dominant={'memory' if t_memd > t_cmp else 'compute'};arith_int={flops / bytes_:.2f}",
     )
+
+    smoke_traces = {f"{k}/{b}": v for (k, b), v in sorted(ix.trace_counts().items())}
+    return {
+        "metrics": dict(_METRICS),
+        "trace_counts": smoke_traces,
+        "total_traces": sum(smoke_traces.values()),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default=None, help="write metrics + trace counts as JSON")
+    args = ap.parse_args()
+    report = run()
+    if args.json:
+        with open(args.json, "w") as f:
+            f.write(json.dumps(report, indent=2) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -15,6 +15,13 @@ plus the bi-criteria budget picks are emitted as a JSON report per
 non-empty and monotone (space strictly increasing, latency strictly
 decreasing along it), every candidate exact, and every budget pick's
 built ``space_bytes`` within its budget.
+
+``--fit vmap`` runs the sweep through the device-native fits and adds a
+``fit`` section to the report: ``vmap_exact`` (the PGM / PGM_M / RS
+scan fits rebuild each tier table bit-identically to ``fit="host"``)
+and the fit-trace budget (one vmapped trace per (kind, n, ε-config) —
+fewer in practice, since ε is traced).  Under ``--check`` both are
+gates.
 """
 
 from __future__ import annotations
@@ -23,12 +30,38 @@ import argparse
 import json
 import sys
 
+import numpy as np
+
 from repro import index as ix
+from repro import tune
 from repro.tune import pareto
 
 from .common import bench_tables, emit
 
 BUDGET_PCTS = (0.7, 2.0, 10.0)
+
+#: Scan-fit kinds × the spec used for the vmap-exactness probe.
+_VMAP_EXACT_SPECS = (
+    lambda n: ix.PGMSpec(eps=32),
+    lambda n: ix.PGMBicriteriaSpec(space_pct=2.0),
+    lambda n: ix.RSSpec(eps=32, r_bits=8 if n < 1 << 16 else 12),
+)
+
+
+def _check_vmap_exact(table) -> bool:
+    """The acceptance probe: fit='vmap' boundaries == fit='host' for the
+    PGM / PGM_M / RS families, asserted per-table after unstack()."""
+    ok = True
+    for make in _VMAP_EXACT_SPECS:
+        spec = make(len(table))
+        got = tune.build_many(spec, [table], fit="vmap").unstack()[0]
+        want = ix.build(spec, table)
+        ok &= got.static == want.static
+        ok &= all(
+            np.array_equal(np.asarray(got.arrays[k]), np.asarray(want.arrays[k]))
+            for k in want.arrays
+        )
+    return ok
 
 
 def run(
@@ -37,14 +70,17 @@ def run(
     n_queries: int = 4096,
     backend: str = "xla",
     budget_pcts=BUDGET_PCTS,
+    fit: str = "auto",
 ):
     ix.reset_trace_counts()
     reports = {}
+    vmap_exact = True
+    fit_trace_budget = 0
     for bt in bench_tables():
         if bt.tier not in tiers or bt.dataset not in datasets:
             continue
         cands = pareto.sweep(
-            bt.table, n_queries=n_queries, backend=backend, check_exact=True
+            bt.table, n_queries=n_queries, backend=backend, check_exact=True, fit=fit
         )
         front = pareto.pareto_frontier(cands)
         report = pareto.frontier_report(
@@ -55,6 +91,14 @@ def run(
             extra={"dataset": bt.dataset, "tier": bt.tier},
         )
         reports[bt.name] = report
+        if fit == "vmap":
+            vmap_exact &= _check_vmap_exact(bt.table)
+            # one trace per (kind, n, ε-config) is the ceiling; ε-configs
+            # of one (kind, n) share a trace because ε is traced
+            grid = pareto.candidate_grid(len(bt.table))
+            fit_trace_budget += len(
+                {(s.kind, s.params().get("eps")) for s in grid if s.kind in tune.VMAP_KINDS}
+            ) + len(_VMAP_EXACT_SPECS)
         for c in front:
             emit(
                 f"pareto/{bt.name}/{c.spec.display_name()}",
@@ -62,11 +106,21 @@ def run(
                 f"space={c.space_bytes}B;pct={c.space_pct_of(len(bt.table)):.4f}",
             )
     traces = {f"{k}/{b}": v for (k, b), v in sorted(ix.trace_counts().items())}
-    return {
+    out = {
         "reports": reports,
         "trace_counts": traces,
         "total_traces": sum(traces.values()),
     }
+    if fit == "vmap":
+        fit_traces = {k: v for k, v in traces.items() if k.startswith("fit:")}
+        out["fit"] = {
+            "vmap_exact": int(vmap_exact),
+            "fit_traces": fit_traces,
+            "fit_traces_total": sum(fit_traces.values()),
+            "fit_trace_budget": fit_trace_budget,
+        }
+        emit("fit/vmap_exact", float(int(vmap_exact)), "1.0 == scan fits bit-exact")
+    return out
 
 
 def check(out: dict) -> list:
@@ -93,6 +147,17 @@ def check(out: dict) -> list:
                     f"{name}: pick {pick['kind']} at {pct}% is {pick['space_bytes']}B "
                     f"> budget {budget:.0f}B"
                 )
+    if "fit" in out:
+        f = out["fit"]
+        if f["vmap_exact"] != 1:
+            fails.append("fit/vmap_exact != 1: scan fits diverged from the host builds")
+        if f["fit_traces_total"] > f["fit_trace_budget"]:
+            fails.append(
+                f"fit-trace budget exceeded: {f['fit_traces_total']} > "
+                f"{f['fit_trace_budget']} (one trace per (kind, n, ε-config))"
+            )
+        if not f["fit_traces"]:
+            fails.append("fit=vmap produced no fit traces: the scan fits did not run")
     return fails
 
 
@@ -103,6 +168,8 @@ def main() -> None:
     ap.add_argument("--queries", type=int, default=4096)
     ap.add_argument("--backend", default="xla")
     ap.add_argument("--budgets", default=",".join(str(p) for p in BUDGET_PCTS))
+    ap.add_argument("--fit", default="auto", choices=("auto", "host", "vmap"),
+                    help="batched-build fit mode; 'vmap' adds the scan-fit exactness gate")
     ap.add_argument("--json", default=None, help="write the JSON report here")
     ap.add_argument("--check", action="store_true", help="fail on frontier-sanity violations")
     args = ap.parse_args()
@@ -112,6 +179,7 @@ def main() -> None:
         n_queries=args.queries,
         backend=args.backend,
         budget_pcts=tuple(float(p) for p in args.budgets.split(",") if p),
+        fit=args.fit,
     )
     text = json.dumps(out, indent=2)
     if args.json:

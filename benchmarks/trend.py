@@ -1,0 +1,184 @@
+"""Bench-trend gate: diff fresh benchmark artifacts against committed
+baselines (``benchmarks/baselines/``).
+
+The repo's bench trajectory starts here: every ``bench-smoke`` CI run
+produces the same JSON artifacts the baselines were generated from
+(``sharded_lookup.json``, ``pareto_frontier.json``,
+``kernel_roofline.json`` at smoke scale), and this tool diffs them:
+
+* **trace counts — exact.**  The one-trace-per-(kind, backend)
+  invariant is the repo's core compile-cost contract; a silent retrace
+  regression changes these counts and fails the gate immediately.
+* **structure — exact.**  The set of measured configurations (kinds ×
+  backends × modes × shard counts, candidate grids, metric names) must
+  match; a silently dropped sweep leg fails the gate.
+* **latency — generous ratio.**  CI machines vary wildly, so latency
+  fields only fail when they drift beyond ``--tolerance`` (default 8×
+  either way) — this catches order-of-magnitude perf cliffs, not noise.
+* **exactness flags — exact.**  ``kernel/pallas_smoke/exact`` and the
+  candidates' ``exact`` flags must stay 1/true.
+
+Run from the repo root after producing fresh artifacts::
+
+    python -m benchmarks.trend --baselines benchmarks/baselines \\
+        sharded_lookup.json pareto_frontier.json kernel_roofline.json
+
+Refreshing baselines after an *intentional* change (new sweep leg, new
+kernel, trace-count change) is one command per artifact — rerun the
+benchmark with the CI flags and copy the JSON into
+``benchmarks/baselines/``; the PR diff then shows exactly what moved.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def _ratio_ok(fresh: float, base: float, tol: float) -> bool:
+    if base <= 0 or fresh <= 0:
+        return fresh == base
+    r = fresh / base
+    return (1.0 / tol) <= r <= tol
+
+
+def _check_traces(name: str, fresh: dict, base: dict) -> list:
+    fails = []
+    ft, bt = fresh.get("trace_counts", {}), base.get("trace_counts", {})
+    if ft != bt:
+        extra = sorted(set(ft) - set(bt))
+        missing = sorted(set(bt) - set(ft))
+        changed = sorted(k for k in set(ft) & set(bt) if ft[k] != bt[k])
+        fails.append(
+            f"{name}: trace counts diverged from baseline "
+            f"(new={extra}, gone={missing}, changed={[(k, bt[k], ft[k]) for k in changed]})"
+        )
+    if fresh.get("total_traces") != base.get("total_traces"):
+        fails.append(
+            f"{name}: total_traces {fresh.get('total_traces')} != "
+            f"baseline {base.get('total_traces')}"
+        )
+    return fails
+
+
+def _check_sharded_lookup(name: str, fresh: dict, base: dict, tol: float) -> list:
+    fails = _check_traces(name, fresh, base)
+    key = lambda r: (r["kind"], r["backend"], r["mode"], r["n_shards"])
+    fr = {key(r): r for r in fresh.get("results", [])}
+    br = {key(r): r for r in base.get("results", [])}
+    if set(fr) != set(br):
+        fails.append(
+            f"{name}: measured configurations changed "
+            f"(new={sorted(set(fr) - set(br))}, gone={sorted(set(br) - set(fr))})"
+        )
+    for k in sorted(set(fr) & set(br)):
+        if not _ratio_ok(fr[k]["us_per_query"], br[k]["us_per_query"], tol):
+            fails.append(
+                f"{name}: {k} latency {fr[k]['us_per_query']:.3g}us vs baseline "
+                f"{br[k]['us_per_query']:.3g}us exceeds {tol}x tolerance"
+            )
+    return fails
+
+
+def _check_pareto_frontier(name: str, fresh: dict, base: dict, tol: float) -> list:
+    fails = _check_traces(name, fresh, base)
+    fr, br = fresh.get("reports", {}), base.get("reports", {})
+    if set(fr) != set(br):
+        fails.append(f"{name}: report set changed ({sorted(fr)} vs {sorted(br)})")
+    ckey = lambda c: (c["kind"], json.dumps(c.get("params", {}), sort_keys=True))
+    for rep in sorted(set(fr) & set(br)):
+        fc = {ckey(c): c for c in fr[rep]["candidates"]}
+        bc = {ckey(c): c for c in br[rep]["candidates"]}
+        if set(fc) != set(bc):
+            fails.append(f"{name}/{rep}: candidate grid changed")
+        inexact = [k for k, c in fc.items() if not c.get("exact", False)]
+        if inexact:
+            fails.append(f"{name}/{rep}: inexact candidates {inexact}")
+        for k in sorted(set(fc) & set(bc)):
+            if not _ratio_ok(fc[k]["ns_per_query"], bc[k]["ns_per_query"], tol):
+                fails.append(
+                    f"{name}/{rep}: {k[0]} latency {fc[k]['ns_per_query']:.3g}ns vs "
+                    f"baseline {bc[k]['ns_per_query']:.3g}ns exceeds {tol}x tolerance"
+                )
+        if set(fr[rep].get("budget_picks", {})) != set(br[rep].get("budget_picks", {})):
+            fails.append(f"{name}/{rep}: budget-pick set changed")
+    if "fit" in base and "fit" not in fresh:
+        fails.append(f"{name}: baseline has a fit gate section but the fresh run does not")
+    if fresh.get("fit", {}).get("vmap_exact", 1) != 1:
+        fails.append(f"{name}: fit/vmap_exact != 1")
+    return fails
+
+
+def _check_kernel_roofline(name: str, fresh: dict, base: dict, tol: float) -> list:
+    fails = _check_traces(name, fresh, base)
+    fm, bm = fresh.get("metrics", {}), base.get("metrics", {})
+    if set(fm) != set(bm):
+        fails.append(
+            f"{name}: metric set changed "
+            f"(new={sorted(set(fm) - set(bm))}, gone={sorted(set(bm) - set(fm))})"
+        )
+    for k in sorted(set(fm) & set(bm)):
+        if k.endswith("/exact"):
+            if fm[k] != 1.0:
+                fails.append(f"{name}: {k} = {fm[k]} (must stay 1.0)")
+        elif k.endswith("compiles"):
+            if fm[k] != bm[k]:
+                fails.append(f"{name}: {k} {fm[k]:.0f} != baseline {bm[k]:.0f} (exact gate)")
+        elif not _ratio_ok(fm[k], bm[k], tol):
+            fails.append(
+                f"{name}: {k} {fm[k]:.3g} vs baseline {bm[k]:.3g} exceeds {tol}x tolerance"
+            )
+    return fails
+
+
+_CHECKERS = {
+    "sharded_lookup": _check_sharded_lookup,
+    "pareto_frontier": _check_pareto_frontier,
+    "kernel_roofline": _check_kernel_roofline,
+}
+
+
+def check_artifact(fresh_path: Path, baseline_dir: Path, tol: float) -> list:
+    stem = fresh_path.stem
+    checker = next((fn for key, fn in _CHECKERS.items() if stem.startswith(key)), None)
+    if checker is None:
+        return [f"{fresh_path.name}: no trend checker for this artifact"]
+    base_path = baseline_dir / fresh_path.name
+    if not base_path.exists():
+        return [f"{fresh_path.name}: no baseline at {base_path} (commit one to start the trend)"]
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+    with open(base_path) as f:
+        base = json.load(f)
+    return checker(fresh_path.name, fresh, base, tol)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("artifacts", nargs="+", help="fresh JSON artifacts to diff")
+    ap.add_argument(
+        "--baselines", default="benchmarks/baselines", help="committed baseline directory"
+    )
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=8.0,
+        help="latency ratio allowed either way (generous: CI machines vary)",
+    )
+    args = ap.parse_args()
+    baseline_dir = Path(args.baselines)
+    fails = []
+    for art in args.artifacts:
+        fails += check_artifact(Path(art), baseline_dir, args.tolerance)
+    for f in fails:
+        print(f"BENCH TREND: {f}", file=sys.stderr)
+    if fails:
+        print(f"bench-trend: FAILED ({len(fails)} problem(s))", file=sys.stderr)
+        sys.exit(1)
+    print(f"bench-trend: OK ({len(args.artifacts)} artifacts vs {baseline_dir})")
+
+
+if __name__ == "__main__":
+    main()

@@ -65,3 +65,44 @@ def verified_max_error(predictions: np.ndarray, ranks: np.ndarray) -> int:
 def ceil_log2(n: int) -> int:
     n = max(int(n), 1)
     return max(1, int(np.ceil(np.log2(n)))) if n > 1 else 1
+
+
+def chunked_corridor_scan(step, init, inputs, n: int, chunk: int):
+    """Run a greedy corridor recurrence as a chunked ``lax.scan``.
+
+    ``step(carry, inp) -> (carry, flag)`` is the per-element cone update
+    (the same running min/max corridor the numpy builds walk); ``inputs``
+    is a tuple of ``(n,)`` arrays.  Elements are padded up to a multiple
+    of ``chunk`` and streamed as ``(n // chunk, chunk)`` blocks through
+    an outer ``lax.scan`` whose body walks one block with a
+    ``fori_loop`` — the trace stays O(1) in ``n`` while the sequential
+    dependency (each element sees the cone its predecessors left) is
+    preserved exactly.  Padded elements are masked via the carry-through
+    convention: ``step`` receives a validity flag as its last input and
+    must leave the carry untouched (and emit False) when it is unset.
+
+    Returns the ``(n,)`` array of per-element flags — jittable and
+    vmappable (this is what lets :mod:`repro.tune.batched` fit a whole
+    batch of tables in ONE trace).
+    """
+    from jax import lax
+
+    chunk = max(int(chunk), 1)
+    pad = (-n) % chunk
+    valid = jnp.arange(n + pad) < n
+    padded = [jnp.pad(jnp.asarray(a), (0, pad)) for a in inputs] + [valid]
+    blocks = [a.reshape(-1, chunk) for a in padded]
+
+    def body(carry, block):
+        def elem(j, st):
+            c, flags = st
+            c, f = step(c, tuple(b[j] for b in block))
+            return c, flags.at[j].set(f)
+
+        carry, flags = lax.fori_loop(
+            0, chunk, elem, (carry, jnp.zeros((chunk,), dtype=bool))
+        )
+        return carry, flags
+
+    _, flags = lax.scan(body, init, tuple(blocks))
+    return flags.reshape(-1)[:n]

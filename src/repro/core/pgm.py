@@ -31,9 +31,13 @@ import numpy as np
 import jax.numpy as jnp
 
 from . import search
-from .cdf import POS_DTYPE
+from .cdf import POS_DTYPE, chunked_corridor_scan
 
 _CHUNK = 4096
+
+#: Block size of the device scan fit (``pgm_segments_scan``): the outer
+#: ``lax.scan`` streams the table in blocks of this many keys.
+SCAN_CHUNK = 128
 
 
 def pla_segments(keys_f64: np.ndarray, eps: int):
@@ -80,6 +84,79 @@ def pla_segments(keys_f64: np.ndarray, eps: int):
         slopes.append(max(0.5 * (max(lo, 0.0) + max(hi_f, 0.0)), 0.0))
         s = e
     return np.asarray(starts, dtype=np.int64), np.asarray(slopes, dtype=np.float64)
+
+
+def pgm_segments_scan(keys_f64, eps, *, chunk: int = SCAN_CHUNK):
+    """Array-native anchored-cone greedy ε-PLA: the device form of
+    :func:`pla_segments`, as a chunked ``lax.scan`` over the running
+    min/max corridor.
+
+    Returns an ``(n,)`` bool mask, True exactly at the segment start
+    indices :func:`pla_segments` emits — the carry is the (anchor key,
+    anchor rank, cone lo, cone hi) state the numpy build threads through
+    its chunk loop, updated one key at a time with identical f64
+    arithmetic (min/max are exact, so the chunked accumulation order
+    cannot diverge).  ``eps`` may be a traced scalar, which is what lets
+    a whole batch of (table, ε) pairs share ONE jitted trace under
+    ``vmap`` (:func:`repro.tune.batched.build_many` with
+    ``fit="vmap"``).  Slopes are host-side O(n) vectorised work over the
+    mask (:func:`segment_slopes`); the upper PGM levels recurse on the
+    ~n/2ε segment keys and stay host-side, like the RMI root fit.
+    """
+    keys = jnp.asarray(keys_f64, dtype=jnp.float64)
+    n = keys.shape[0]
+    eps = jnp.asarray(eps, dtype=jnp.float64)
+    ranks = jnp.arange(n, dtype=jnp.float64)
+
+    def step(carry, inp):
+        x0, s, lo, hi = carry
+        x, r, v = inp
+        dx = x - x0
+        dy = r - s
+        new_lo = jnp.maximum(lo, (dy - eps) / dx)
+        new_hi = jnp.minimum(hi, (dy + eps) / dx)
+        # s < 0: no anchor yet — the first valid key starts segment 0
+        bad = (new_lo > new_hi) | (s < 0.0)
+        nxt = (
+            jnp.where(bad, x, x0),
+            jnp.where(bad, r, s),
+            jnp.where(bad, 0.0, new_lo),
+            jnp.where(bad, jnp.inf, new_hi),
+        )
+        carry = tuple(jnp.where(v, a, b) for a, b in zip(nxt, carry))
+        return carry, bad & v
+
+    init = (jnp.float64(0.0), jnp.float64(-1.0), jnp.float64(0.0), jnp.float64(jnp.inf))
+    return chunked_corridor_scan(step, init, (keys, ranks), n, chunk)
+
+
+def segment_slopes(keys_f64: np.ndarray, starts: np.ndarray, eps) -> np.ndarray:
+    """Slopes for given segment ``starts`` — bit-identical to the ones
+    :func:`pla_segments` pairs with them.
+
+    The final cone of segment ``[s, e)`` is the min/max of the per-key
+    slope bounds over its non-anchor keys; min/max reductions are exact
+    in f64, so ``np.minimum.reduceat`` reproduces the running chunked
+    accumulation bit-for-bit (the anchor key contributes ``∓inf`` —
+    identity elements — and single-key segments take the host's fresh
+    cone ``lo = 0``, giving slope 0).
+    """
+    keys_f64 = np.asarray(keys_f64, dtype=np.float64)
+    starts = np.asarray(starts, dtype=np.int64)
+    n = len(keys_f64)
+    eps = np.float64(eps)
+    lens = np.diff(np.append(starts, n))
+    seg_of = np.repeat(np.arange(len(starts)), lens)
+    dx = keys_f64 - keys_f64[starts[seg_of]]
+    dy = np.arange(n, dtype=np.float64) - starts[seg_of].astype(np.float64)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        lo_b = (dy - eps) / dx
+        hi_b = (dy + eps) / dx
+    lo = np.maximum.reduceat(lo_b, starts)
+    hi = np.minimum.reduceat(hi_b, starts)
+    hi_f = np.where(np.isfinite(hi), hi, np.maximum(lo, 0.0) + 1.0)
+    slopes = np.maximum(0.5 * (np.maximum(lo, 0.0) + np.maximum(hi_f, 0.0)), 0.0)
+    return np.where(lens == 1, 0.0, slopes)
 
 
 @dataclass
@@ -143,7 +220,11 @@ class PGMModel:
         return sum(self.level_sizes) * 24 + 16
 
 
-def build_pgm(table_np: np.ndarray, eps: int = 64) -> PGMModel:
+def build_pgm(table_np: np.ndarray, eps: int = 64, *, l0=None) -> PGMModel:
+    """Recursive PGM build.  ``l0`` optionally supplies the bottom
+    level's ``(starts, slopes)`` — e.g. from the device scan fit
+    (:func:`pgm_segments_scan` + :func:`segment_slopes`); the upper
+    levels always recurse host-side over the segment first-keys."""
     t0 = time.perf_counter()
     n = len(table_np)
     eps = max(int(eps), 1)
@@ -154,7 +235,11 @@ def build_pgm(table_np: np.ndarray, eps: int = 64) -> PGMModel:
     cur_keys_u64 = table_np
     cur_keys = keys
     while True:
-        starts, slopes = pla_segments(cur_keys, eps)
+        if l0 is not None:
+            starts, slopes = l0
+            l0 = None
+        else:
+            starts, slopes = pla_segments(cur_keys, eps)
         # rank0 with sentinel: segment s covers [rank0[s], rank0[s+1])
         rank0 = np.concatenate([starts, [len(cur_keys)]]).astype(np.int64)
         level_keys.append(jnp.asarray(cur_keys_u64[starts]))
@@ -191,17 +276,29 @@ def build_pgm(table_np: np.ndarray, eps: int = 64) -> PGMModel:
 TPU_CLS_BYTES = 512
 KEY_BYTES = 8
 
+#: Bisection depth of the bi-criteria search (shared by the host build
+#: and the batched lockstep fit, which must take identical decisions).
+BICRITERIA_MAX_ITERS = 16
+
+
+def bicriteria_eps_bounds(n: int, a: float = 1.0, cls_bytes: int = TPU_CLS_BYTES) -> tuple:
+    """The bi-criteria search range [ε_m, ε_M] for a table of ``n`` keys
+    (paper: ε_m = a · 2 · cls/size).  Single source of truth — the
+    batched scan fit re-derives the host bisection from these bounds,
+    and drift here would silently break their bit-exactness contract."""
+    eps_m = max(1, int(a * 2 * (cls_bytes / KEY_BYTES)))
+    return eps_m, max(eps_m + 1, n // 2)
+
 
 def build_pgm_bicriteria(
     table_np: np.ndarray,
     space_budget_bytes: int,
     a: float = 1.0,
     cls_bytes: int = TPU_CLS_BYTES,
-    max_iters: int = 16,
+    max_iters: int = BICRITERIA_MAX_ITERS,
 ) -> PGMModel:
     """Bi-criteria PGM_M_a: smallest ε whose model fits the budget."""
-    eps_m = max(1, int(a * 2 * (cls_bytes / KEY_BYTES)))
-    eps_M = max(eps_m + 1, len(table_np) // 2)
+    eps_m, eps_M = bicriteria_eps_bounds(len(table_np), a, cls_bytes)
 
     best = None
     lo, hi = eps_m, eps_M

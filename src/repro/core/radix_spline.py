@@ -21,7 +21,8 @@ import numpy as np
 import jax.numpy as jnp
 
 from . import search
-from .cdf import POS_DTYPE
+from .cdf import POS_DTYPE, chunked_corridor_scan
+from .pgm import SCAN_CHUNK
 
 _CHUNK = 4096
 
@@ -59,6 +60,60 @@ def spline_knots(keys_f64: np.ndarray, eps: int) -> np.ndarray:
             i = i2
     knots.append(n - 1)
     return np.unique(np.asarray(knots, dtype=np.int64))
+
+
+def rs_knots_scan(keys_f64, eps, *, chunk: int = SCAN_CHUNK):
+    """Array-native GreedySplineCorridor: the device form of
+    :func:`spline_knots`, as a chunked ``lax.scan`` over the corridor
+    cone.
+
+    Returns an ``(n,)`` bool mask, True exactly at the knot indices
+    :func:`spline_knots` emits.  Per point the carry is the (anchor key,
+    anchor rank, cone lo, cone hi) state; a cone violation at point
+    ``i`` makes point ``i - 1`` a knot and re-anchors there, after which
+    point ``i`` is accepted against the fresh cone — identical f64
+    arithmetic to the numpy single pass (min/max are exact).  ``eps``
+    may be a traced scalar so a whole batch of (table, ε) pairs shares
+    ONE jitted trace under ``vmap``.
+    """
+    keys = jnp.asarray(keys_f64, dtype=jnp.float64)
+    n = keys.shape[0]
+    if n <= 2:
+        return jnp.ones((n,), dtype=bool)
+    eps = jnp.asarray(eps, dtype=jnp.float64)
+    # interior points 1 .. n-2; each step also sees its left neighbour
+    # (the knot a violation creates) and its absolute rank
+    x = keys[1 : n - 1]
+    xprev = keys[0 : n - 2]
+    ranks = jnp.arange(1, n - 1, dtype=jnp.float64)
+
+    def step(carry, inp):
+        x0, y0, lo, hi = carry
+        xi, xp, r, v = inp
+        slope = (r - y0) / (xi - x0)
+        bad = (slope < lo) | (slope > hi)
+        # on violation the previous point becomes the knot/anchor and
+        # the current point is accepted against the restarted cone
+        x0n = jnp.where(bad, xp, x0)
+        y0n = jnp.where(bad, r - 1.0, y0)
+        dx = xi - x0n
+        dy = r - y0n
+        lo_b = (dy - eps) / dx
+        hi_b = (dy + eps) / dx
+        nxt = (
+            x0n,
+            y0n,
+            jnp.where(bad, lo_b, jnp.maximum(lo, lo_b)),
+            jnp.where(bad, hi_b, jnp.minimum(hi, hi_b)),
+        )
+        carry = tuple(jnp.where(v, a, b) for a, b in zip(nxt, carry))
+        return carry, bad & v
+
+    init = (keys[0], jnp.float64(0.0), jnp.float64(-jnp.inf), jnp.float64(jnp.inf))
+    flags = chunked_corridor_scan(step, init, (x, xprev, ranks), n - 2, chunk)
+    # a violation at point i marks knot i-1; endpoints are always knots
+    mask = jnp.pad(flags, (0, 2))
+    return mask.at[0].set(True).at[n - 1].set(True)
 
 
 @dataclass
@@ -110,11 +165,17 @@ class RSModel:
         return self.m * 16 + ((1 << self.r_bits) + 1) * 8 + 16
 
 
-def build_rs(table_np: np.ndarray, eps: int = 32, r_bits: int = 12) -> RSModel:
+def build_rs(table_np: np.ndarray, eps: int = 32, r_bits: int = 12, *, knots=None) -> RSModel:
+    """Single-pass RadixSpline build.  ``knots`` optionally supplies the
+    knot indices — e.g. from the device scan fit
+    (:func:`rs_knots_scan`); the radix table and the verified error
+    bound are always re-derived from them."""
     t0 = time.perf_counter()
     n = len(table_np)
     keys = table_np.astype(np.float64)
-    knots = spline_knots(keys, eps)
+    if knots is None:
+        knots = spline_knots(keys, eps)
+    knots = np.asarray(knots, dtype=np.int64)
     m = len(knots)
     knot_keys = table_np[knots]
     knot_ranks = knots.astype(np.int64)

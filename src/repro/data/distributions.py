@@ -16,6 +16,8 @@ replaced by a generator matched to its published CDF shape:
 
 from __future__ import annotations
 
+import zlib
+
 import numpy as np
 
 from repro.core.cdf import as_table
@@ -60,8 +62,14 @@ def _gen_wiki(rng: np.random.Generator, n: int) -> np.ndarray:
 
 
 def generate(name: str, n: int, seed: int = 0) -> np.ndarray:
-    """Sorted deduplicated uint64 table of >= n keys, truncated to n."""
-    rng = np.random.default_rng(seed + hash(name) % (2**31))
+    """Sorted deduplicated uint64 table of >= n keys, truncated to n.
+
+    The per-dataset seed offset must be process-stable: ``hash(str)`` is
+    salted per interpreter (PYTHONHASHSEED), which silently made every
+    process generate *different* bench tables — fatal for baseline
+    diffing (``benchmarks/trend.py``).  crc32 is deterministic forever.
+    """
+    rng = np.random.default_rng(seed + zlib.crc32(name.encode()) % (2**31))
     if name == "amzn32":
         keys = _gen_amzn(rng, n, bits=32)
     elif name == "amzn64":

@@ -15,7 +15,11 @@ Design (this package replaces the per-class ad-hoc API in
 * **Backends**: ``lookup(table, queries, backend="xla"|"bbs"|"pallas"|
   "ref")`` — one shared jitted query path per kind; the Pallas fast
   path's f32/i32 re-encoding is folded into build (no separate
-  ``prepare_rmi_kernel_index`` step).
+  ``prepare_rmi_kernel_index`` step).  Batched/tier lookups dispatch
+  through :func:`batched_pallas_impl` to the fused ``(table, q_tile)``-
+  grid kernels — RMI, PGM and RS families each answer a whole batch
+  with ONE ``pallas_call``; the model-free kinds use the batched k-ary
+  kernel.
 
 Quick start::
 

@@ -491,7 +491,62 @@ def _pgm_pallas(idx: Index, table, q):
     return out[:nq].astype(POS_DTYPE)
 
 
-PGM_IMPL = QueryImpl(intervals=_pgm_intervals, space_bytes=_pgm_space, pallas=_pgm_pallas)
+def _pgm_pallas_batched(idx: Index, tables, queries):
+    """Batched fused PGM descent: grid over (table, q_tile), per-table
+    leaf/directory blocks from the stacked arrays.  The lifted level
+    structure is common across tables (``_lift_pgm_levels``) and the
+    bucketed ``pksteps`` static took the max at stack time, so one trip
+    count covers the widest per-table window."""
+    from repro.kernels.ops import split_u64
+    from repro.kernels.pgm_search import batched_pgm_search_pallas
+
+    a = idx.arrays
+    u = jnp.clip(
+        (queries.astype(jnp.float64) - a["pk_kmin"][:, None]) * a["pk_inv_span"][:, None],
+        0.0,
+        1.0,
+    ).astype(jnp.float32)
+    qhi, qlo = split_u64(queries)
+    thi, tlo = split_u64(tables)
+    khi, klo = split_u64(a["keys"])
+    nq = queries.shape[1]
+    tile = min(512, _pow2ceil(nq))
+    u, qhi, qlo = _pad_queries([u, qhi, qlo], tile, axis=1)
+    out = batched_pgm_search_pallas(
+        u,
+        qhi,
+        qlo,
+        thi,
+        tlo,
+        khi,
+        klo,
+        a["pk_u0"],
+        a["pk_slope"],
+        a["rank0"].astype(jnp.int32),
+        a["off"].astype(jnp.int32),
+        a["off_r"].astype(jnp.int32),
+        a["sizes"].astype(jnp.int32),
+        a["pk_eps"].reshape(-1, 1),
+        levels=idx.s("levels"),
+        steps=idx.s("pksteps"),
+        tile_q=tile,
+        interpret=jax.default_backend() != "tpu",
+    )
+    return out[:, :nq].astype(POS_DTYPE)
+
+
+PGM_IMPL = QueryImpl(
+    intervals=_pgm_intervals,
+    space_bytes=_pgm_space,
+    pallas=_pgm_pallas,
+    pallas_batched=_pgm_pallas_batched,
+)
+
+
+def pgm_model_to_index(kind: str, m, table_np: np.ndarray, extra_info=None) -> Index:
+    """Wrap an already-fitted :class:`repro.core.pgm.PGMModel` as an
+    Index without refitting (the batched scan-fit path)."""
+    return _pgm_to_index(kind, m, table_np, extra_info)
 
 
 def _pgm_to_index(kind: str, m, table_np: np.ndarray, extra_info=None) -> Index:
@@ -633,13 +688,69 @@ def _rs_pallas(idx: Index, table, q):
     return out[:nq].astype(POS_DTYPE)
 
 
-RS_IMPL = QueryImpl(intervals=_rs_intervals, space_bytes=_rs_space, pallas=_rs_pallas)
+def _rs_pallas_batched(idx: Index, tables, queries):
+    """Batched fused RadixSpline lookup: grid over (table, q_tile),
+    per-table knot/radix blocks from the stacked arrays.  ``r_bits`` is
+    a structural static (stacking requires it to agree), so the radix
+    prefix is computed per table outside the kernel exactly as in the
+    single-table path."""
+    from repro.kernels.ops import split_u64
+    from repro.kernels.rs_search import batched_rs_search_pallas
+
+    a = idx.arrays
+    r_bits = idx.s("r_bits")
+    kmin = a["kmin"][:, None]
+    qc = jnp.maximum(queries, kmin)
+    prefix = jnp.minimum(
+        (qc - kmin) >> a["shift"][:, None], jnp.uint64((1 << r_bits) - 1)
+    ).astype(jnp.int32)
+    u = jnp.clip(
+        (queries.astype(jnp.float64) - a["rk_kmin"][:, None]) * a["rk_inv_span"][:, None],
+        0.0,
+        1.0,
+    ).astype(jnp.float32)
+    qhi, qlo = split_u64(queries)
+    thi, tlo = split_u64(tables)
+    khi, klo = split_u64(a["knot_keys"])
+    nq = queries.shape[1]
+    tile = min(512, _pow2ceil(nq))
+    u, qhi, qlo, prefix = _pad_queries([u, qhi, qlo, prefix], tile, axis=1)
+    out = batched_rs_search_pallas(
+        u,
+        qhi,
+        qlo,
+        prefix,
+        thi,
+        tlo,
+        khi,
+        klo,
+        a["rk_u0"],
+        a["rk_slope"],
+        a["knot_ranks"].astype(jnp.int32),
+        a["radix_table"].astype(jnp.int32),
+        a["m_valid"].reshape(-1, 1).astype(jnp.int32),
+        a["rk_eps"].reshape(-1, 1),
+        ksteps=idx.s("ksteps"),
+        steps=idx.s("rk_epi"),
+        tile_q=tile,
+        interpret=jax.default_backend() != "tpu",
+    )
+    return out[:, :nq].astype(POS_DTYPE)
 
 
-def _build_rs_index(spec: RSSpec, table_np: np.ndarray) -> Index:
+RS_IMPL = QueryImpl(
+    intervals=_rs_intervals,
+    space_bytes=_rs_space,
+    pallas=_rs_pallas,
+    pallas_batched=_rs_pallas_batched,
+)
+
+
+def rs_model_to_index(kind: str, m, table_np: np.ndarray) -> Index:
+    """Wrap an already-fitted :class:`repro.core.radix_spline.RSModel`
+    as an Index without refitting (the batched scan-fit path)."""
     from repro.kernels.ops import rs_kernel_arrays
 
-    m = build_rs(table_np, eps=spec.eps, r_bits=spec.r_bits)
     karr, rksteps = rs_kernel_arrays(m, table_np)
     knot_keys = np.asarray(m.knot_keys)
     knot_ranks = np.asarray(m.knot_ranks)
@@ -672,7 +783,12 @@ def _build_rs_index(spec: RSSpec, table_np: np.ndarray) -> Index:
         "m": m.m,
         "n": m.n,
     }
-    return Index(spec.kind, static, arrays, info)
+    return Index(kind, static, arrays, info)
+
+
+def _build_rs_index(spec: RSSpec, table_np: np.ndarray) -> Index:
+    m = build_rs(table_np, eps=spec.eps, r_bits=spec.r_bits)
+    return rs_model_to_index(spec.kind, m, table_np)
 
 
 # -- B+-tree -----------------------------------------------------------------

@@ -3,6 +3,13 @@
 Handles host-side preparation (u32 limb split, f32 pre-normalisation,
 query padding, f32-widened error bounds) and falls back to interpret
 mode off-TPU.  ``ref.py`` holds the oracles; tests sweep shapes/dtypes.
+
+The ``*_kernel_arrays`` re-encoders here serve both the single-table
+fused kernels and their batched ``(table, q_tile)``-grid variants
+(``batched_rmi_search_pallas`` / ``batched_pgm_search_pallas`` /
+``batched_rs_search_pallas``): the re-encoded leaves stack leaf-wise
+like the model arrays, and the bucketed trip-count statics merge by max
+at stack time, so one re-encoding per table covers every dispatch path.
 """
 
 from __future__ import annotations

@@ -31,6 +31,14 @@ TPU adaptations, mirroring :mod:`rmi_search`:
   unrolls with static offsets into the flat padded leaf arrays —
   the same padded-leaf encoding ``_lift_pgm_levels`` produces for
   shard-stacking, which is what makes this kernel tier-stackable.
+
+Two entry points share one kernel body: :func:`fused_pgm_search_pallas`
+(single table, grid over query tiles) and
+:func:`batched_pgm_search_pallas` (a tier/batch of level-harmonised
+tables, grid over ``(table, q_tile)`` with per-table parameter blocks —
+the pattern :mod:`rmi_search` established), the latter backing
+``BatchedIndexes.lookup(backend="pallas")`` and the sharded tier's
+vmapped fallback for the PGM family.
 """
 
 from __future__ import annotations
@@ -218,6 +226,138 @@ def fused_pgm_search_pallas(
         ],
         out_specs=qspec(),
         out_shape=jax.ShapeDtypeStruct((nq,), jnp.int32),
+        interpret=interpret,
+    )(
+        u_f32,
+        q_hi,
+        q_lo,
+        table_hi,
+        table_lo,
+        keys_hi,
+        keys_lo,
+        pk_u0,
+        pk_slope,
+        rank0_i32,
+        off_i32,
+        off_r_i32,
+        sizes_i32,
+        eps_i32,
+    )
+
+
+def _pgm_kernel_batched(
+    u_ref,
+    qhi_ref,
+    qlo_ref,
+    thi_ref,
+    tlo_ref,
+    khi_ref,
+    klo_ref,
+    u0_ref,
+    slope_ref,
+    r0_ref,
+    off_ref,
+    off_r_ref,
+    sizes_ref,
+    eps_ref,
+    out_ref,
+    *,
+    levels: int,
+    n: int,
+    steps: int,
+):
+    # every block carries a leading table axis of extent 1: squeeze it
+    # and reuse the single-table body verbatim (the rmi_search pattern)
+    out_ref[0, :] = _pgm_body(
+        u_ref[0],
+        qhi_ref[0],
+        qlo_ref[0],
+        thi_ref[0],
+        tlo_ref[0],
+        khi_ref[0],
+        klo_ref[0],
+        u0_ref[0],
+        slope_ref[0],
+        r0_ref[0],
+        off_ref[0],
+        off_r_ref[0],
+        sizes_ref[0],
+        eps_ref[0, 0],
+        levels=levels,
+        n=n,
+        steps=steps,
+    )
+
+
+def batched_pgm_search_pallas(
+    u_f32,
+    q_hi,
+    q_lo,
+    table_hi,
+    table_lo,
+    keys_hi,
+    keys_lo,
+    pk_u0,
+    pk_slope,
+    rank0_i32,
+    off_i32,
+    off_r_i32,
+    sizes_i32,
+    eps_i32,
+    *,
+    levels: int,
+    steps: int,
+    tile_q: int = DEFAULT_TILE_Q,
+    interpret: bool = True,
+):
+    """Batched/tier variant of the fused PGM descent: ``(n_tables, nq)``
+    queries against ``(n_tables, n)`` tables with per-table segment
+    leaves and level directories.
+
+    Grid is ``(table, q_tile)``; the index maps hand each program its
+    table's parameter blocks (leading axis extent 1) and one query
+    tile, so ONE ``pallas_call`` answers a whole batch/tier — the
+    kernel-level analogue of the vmapped shared lookup.  The level
+    count is static and common across tables (``_lift_pgm_levels``
+    harmonised it at stack time); ``steps`` and ``eps_i32`` must cover
+    the widest per-table window (extra Khuong–Morin trips are no-ops,
+    which is why the stacked Index takes the max across tables).
+    """
+    nt, nq = u_f32.shape
+    n = table_hi.shape[1]
+    kn = keys_hi.shape[1]
+    rn = rank0_i32.shape[1]
+    assert nq % tile_q == 0, "pad queries to a tile multiple (see ops.py)"
+    grid = (nt, nq // tile_q)
+
+    def qspec():
+        return pl.BlockSpec((1, tile_q), lambda t, i: (t, i))
+
+    def per_table(m):
+        return pl.BlockSpec((1, m), lambda t, i: (t, 0))
+
+    kernel = functools.partial(_pgm_kernel_batched, levels=levels, n=n, steps=steps)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            qspec(),  # u
+            qspec(),  # q_hi
+            qspec(),  # q_lo
+            per_table(n),  # table_hi
+            per_table(n),  # table_lo
+            per_table(kn),  # keys_hi
+            per_table(kn),  # keys_lo
+            per_table(kn),  # pk_u0
+            per_table(kn),  # pk_slope
+            per_table(rn),  # rank0
+            per_table(levels + 1),  # off
+            per_table(levels + 1),  # off_r
+            per_table(levels),  # sizes
+            per_table(1),  # eps
+        ],
+        out_specs=qspec(),
+        out_shape=jax.ShapeDtypeStruct((nt, nq), jnp.int32),
         interpret=interpret,
     )(
         u_f32,

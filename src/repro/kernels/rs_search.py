@@ -22,6 +22,14 @@ TPU adaptations, mirroring :mod:`rmi_search` / :mod:`pgm_search`:
   the prediction error of every table key *and every knot boundary*
   with exactly this f32 arithmetic and widens ε so the window stays a
   guarantee (f32 rounding is monotone between knots).
+
+Two entry points share one kernel body: :func:`fused_rs_search_pallas`
+(single table, grid over query tiles) and
+:func:`batched_rs_search_pallas` (a tier/batch of tables, grid over
+``(table, q_tile)`` with per-table knot/radix blocks — the pattern
+:mod:`rmi_search` established), the latter backing
+``BatchedIndexes.lookup(backend="pallas")`` and the sharded tier's
+vmapped fallback for the RS kind.
 """
 
 from __future__ import annotations
@@ -183,6 +191,138 @@ def fused_rs_search_pallas(
         ],
         out_specs=qspec(),
         out_shape=jax.ShapeDtypeStruct((nq,), jnp.int32),
+        interpret=interpret,
+    )(
+        u_f32,
+        q_hi,
+        q_lo,
+        prefix_i32,
+        table_hi,
+        table_lo,
+        knot_hi,
+        knot_lo,
+        rk_u0,
+        rk_slope,
+        knot_rank_i32,
+        radix_i32,
+        m_valid_i32,
+        eps_i32,
+    )
+
+
+def _rs_kernel_batched(
+    u_ref,
+    qhi_ref,
+    qlo_ref,
+    prefix_ref,
+    thi_ref,
+    tlo_ref,
+    khi_ref,
+    klo_ref,
+    u0_ref,
+    slope_ref,
+    rank_ref,
+    radix_ref,
+    mv_ref,
+    eps_ref,
+    out_ref,
+    *,
+    n: int,
+    ksteps: int,
+    steps: int,
+):
+    # leading table axis of extent 1 per block: squeeze and reuse the
+    # single-table body verbatim (the rmi_search pattern)
+    out_ref[0, :] = _rs_body(
+        u_ref[0],
+        qhi_ref[0],
+        qlo_ref[0],
+        prefix_ref[0],
+        thi_ref[0],
+        tlo_ref[0],
+        khi_ref[0],
+        klo_ref[0],
+        u0_ref[0],
+        slope_ref[0],
+        rank_ref[0],
+        radix_ref[0],
+        mv_ref[0, 0],
+        eps_ref[0, 0],
+        n=n,
+        ksteps=ksteps,
+        steps=steps,
+    )
+
+
+def batched_rs_search_pallas(
+    u_f32,
+    q_hi,
+    q_lo,
+    prefix_i32,
+    table_hi,
+    table_lo,
+    knot_hi,
+    knot_lo,
+    rk_u0,
+    rk_slope,
+    knot_rank_i32,
+    radix_i32,
+    m_valid_i32,
+    eps_i32,
+    *,
+    ksteps: int,
+    steps: int,
+    tile_q: int = DEFAULT_TILE_Q,
+    interpret: bool = True,
+):
+    """Batched/tier variant of the fused RadixSpline lookup:
+    ``(n_tables, nq)`` queries against ``(n_tables, n)`` tables with
+    per-table knot/radix blocks.
+
+    Grid is ``(table, q_tile)``; each program gets its table's knot
+    limbs, spline re-encoding, radix table, valid-knot count and
+    ε (leading axis extent 1) plus one query tile, so ONE
+    ``pallas_call`` answers a whole batch/tier.  ``r_bits`` is a
+    structural static (stacking requires it to agree across tables), so
+    every radix block has the same length; ``ksteps``/``steps`` must
+    cover the widest per-table knot range / window (max-merged at stack
+    time — extra fixed-trip iterations are no-ops).
+    """
+    nt, nq = u_f32.shape
+    n = table_hi.shape[1]
+    mk = knot_hi.shape[1]
+    rn = radix_i32.shape[1]
+    assert nq % tile_q == 0, "pad queries to a tile multiple (see ops.py)"
+    grid = (nt, nq // tile_q)
+
+    def qspec():
+        return pl.BlockSpec((1, tile_q), lambda t, i: (t, i))
+
+    def per_table(m):
+        return pl.BlockSpec((1, m), lambda t, i: (t, 0))
+
+    kernel = functools.partial(_rs_kernel_batched, n=n, ksteps=ksteps, steps=steps)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            qspec(),  # u
+            qspec(),  # q_hi
+            qspec(),  # q_lo
+            qspec(),  # prefix
+            per_table(n),  # table_hi
+            per_table(n),  # table_lo
+            per_table(mk),  # knot_hi
+            per_table(mk),  # knot_lo
+            per_table(mk),  # rk_u0
+            per_table(mk),  # rk_slope
+            per_table(mk),  # knot ranks
+            per_table(rn),  # radix table
+            per_table(1),  # m_valid
+            per_table(1),  # eps
+        ],
+        out_specs=qspec(),
+        out_shape=jax.ShapeDtypeStruct((nt, nq), jnp.int32),
         interpret=interpret,
     )(
         u_f32,

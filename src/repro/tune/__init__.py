@@ -17,7 +17,7 @@ the layer that decides *which* index to serve:
   re-tunes, and the counters ``DecodeEngine.metrics()`` reports.
 """
 
-from .batched import BATCH_BACKENDS, FITS, BatchedIndexes, build_grid, build_many
+from .batched import BATCH_BACKENDS, FITS, VMAP_KINDS, BatchedIndexes, build_grid, build_many
 from .mining import cdfshop_grid, mine_sy_rmi
 from .pareto import (
     Candidate,
@@ -34,6 +34,7 @@ from .rebuild import RebuildPolicy, TunedTier
 __all__ = [
     "BATCH_BACKENDS",
     "FITS",
+    "VMAP_KINDS",
     "BatchedIndexes",
     "build_grid",
     "build_many",

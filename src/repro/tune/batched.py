@@ -7,20 +7,32 @@ precisely so that *construction*, not just lookup, can be batched:
   ingest, per-shard tier builds, multi-tenant serving).  Default path
   loops the registered host builder and stacks the results leaf-wise
   (bit-exact with per-table ``build`` by construction); ``fit="vmap"``
-  runs the array-native leaf stage (:func:`repro.core.rmi.rmi_leaf_fit`
-  — segment-sum least squares + extended error bounds) for the whole
-  batch in ONE jitted ``vmap`` trace (RMI-family kinds).
+  batches the kind's array-native fit stage in ONE jitted ``vmap``
+  trace: the RMI family's leaf stage
+  (:func:`repro.core.rmi.rmi_leaf_fit` — segment-sum least squares +
+  extended error bounds) and the PGM/RS families' corridor scans
+  (:func:`repro.core.pgm.pgm_segments_scan` /
+  :func:`repro.core.radix_spline.rs_knots_scan` — the greedy cone
+  update as a chunked ``lax.scan``, ε traced so one trace covers every
+  ε-config of a batch shape).
 * :func:`build_grid` — MANY specs over ONE table (the CDFShop sweep and
   the Pareto tuner's candidate grid).  RMI-family grid entries that
-  resolve to the same branching factor share one vmapped leaf-fit trace.
+  resolve to the same branching factor share one vmapped leaf-fit
+  trace; PGM / PGM_M / RS entries share one vmapped scan-fit trace per
+  kind.
 
-The vmapped fit is numerically equivalent to the host fit — its error
-bounds are measured against its *own* predictions with the same
+The vmapped RMI fit is numerically equivalent to the host fit — its
+error bounds are measured against its *own* predictions with the same
 arithmetic the query path uses, so predicted windows remain guarantees
 and predecessor ranks are bit-identical — but leaf floats may differ by
-a few ulp (XLA scatter-add reduction order vs ``np.bincount``).  Code
-that needs leaf-level bit-exactness with ``build`` uses the default
-``fit="host"``.
+a few ulp (XLA scatter-add reduction order vs ``np.bincount``).  The
+PGM/RS scan fits are **bit-exact** with the host builds: the device
+scan walks the same f64 corridor (min/max are exact, so accumulation
+order cannot diverge) and emits boundary masks identical to the numpy
+greedy, from which the host assembles the same model arrays.  Code that
+needs leaf-level bit-exactness with ``build`` for *every* kind uses the
+default ``fit="host"``; ``fit="auto"`` is the recommended batch-build
+mode now that every learned family has an array-native fit.
 
 Stacking reuses the sharded tier's padding idiom
 (:func:`repro.dist.sharded_index.stack_indexes`: per-leaf max shapes,
@@ -44,6 +56,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.cdf import POS_DTYPE
+from repro.core.pgm import (
+    BICRITERIA_MAX_ITERS,
+    bicriteria_eps_bounds,
+    build_pgm,
+    pgm_segments_scan,
+    segment_slopes,
+)
+from repro.core.radix_spline import build_rs, rs_knots_scan
 from repro.core.rmi import assemble_rmi, fit_root, rmi_leaf_fit
 from repro.dist.sharded_index import (
     _harmonize,
@@ -57,12 +77,16 @@ from repro.index.specs import IndexSpec
 _MAXKEY = np.uint64(np.iinfo(np.uint64).max)
 
 #: Fit strategies: ``host`` loops the registered builder (bit-exact with
-#: per-table ``build``); ``vmap`` batches the array-native leaf stage
-#: (RMI family only); ``auto`` picks ``vmap`` where it applies.
+#: per-table ``build``); ``vmap`` batches the kind's array-native fit
+#: stage (every learned family: RMI leaf fits, PGM/RS corridor scans);
+#: ``auto`` — the recommended batch-build mode — picks ``vmap`` where it
+#: applies and falls back to the host builder otherwise.
 FITS = ("host", "vmap", "auto")
 
-#: Kinds whose leaf stage vmaps (two-level RMI family).
-VMAP_KINDS = ("RMI", "SY-RMI")
+#: Kinds with an array-native vmappable fit stage: the two-level RMI
+#: family (leaf least-squares) and the scan-formulated corridor fits
+#: (PGM greedy ε-PLA, bi-criteria PGM, RadixSpline).
+VMAP_KINDS = ("RMI", "SY-RMI", "PGM", "PGM_M", "RS")
 
 #: Backends the batched lookup supports — the full ``Index.lookup``
 #: set.  ``pallas`` dispatches the batched ``(table, q_tile)``-grid
@@ -86,7 +110,7 @@ def _rmi_plan(spec: IndexSpec, n: int) -> tuple:
     if spec.kind == "SY-RMI":
         budget = spec.space_pct / 100.0 * n * 8
         return max(2, min(int(budget * spec.ub), n)), spec.winner_root
-    raise ValueError(f"kind {spec.kind!r} has no vmappable leaf stage (supported: {VMAP_KINDS})")
+    raise ValueError(f"kind {spec.kind!r} is not RMI-family (no leaf-stage plan)")
 
 
 # ---------------------------------------------------------------------------
@@ -157,6 +181,156 @@ def _vmap_fit_rmi(specs: list, tables: list) -> list:
             extra = {"space_pct": spec.space_pct}
         out.append(impls.rmi_model_to_index(spec.kind, m, t, extra))
     return out
+
+
+# ---------------------------------------------------------------------------
+# The scan-formulated PGM / RS fits: whole-batch corridor scans
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def _pgm_boundaries_many(tables_f64, eps_f64):
+    """vmap of the PGM corridor scan: one trace per (N, n) batch shape —
+    ε is traced, so every ε-config of that shape shares the trace."""
+    count_trace("fit:PGM", "vmap")  # python side effect: runs once per trace
+    return jax.vmap(pgm_segments_scan, in_axes=(0, 0))(tables_f64, eps_f64)
+
+
+@jax.jit
+def _rs_boundaries_many(tables_f64, eps_f64):
+    """vmap of the RS corridor scan: one trace per (N, n) batch shape."""
+    count_trace("fit:RS", "vmap")  # python side effect: runs once per trace
+    return jax.vmap(rs_knots_scan, in_axes=(0, 0))(tables_f64, eps_f64)
+
+
+def _check_same_length(tables):
+    n = len(tables[0])
+    if any(len(t) != n for t in tables):
+        raise ValueError("fit='vmap' needs same-length tables (pad first — see build_many)")
+    return n
+
+
+def _stacked_f64(tables):
+    return jnp.asarray(np.stack([t.astype(np.float64) for t in tables]))
+
+
+def _pgm_model_from_mask(table, eps: int, mask):
+    """Host assembly of one PGMModel from the device boundary mask:
+    level-0 slopes from the mask (bit-identical, see
+    :func:`repro.core.pgm.segment_slopes`), upper levels recursed
+    host-side (tiny: ~n/2ε segment keys)."""
+    starts = np.flatnonzero(mask)
+    slopes = segment_slopes(table.astype(np.float64), starts, eps)
+    return build_pgm(table, eps=eps, l0=(starts, slopes))
+
+
+def _vmap_fit_pgm(specs: list, tables: list) -> list:
+    """Batched PGM build: ONE vmapped corridor-scan trace for the whole
+    batch's leaf segmentation (per-member ε traced), host assembly —
+    bit-exact with the registered per-table builder."""
+    from repro.index import impls
+
+    _check_same_length(tables)
+    eps = np.asarray([max(int(s.eps), 1) for s in specs], dtype=np.float64)
+    masks = np.asarray(_pgm_boundaries_many(_stacked_f64(tables), jnp.asarray(eps)))
+    return [
+        impls.pgm_model_to_index(spec.kind, _pgm_model_from_mask(t, int(e), mask), t)
+        for spec, t, e, mask in zip(specs, tables, eps, masks)
+    ]
+
+
+def _vmap_fit_pgm_bicriteria(specs: list, tables: list) -> list:
+    """Batched bi-criteria PGM: the per-member ε bisection of
+    :func:`repro.core.pgm.build_pgm_bicriteria` run in lockstep, every
+    step's segmentations answered by the shared vmapped scan trace
+    (ε is traced, so all bisection steps and members share ONE trace).
+    Per-member decisions use the same ``PGMModel.space_bytes()``
+    accounting over bit-identical models, so the chosen ε — and the
+    final arrays — match the host builder exactly."""
+    from repro.index import impls
+
+    _check_same_length(tables)
+    keys = _stacked_f64(tables)
+    n_members = len(specs)
+    lo, hi, best = [], [], [None] * n_members
+    for spec, t in zip(specs, tables):
+        eps_m, eps_M = bicriteria_eps_bounds(len(t), spec.a)
+        lo.append(eps_m)
+        hi.append(eps_M)
+
+    def batch_models(eps_by_member: dict) -> dict:
+        """One shared-trace scan call for this step's ε choices."""
+        eps_all = np.asarray(
+            [float(eps_by_member.get(i, 1)) for i in range(n_members)], dtype=np.float64
+        )
+        masks = np.asarray(_pgm_boundaries_many(keys, jnp.asarray(eps_all)))
+        return {
+            i: _pgm_model_from_mask(tables[i], e, masks[i]) for i, e in eps_by_member.items()
+        }
+
+    for _ in range(BICRITERIA_MAX_ITERS):
+        mids = {i: (lo[i] + hi[i]) // 2 for i in range(n_members) if lo[i] <= hi[i]}
+        if not mids:
+            break
+        for i, m in batch_models(mids).items():
+            if m.space_bytes() <= specs[i].budget_for(len(tables[i])):
+                if best[i] is None or m.eps < best[i].eps:
+                    best[i] = m
+                hi[i] = mids[i] - 1  # try smaller eps (bigger model)
+            else:
+                lo[i] = mids[i] + 1
+    missing = {
+        i: bicriteria_eps_bounds(len(tables[i]), specs[i].a)[1]
+        for i in range(n_members)
+        if best[i] is None
+    }
+    for i, m in (batch_models(missing) if missing else {}).items():
+        best[i] = m
+    out = []
+    for i, spec in enumerate(specs):
+        best[i].name = f"PGM_M_{spec.a}[eps={best[i].eps}]"
+        out.append(impls.pgm_model_to_index(spec.kind, best[i], tables[i], {"a": spec.a}))
+    return out
+
+
+def _vmap_fit_rs(specs: list, tables: list) -> list:
+    """Batched RadixSpline build: ONE vmapped corridor-scan trace for
+    the whole batch's knot selection (per-member ε traced), host
+    assembly (radix table + verified ε re-measure) — bit-exact with the
+    registered per-table builder."""
+    from repro.index import impls
+
+    _check_same_length(tables)
+    eps = np.asarray([int(s.eps) for s in specs], dtype=np.float64)
+    masks = np.asarray(_rs_boundaries_many(_stacked_f64(tables), jnp.asarray(eps)))
+    out = []
+    for spec, t, mask in zip(specs, tables, masks):
+        knots = np.flatnonzero(mask).astype(np.int64)
+        m = build_rs(t, eps=spec.eps, r_bits=spec.r_bits, knots=knots)
+        out.append(impls.rs_model_to_index(spec.kind, m, t))
+    return out
+
+
+#: kind -> batched array-native fit (all members must share the kind).
+_VMAP_FITS = {
+    "RMI": _vmap_fit_rmi,
+    "SY-RMI": _vmap_fit_rmi,
+    "PGM": _vmap_fit_pgm,
+    "PGM_M": _vmap_fit_pgm_bicriteria,
+    "RS": _vmap_fit_rs,
+}
+
+
+def _vmap_fit(specs: list, tables: list) -> list:
+    kind = specs[0].kind
+    fit_fn = _VMAP_FITS.get(kind)
+    if fit_fn is None:
+        raise ValueError(
+            f"fit='vmap' is not supported for kind {kind!r}: it has no array-native "
+            f"fit stage (vmappable kinds: {VMAP_KINDS}); use fit='auto' to vmap where "
+            "supported and fall back to the host builder otherwise"
+        )
+    return fit_fn(specs, tables)
 
 
 # ---------------------------------------------------------------------------
@@ -332,13 +506,18 @@ def build_many(kind_or_spec, tables, *, fit: str = "host", **params) -> BatchedI
     those padded tables — the tier idiom of
     :meth:`repro.dist.ShardedIndex.build`.
 
-    ``fit="vmap"`` batches the RMI-family leaf stage in one jitted
-    trace; ``fit="auto"`` picks ``vmap`` where it applies.
+    ``fit="vmap"`` batches the kind's array-native fit stage in one
+    jitted trace — RMI-family leaf fits, and the PGM / PGM_M / RS
+    corridor scans (bit-exact with the host builders; see the module
+    docstring).  ``fit="auto"`` — the recommended batch-build mode —
+    picks ``vmap`` for every learned family and the host builder for
+    the rest; explicit ``fit="vmap"`` on a kind without an array-native
+    fit raises.
 
     Example — one spec, a tier of tables, every backend incl. the
     batched Pallas kernels::
 
-        bm = build_many(RMISpec(b=1024), [t0, t1, t2])
+        bm = build_many(RMISpec(b=1024), [t0, t1, t2], fit="auto")
         ranks = bm.lookup(queries)                    # (3, B), one trace
         ranks = bm.lookup(queries, backend="pallas")  # one pallas_call
         per_table = bm.unstack()                      # bit-exact Indexes
@@ -358,7 +537,7 @@ def build_many(kind_or_spec, tables, *, fit: str = "host", **params) -> BatchedI
     entry = registry.entry(spec.kind)
     use_vmap = fit == "vmap" or (fit == "auto" and spec.kind in VMAP_KINDS)
     if use_vmap:
-        per = _vmap_fit_rmi([spec] * len(fit_tables), fit_tables)
+        per = _vmap_fit([spec] * len(fit_tables), fit_tables)
     else:
         per = [entry.build(spec, t) for t in fit_tables]
     return _stack_with_meta(spec, per, fit_tables, counts)
@@ -395,12 +574,15 @@ def build_grid(specs, table_np, *, fit: str = "auto") -> list:
     """Build one index per spec over a single table, in spec order.
 
     The grid engine behind the Pareto tuner and the CDFShop/SY-RMI
-    mining sweep.  Under ``fit="auto"``/``"vmap"``, RMI-family entries
-    that resolve to the same branching factor (e.g. every root type at
-    one ``b``) share ONE vmapped leaf-fit trace; every other entry uses
-    its registered host builder.  Specs of one kind + structure already
-    share their jitted *lookup* (the PR-1 invariant), so a full grid
-    sweep compiles O(kinds), not O(specs).
+    mining sweep.  Under ``fit="auto"`` (the recommended mode) /
+    ``"vmap"``, RMI-family entries that resolve to the same branching
+    factor (e.g. every root type at one ``b``) share ONE vmapped
+    leaf-fit trace, and PGM / PGM_M / RS entries share ONE vmapped
+    corridor-scan trace per kind (ε is traced, so a whole ε-grid is one
+    device call); every other entry uses its registered host builder.
+    Specs of one kind + structure already share their jitted *lookup*
+    (the PR-1 invariant), so a full grid sweep compiles O(kinds), not
+    O(specs).
 
     Example — the CDFShop-style sweep behind the Pareto tuner::
 
@@ -415,16 +597,20 @@ def build_grid(specs, table_np, *, fit: str = "auto") -> list:
     table_np = np.asarray(table_np, dtype=np.uint64)
     n = len(table_np)
     out: dict[int, Index] = {}
-    groups: dict[int, list] = {}
+    groups: dict[tuple, list] = {}
     if fit in ("auto", "vmap"):
         for i, spec in enumerate(specs):
-            if spec.kind in VMAP_KINDS:
+            if spec.kind in ("RMI", "SY-RMI"):
                 b, _ = _rmi_plan(spec, n)
-                groups.setdefault(b, []).append((i, spec))
+                groups.setdefault(("rmi", b), []).append((i, spec))
+            elif spec.kind in VMAP_KINDS:
+                # scan-fit kinds: ε is traced, so every member of a kind
+                # shares one vmapped corridor-scan call
+                groups.setdefault((spec.kind,), []).append((i, spec))
     for members in groups.values():
         if len(members) < 2:
             continue  # a lone entry gains nothing from the batch axis
-        built = _vmap_fit_rmi([s for _, s in members], [table_np] * len(members))
+        built = _vmap_fit([s for _, s in members], [table_np] * len(members))
         for (i, _), idx in zip(members, built):
             out[i] = idx
     for i, spec in enumerate(specs):

@@ -7,7 +7,9 @@ and Pareto tuning share ONE engine:
 
 * the CDFShop sweep is a grid of :class:`~repro.index.RMISpec`\\ s built
   by :func:`repro.tune.batched.build_grid` — every root type at one
-  branching factor shares a single vmapped leaf-fit trace;
+  branching factor shares a single vmapped leaf-fit trace (and when a
+  mined grid carries PGM/RS candidates, their corridor fits share one
+  vmapped scan trace per kind the same way);
 * query timing goes through the shared jitted ``Index.lookup`` (one
   trace per grid, not per model);
 * UB mining reads ``b`` / ``space_bytes`` off the built indexes.

@@ -80,6 +80,71 @@ def test_pgm_segment_error_bound(keys, eps):
     assert np.all(np.abs(pred - np.arange(len(table))) <= eps + 1e-6)
 
 
+# ---------------------------------------------------------------------------
+# Scan-formulated fits: device corridor scans == host greedy builds
+# ---------------------------------------------------------------------------
+
+_SCAN_DISTS = ("amzn64", "face", "osm", "wiki")  # the benchmark distributions
+
+
+def _scan_table(data) -> np.ndarray:
+    """A table from one of the benchmark distributions, or an
+    adversarial shape: duplicate-adjacent keys (the degenerate
+    no-headroom pad), constant-gap runs, and sizes that are not a
+    multiple of the scan chunk (SCAN_CHUNK = 128 -> odd sizes)."""
+    from repro.data import distributions
+
+    kind = data.draw(
+        st.sampled_from(_SCAN_DISTS + ("dup-tail", "const-gap")), label="dist"
+    )
+    n = data.draw(st.integers(min_value=3, max_value=700), label="n")
+    seed = data.draw(st.integers(min_value=0, max_value=2**16), label="seed")
+    if kind == "dup-tail":
+        # duplicate-adjacent keys after padding: the _pad_sorted_table
+        # degenerate case (no u64 headroom repeats the last key)
+        base = np.arange(1, n + 1, dtype=np.uint64) * np.uint64(977)
+        dup = data.draw(st.integers(min_value=1, max_value=max(n // 2, 1)), label="dup")
+        return np.concatenate([base, np.full(dup, base[-1], dtype=np.uint64)])
+    if kind == "const-gap":
+        gap = data.draw(st.integers(min_value=1, max_value=1 << 20), label="gap")
+        start = data.draw(st.integers(min_value=0, max_value=1 << 40), label="start")
+        return np.uint64(start) + np.arange(n, dtype=np.uint64) * np.uint64(gap)
+    return as_table(distributions.generate(kind, n, seed=seed))
+
+
+@settings(max_examples=30, deadline=None)
+@given(data=st.data())
+def test_pgm_segments_scan_matches_greedy(data):
+    """pgm_segments_scan boundary masks == pla_segments starts (and the
+    mask-derived slopes == the greedy's) on benchmark distributions and
+    adversarial tables, for the paper's ε range."""
+    from repro.core.pgm import pgm_segments_scan, pla_segments, segment_slopes
+
+    table = _scan_table(data)
+    eps = data.draw(st.sampled_from((8, 32, 128)), label="eps")
+    keys = table.astype(np.float64)
+    starts, slopes = pla_segments(keys, eps)
+    mask = np.asarray(pgm_segments_scan(keys, float(eps)))
+    assert np.array_equal(np.flatnonzero(mask), starts)
+    got = segment_slopes(keys, starts, eps)
+    assert np.array_equal(got, slopes, equal_nan=True)
+
+
+@settings(max_examples=30, deadline=None)
+@given(data=st.data())
+def test_rs_knots_scan_matches_greedy(data):
+    """rs_knots_scan knot masks == spline_knots on benchmark
+    distributions and adversarial tables, for the paper's ε range."""
+    from repro.core.radix_spline import rs_knots_scan, spline_knots
+
+    table = _scan_table(data)
+    eps = data.draw(st.sampled_from((8, 32, 128)), label="eps")
+    keys = table.astype(np.float64)
+    knots = spline_knots(keys, eps)
+    mask = np.asarray(rs_knots_scan(keys, float(eps)))
+    assert np.array_equal(np.flatnonzero(mask), knots)
+
+
 @settings(max_examples=20, deadline=None)
 @given(st.data())
 def test_searchsorted_segments(data):

@@ -189,8 +189,53 @@ def test_build_many_vmap_fit_equivalent(rng):
         for i, t in enumerate(tables):
             np.testing.assert_array_equal(outs[i], true_ranks(t, qs), err_msg=f"{kind}/{i}")
 
-    with pytest.raises(ValueError):
-        tune.build_many(ix.PGMSpec(eps=16), tables, fit="vmap")
+    # explicit vmap on a kind without an array-native fit stays a crisp error
+    with pytest.raises(ValueError, match="no array-native fit"):
+        tune.build_many(ix.BTreeSpec(fanout=8), tables, fit="vmap")
+
+
+def test_build_many_vmap_fit_scan_kinds_bit_exact(rng):
+    """Acceptance: the PGM / PGM_M / RS scan fits are BIT-exact with the
+    host greedy builds — segment/knot boundaries and every derived array
+    identical per table after unstack() — in one fit trace per
+    (kind, batch shape); ε is traced, so the bi-criteria bisection
+    shares the PGM scan trace."""
+    tables = _tables(rng)
+    qs = _queries(rng, tables)
+    ix.reset_trace_counts()
+    for kind, params in (
+        ("PGM", {"eps": 16}),
+        ("PGM_M", {"space_pct": 2.0, "a": 1.0}),
+        ("RS", {"eps": 16, "r_bits": 8}),
+    ):
+        spec = ix.spec_for(kind, **params)
+        bm = tune.build_many(spec, tables, fit="vmap")
+        singles = [ix.build(spec, t) for t in tables]
+        for i, (got, want) in enumerate(zip(bm.unstack(), singles)):
+            assert got.static == want.static, (kind, i)
+            assert got.info.get("name") == want.info.get("name"), (kind, i)
+            for name in want.arrays:
+                g, w = np.asarray(got.arrays[name]), np.asarray(want.arrays[name])
+                assert np.array_equal(g, w), (kind, i, name)
+        outs = np.asarray(bm.lookup(qs))
+        for i, t in enumerate(tables):
+            np.testing.assert_array_equal(outs[i], true_ranks(t, qs), err_msg=f"{kind}/{i}")
+    fit_traces = {k: v for (k, b), v in ix.trace_counts().items() if k.startswith("fit:")}
+    # one shared scan trace per kind for the whole (N, n) batch shape —
+    # PGM_M's bisection re-uses fit:PGM (ε is traced, not static)
+    assert fit_traces == {"fit:PGM": 1, "fit:RS": 1}, fit_traces
+
+
+def test_build_many_vmap_fit_scan_kinds_ragged(rng):
+    """Scan fits compose with the ragged-batch padding idiom (strictly
+    increasing continuation): lookups stay exact after the clamp."""
+    ragged = [make_table(rng, "uniform", n) for n in (1500, 700, 1024)]
+    qs = _queries(rng, ragged, n=256)
+    for kind in ("PGM", "PGM_M", "RS"):
+        bm = tune.build_many(ix.spec_for(kind, **PARAMS[kind]), ragged, fit="vmap")
+        outs = np.asarray(bm.lookup(qs))
+        for i, t in enumerate(ragged):
+            np.testing.assert_array_equal(outs[i], true_ranks(t, qs), err_msg=f"{kind}/{i}")
 
 
 def test_build_many_one_trace_per_kind_backend(backend, rng):
@@ -226,6 +271,28 @@ def test_build_grid_shares_vmapped_fit_trace(rng):
         np.testing.assert_array_equal(
             np.asarray(idx.lookup(tj, qj)), true_ranks(table, qs), err_msg=str(spec)
         )
+
+
+def test_build_grid_scan_kinds_share_fit_trace(rng):
+    """A grid's PGM / RS entries share ONE vmapped corridor-scan trace
+    per kind (ε traced), and the built indexes stay bit-exact with the
+    registered host builders."""
+    table = make_table(rng, "uniform", 1728)  # length unique to this test
+    specs = [ix.PGMSpec(eps=e) for e in (8, 16, 32)]
+    specs += [ix.RSSpec(eps=e, r_bits=8) for e in (8, 32)]
+    specs += [ix.PGMBicriteriaSpec(space_pct=2.0), ix.PGMBicriteriaSpec(space_pct=10.0)]
+    ix.reset_trace_counts()
+    built = tune.build_grid(specs, table, fit="auto")
+    fit_traces = {k: v for (k, b), v in ix.trace_counts().items() if k.startswith("fit:")}
+    assert fit_traces.get("fit:PGM", 0) <= 2  # (3,)- and (2,)-member batch shapes
+    assert fit_traces.get("fit:RS", 0) == 1
+    for spec, idx in zip(specs, built):
+        want = ix.build(spec, table)
+        assert idx.static == want.static, spec
+        for name in want.arrays:
+            assert np.array_equal(
+                np.asarray(idx.arrays[name]), np.asarray(want.arrays[name])
+            ), (spec, name)
 
 
 def test_build_grid_host_fit_matches_build(rng):
