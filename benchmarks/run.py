@@ -2,20 +2,33 @@
 
 ``PYTHONPATH=src python -m benchmarks.run [--only NAME]``
 prints ``name,us_per_call,derived`` CSV lines (common.emit).
+
+``--trend`` switches to the artifact pipeline: the three JSON-artifact
+benchmarks run at the CI bench-smoke configuration (smoke scale, the
+same flags ``.github/workflows/ci.yml`` passes), artifacts land in
+``--artifacts-dir``, and each is immediately diffed against the
+committed baselines by :mod:`benchmarks.trend` — one command reproduces
+the whole CI bench gate locally::
+
+    PYTHONPATH=src python -m benchmarks.run --trend
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
+from pathlib import Path
+
+#: the CI bench-smoke configuration (keep in sync with ci.yml bench-smoke)
+SMOKE_ENV = {"REPRO_BENCH_SCALE": "0.01", "REPRO_BENCH_QUERIES": "4096"}
+SMOKE_SHARDED = dict(n=8192, n_queries=4096)
+SMOKE_PARETO = dict(tiers=("L1",), datasets=("osm",), n_queries=2048, fit="vmap")
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None, help="substring filter on benchmark module")
-    args = ap.parse_args()
-
+def run_suites(only: str | None) -> None:
     from . import (
         kernel_roofline,
         pareto_frontier,
@@ -36,7 +49,7 @@ def main() -> None:
         ("pareto_frontier", pareto_frontier.run),  # bi-criteria tuner frontier
     ]
     for name, fn in suites:
-        if args.only and args.only not in name:
+        if only and only not in name:
             continue
         t0 = time.perf_counter()
         print(f"# === {name} ===", flush=True)
@@ -45,6 +58,94 @@ def main() -> None:
         except Exception as e:  # keep the harness going; report the failure
             print(f"# {name} FAILED: {e!r}", file=sys.stderr, flush=True)
         print(f"# === {name} done in {time.perf_counter() - t0:.1f}s ===", flush=True)
+
+
+def run_trend(artifacts_dir: Path, baselines: Path, tolerance: float) -> int:
+    """Generate the three JSON artifacts at smoke scale, then diff each
+    against the committed baselines.  Returns the number of failures."""
+    # common.py reads SCALE/N_QUERIES from the environment at import
+    # time, so pin the smoke config BEFORE any benchmark module import
+    # (explicit flags win: only setdefault here)
+    for k, v in SMOKE_ENV.items():
+        os.environ.setdefault(k, v)
+
+    from . import kernel_roofline, pareto_frontier, sharded_lookup, trend
+
+    artifacts_dir.mkdir(parents=True, exist_ok=True)
+    fails: list = []
+
+    def produce(name: str, make) -> None:
+        t0 = time.perf_counter()
+        print(f"# === {name} (smoke artifact) ===", flush=True)
+        try:
+            report = make()
+        except Exception as e:
+            fails.append(f"{name}: benchmark failed before producing an artifact ({e!r})")
+            print(f"# {name} FAILED: {e!r}", file=sys.stderr, flush=True)
+            return
+        path = artifacts_dir / f"{name}.json"
+        path.write_text(json.dumps(report, indent=2) + "\n")
+        fresh = trend.check_artifact(path, baselines, tolerance)
+        fails.extend(fresh)
+        status = "OK" if not fresh else f"{len(fresh)} trend failure(s)"
+        print(
+            f"# === {name} done in {time.perf_counter() - t0:.1f}s -> {path} [{status}] ===",
+            flush=True,
+        )
+
+    produce("sharded_lookup", lambda: sharded_lookup.run(**SMOKE_SHARDED))
+
+    def _pareto():
+        report = pareto_frontier.run(**SMOKE_PARETO)
+        # same sanity gates the CI --check flag applies (frontier
+        # non-empty/monotone, exact candidates, budget picks in budget)
+        fails.extend(f"pareto_frontier: {f}" for f in pareto_frontier.check(report))
+        return report
+
+    produce("pareto_frontier", _pareto)
+    produce("kernel_roofline", kernel_roofline.run)
+
+    for f in fails:
+        print(f"BENCH TREND: {f}", file=sys.stderr)
+    if fails:
+        print(f"bench-trend: FAILED ({len(fails)} problem(s))", file=sys.stderr)
+    else:
+        print(f"bench-trend: OK (3 artifacts vs {baselines})")
+    return len(fails)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="substring filter on benchmark module")
+    ap.add_argument(
+        "--trend",
+        action="store_true",
+        help="generate the JSON artifacts at CI smoke scale and diff them "
+        "against the committed baselines (benchmarks/trend.py)",
+    )
+    ap.add_argument(
+        "--artifacts-dir",
+        default="bench_artifacts",
+        help="where --trend writes the fresh JSON artifacts",
+    )
+    ap.add_argument(
+        "--baselines",
+        default="benchmarks/baselines",
+        help="committed baseline directory for --trend",
+    )
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=8.0,
+        help="latency ratio allowed either way in --trend mode",
+    )
+    args = ap.parse_args()
+
+    if args.trend:
+        if args.only:
+            ap.error("--only and --trend are mutually exclusive")
+        sys.exit(1 if run_trend(Path(args.artifacts_dir), Path(args.baselines), args.tolerance) else 0)
+    run_suites(args.only)
 
 
 if __name__ == "__main__":

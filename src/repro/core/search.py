@@ -27,6 +27,11 @@ from jax import lax
 
 from .cdf import ceil_log2
 
+#: Predecessor rank reported when ``q`` is smaller than every key —
+#: ``rank(x) - 1`` for rank 0.  Every search procedure and index kind
+#: shares this sentinel (re-exported by :mod:`repro.dist.sharded_index`).
+NO_PRED = -1
+
 # ---------------------------------------------------------------------------
 # Branch-free binary search (BFS) — Algorithm 1 of the paper, vectorised.
 # ---------------------------------------------------------------------------
@@ -94,7 +99,7 @@ def bounded_bbs_branchy(table, q, lo, hi):
     ``backend="bbs"`` path of every :class:`repro.index.Index` kind.
     """
     n = table.shape[0]
-    res0 = jnp.full(q.shape, -1, dtype=jnp.int64)
+    res0 = jnp.full(q.shape, NO_PRED, dtype=jnp.int64)
     active0 = jnp.ones(q.shape, dtype=bool)
     lo = jnp.clip(lo.astype(jnp.int64), 0, n - 1)
     hi = jnp.clip(hi.astype(jnp.int64), 0, n - 1)
@@ -132,7 +137,7 @@ def bbs(table, q, *, n: int | None = None):
     n = int(table.shape[0]) if n is None else n
     lo0 = jnp.zeros(q.shape, dtype=jnp.int64)
     hi0 = jnp.full(q.shape, n - 1, dtype=jnp.int64)
-    res0 = jnp.full(q.shape, -1, dtype=jnp.int64)
+    res0 = jnp.full(q.shape, NO_PRED, dtype=jnp.int64)
     active0 = jnp.ones(q.shape, dtype=bool)
 
     def cond(state):

@@ -13,6 +13,7 @@ from . import collectives, sharded_index, sharding
 from .collectives import OVERLAP_XLA_FLAGS, apply_grad_compression, compressed_grad_leaf
 from .sharded_index import (
     DROPPED,
+    NO_PRED,
     ShardedIndex,
     refresh_shard,
     reset_tier_metrics,
@@ -32,6 +33,7 @@ __all__ = [
     "ShardingCtx",
     "single_device_ctx",
     "DROPPED",
+    "NO_PRED",
     "ShardedIndex",
     "refresh_shard",
     "reset_tier_metrics",

@@ -65,12 +65,15 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.core.cdf import POS_DTYPE
+from repro.core.search import NO_PRED
 from repro.index import Index, batched_pallas_impl, count_trace, lookup_impl, registry
 from repro.index.specs import IndexSpec
 
 from . import collectives
 
 #: Rank reported for queries dropped by the capacity-factored exchange.
+#: Distinct from :data:`repro.core.search.NO_PRED` (re-exported above),
+#: the shared below-the-global-min sentinel.
 DROPPED = -2
 
 # ---------------------------------------------------------------------------
@@ -463,7 +466,7 @@ def _answer_local(local_index: Index, local_table, count, offset, queries, backe
     local rank clamped to the valid count and rebased to a global rank."""
     r = lookup_impl(local_index, local_table, queries, backend)
     r = jnp.minimum(r.astype(POS_DTYPE), count - 1)
-    return jnp.where(r < 0, jnp.asarray(-1, POS_DTYPE), offset + r)
+    return jnp.where(r < 0, jnp.asarray(NO_PRED, POS_DTYPE), offset + r)
 
 
 # ---------------------------------------------------------------------------
@@ -482,7 +485,7 @@ def _lookup_vmapped(sidx: ShardedIndex, queries, backend: str):
         bq = jnp.broadcast_to(queries[None, :], (sidx.n_shards, queries.shape[0]))
         r = batched_pallas_impl(sidx.index, sidx.tables, bq)
         r = jnp.minimum(r.astype(POS_DTYPE), sidx.counts[:, None] - 1)
-        granks = jnp.where(r < 0, jnp.asarray(-1, POS_DTYPE), sidx.offsets[:, None] + r)
+        granks = jnp.where(r < 0, jnp.asarray(NO_PRED, POS_DTYPE), sidx.offsets[:, None] + r)
     else:
 
         def one(idx, tab, cnt, off):

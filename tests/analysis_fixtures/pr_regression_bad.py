@@ -1,0 +1,30 @@
+"""Gate-demonstration fixture: the two bugs this repo actually shipped.
+
+Form 1 is the PR 5 seeding bug (``data/distributions.generate`` before
+the fix): ``seed + hash(name)`` is PYTHONHASHSEED-salted, so every
+process generated a *different* "deterministic" dataset and the bench
+trend gate compared apples to oranges.
+
+Form 2 is the PR 1 kernel bug (``kernels/rmi_search.py`` before the
+fix): on key gaps the root model's prediction blows up to ``|p| ~ 1e15``;
+the unclamped f32→i32 cast is implementation-defined garbage, and the
+*later* window clip just clamps garbage into a plausible-looking (wrong)
+search window.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def generate(name: str, n: int, seed: int = 0):
+    # PR 5 bug form: salted hash feeding the rng seed
+    rng = np.random.default_rng(seed + hash(name) % (2**31))
+    return np.sort(rng.integers(0, 2**63, size=n, dtype=np.uint64))
+
+
+def _rmi_kernel(qhi_ref, qlo_ref, slope_ref, icept_ref, out_ref, *, b: int, n: int):
+    # PR 1 bug form: unclamped root prediction cast straight to i32
+    u = qhi_ref[...].astype(jnp.float32) * 2.0
+    p_root = slope_ref[...] * u + icept_ref[...]
+    leaf = p_root.astype(jnp.int32)
+    out_ref[...] = jnp.clip(leaf, 0, b - 1)  # clips garbage, not the float

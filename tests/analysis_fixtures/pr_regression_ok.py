@@ -1,0 +1,21 @@
+"""Gate-demonstration fixture: the shipped (fixed) forms — must stay clean."""
+
+import zlib
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def generate(name: str, n: int, seed: int = 0):
+    # PR 5 fix: process-stable crc32 offset (data/distributions.generate)
+    rng = np.random.default_rng(seed + zlib.crc32(name.encode()) % (2**31))
+    return np.sort(rng.integers(0, 2**63, size=n, dtype=np.uint64))
+
+
+def _rmi_kernel(qhi_ref, qlo_ref, slope_ref, icept_ref, out_ref, *, b: int, n: int):
+    # PR 1 fix: dominating clamp on the float BEFORE the narrowing cast
+    u = qhi_ref[...].astype(jnp.float32) * 2.0
+    p_root = slope_ref[...] * u + icept_ref[...]
+    p_root = jnp.clip(p_root, -1.0e9, 1.0e9)
+    leaf = p_root.astype(jnp.int32)
+    out_ref[...] = jnp.clip(leaf, 0, b - 1)

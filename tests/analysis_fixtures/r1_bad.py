@@ -1,0 +1,21 @@
+"""R1 fixture: salted-hash seeding (every form must flag)."""
+
+import numpy as np
+
+
+def seed_from_name(seed: int, name: str):
+    # hash() of a str is PYTHONHASHSEED-salted: different every process
+    return np.random.default_rng(seed + hash(name))
+
+
+def string_literal_hash():
+    return hash("osm_cellids")  # stringish arg: flagged unconditionally
+
+
+def fstring_hash(tag):
+    return hash(f"dataset-{tag}")
+
+
+def seedy_statement(obj):
+    rng_seed = hash(obj) % (2**31)  # seedy context via name mention
+    return rng_seed

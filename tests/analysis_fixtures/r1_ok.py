@@ -1,0 +1,16 @@
+"""R1 fixture: process-stable seeding — must stay clean."""
+
+import zlib
+
+import numpy as np
+
+
+def seed_from_name(seed: int, name: str):
+    # the data/distributions.generate idiom: crc32 is process-stable
+    return np.random.default_rng(seed + zlib.crc32(name.encode()) % (2**31))
+
+
+def hash_outside_seed_path(d: dict, key):
+    # plain dict-protocol use of hash() away from any seed/rng context
+    bucket = hash(key)
+    return bucket in d

@@ -1,0 +1,17 @@
+"""R2 fixture: unclamped f32 -> i32 casts in kernel bodies (must flag)."""
+
+import jax.numpy as jnp
+
+
+def _predict_kernel(q_ref, slope_ref, icept_ref, out_ref, *, n: int):
+    q = q_ref[...].astype(jnp.float32)
+    pred = slope_ref[...] * q + icept_ref[...]
+    # BAD: |pred| can exceed i32 range on key gaps; the cast is garbage
+    # and the later clip happily clamps garbage into a plausible window
+    pos = pred.astype(jnp.int32)
+    out_ref[...] = jnp.clip(pos, 0, n - 1)
+
+
+def _scaled_body(x_ref, out_ref, *, scale: float):
+    # BAD: float arithmetic (scale literal mention) cast without clamp
+    out_ref[...] = (x_ref[...] * 0.5).astype("int32")

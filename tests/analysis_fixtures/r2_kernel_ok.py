@@ -1,0 +1,23 @@
+"""R2 fixture: clamped / boolean casts in kernel bodies — must stay clean."""
+
+import jax.numpy as jnp
+
+
+def _predict_kernel(q_ref, slope_ref, icept_ref, out_ref, *, n: int):
+    q = q_ref[...].astype(jnp.float32)
+    pred = slope_ref[...] * q + icept_ref[...]
+    # the rmi_search.py idiom: dominating clamp BEFORE the narrowing cast
+    pred = jnp.clip(pred, -1.0e9, 1.0e9)
+    out_ref[...] = pred.astype(jnp.int32)
+
+
+def _select_kernel(a_ref, b_ref, out_ref, *, n: int):
+    # boolean-shaped cast: the branch-free select idiom, always in range
+    le = a_ref[...] <= b_ref[...]
+    out_ref[...] = le.astype(jnp.int32)
+
+
+def _floor_clamped_kernel(x_ref, out_ref, *, n: int):
+    # clamp survives shape-preserving floor()
+    pos = jnp.floor(jnp.clip(x_ref[...] * 2.0, 0.0, float(n)))
+    out_ref[...] = pos.astype(jnp.int32)

@@ -1,0 +1,48 @@
+"""R3 fixture: trace-discipline violations (every function must flag)."""
+
+from functools import partial
+
+import jax
+import numpy as np
+
+_CACHE = {}
+
+
+@jax.jit
+def branch_on_traced(x, threshold):
+    # BAD: python `if` on a traced argument -> ConcretizationError (or a
+    # silent re-trace per value if threshold is weakly typed)
+    if threshold > 0:
+        return x * threshold
+    return x
+
+
+@partial(jax.jit, static_argnames=("n",))
+def concretize_traced(x, n: int):
+    # BAD: float() forces the tracer to a host value
+    scale = float(x)
+    return scale * n
+
+
+@jax.jit
+def item_on_traced(x):
+    return x.item()  # BAD: host sync / trace error
+
+
+@jax.jit
+def numpy_on_traced(x):
+    return np.asarray(x).sum()  # BAD: numpy cannot consume tracers
+
+
+@jax.jit
+def reads_mutable_global(x):
+    # BAD: dict captured at trace time; later mutations invisible
+    return x * _CACHE.get("scale", 1)
+
+
+def _loop_kernel(x_ref, out_ref, *, steps: int):
+    acc = x_ref[...]
+    # BAD: python while on a traced ref inside a kernel body
+    while x_ref[0] > 0:
+        acc = acc - 1
+    out_ref[...] = acc

@@ -1,0 +1,36 @@
+"""R3 fixture: trace-disciplined code — must stay clean."""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+_LIMIT = 8  # immutable module global: fine to capture
+
+
+@partial(jax.jit, static_argnames=("flavor", "n"))
+def branch_on_static(x, flavor: str, n: int):
+    # branching on declared-static args is the repo's standard idiom
+    if flavor == "wide":
+        return x * n
+    return x
+
+
+@jax.jit
+def branchless(x, threshold):
+    return jnp.where(threshold > 0, x * threshold, x)
+
+
+def _step_body(x_ref, out_ref, *, steps: int):
+    # kw-only kernel params are static by convention: python range() is fine
+    acc = x_ref[...]
+    for _ in range(steps):
+        acc = acc + _LIMIT
+    out_ref[...] = acc
+
+
+def host_helper(arr):
+    # not jitted and not a kernel context: float()/if are unrestricted
+    if float(arr[0]) > 0:
+        return list(arr)
+    return []

@@ -1,0 +1,21 @@
+"""R5 fixture: magic sentinel literals where named constants exist."""
+
+import jax.numpy as jnp
+
+DROPPED = -2
+NO_PRED = -1
+
+
+def drop_rate(out):
+    # BAD: raw -2 comparison; renumbering DROPPED silently breaks this
+    return (out == -2).mean()
+
+
+def mask_no_pred(r, offset):
+    # BAD: raw -1 in a where() fill position
+    return jnp.where(r < 0, -1, offset + r)
+
+
+def fill_dropped(shape):
+    # BAD: raw -2 as a full() fill value
+    return jnp.full(shape, -2, dtype=jnp.int64)

@@ -1,0 +1,24 @@
+"""R5 fixture: named sentinels and non-sentinel negatives — must stay clean."""
+
+import jax.numpy as jnp
+
+DROPPED = -2
+NO_PRED = -1
+
+
+def drop_rate(out):
+    return (out == DROPPED).mean()
+
+
+def mask_no_pred(r, offset):
+    return jnp.where(r < 0, NO_PRED, offset + r)
+
+
+def non_sentinel_uses(x):
+    # arithmetic, indexing, axis= and reshape(-1) are not sentinel spots
+    y = x - 1
+    last_two = x[-2]
+    flat = x.reshape(-1)
+    s = jnp.sum(x, axis=-2)
+    lo = x > -1  # ordering comparison, not equality routing
+    return y, last_two, flat, s, lo

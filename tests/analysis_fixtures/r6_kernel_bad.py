@@ -1,0 +1,18 @@
+"""R6 fixture: f64 dtypes inside kernel bodies (must flag)."""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def _interp_kernel(x_ref, cdf_ref, out_ref, *, n: int):
+    # BAD: f64 arithmetic in a TPU kernel body — no f64 vector unit
+    x = x_ref[...].astype(jnp.float64)
+    out_ref[...] = (x * n).astype(jnp.int32)
+
+
+def _dtype_string_kernel(x_ref, out_ref, *, n: int):
+    out_ref[...] = x_ref[...].astype("float64")  # BAD: string dtype form
+
+
+def _np_double_body(x_ref, out_ref, *, n: int):
+    out_ref[...] = x_ref[...] * np.float64(0.5)  # BAD: np scalar f64

@@ -1,0 +1,16 @@
+"""R6 fixture: f32/i32-only kernel + host-side f64 — must stay clean."""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def _interp_kernel(x_ref, cdf_ref, out_ref, *, n: int):
+    x = x_ref[...].astype(jnp.float32)
+    pos = jnp.clip(x * float(n), 0.0, float(n - 1))
+    out_ref[...] = pos.astype(jnp.int32)
+
+
+def build_host_tables(keys):
+    # host-side build-time f64 precision work is the kernels/ops.py idiom
+    cdf = np.cumsum(keys.astype(np.float64))
+    return (cdf / cdf[-1]).astype(np.float32)

@@ -1,0 +1,246 @@
+"""repro.analysis — the project static-analysis pass.
+
+Three layers of coverage:
+
+* **fixtures** — every rule family has a ``*_bad.py`` fixture that must
+  flag and a ``*_ok.py`` counterpart that must stay clean (the false-
+  positive budget is part of the contract);
+* **gate demonstration** — the PR 5 salted-seed bug and the PR 1
+  unclamped-cast bug, re-introduced verbatim in
+  ``pr_regression_bad.py``, must both be caught; their shipped fixes
+  must not be;
+* **tree-wide** — the analyzer runs over the real tree (project rules
+  included) and every finding must be covered by the committed baseline,
+  with no stale baseline entries.
+"""
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+from tools import analysis
+from tools.analysis import (
+    ALL_RULES,
+    Finding,
+    analyze_paths,
+    analyze_tree,
+    load_baseline,
+    split_by_baseline,
+)
+
+ROOT = Path(__file__).resolve().parents[1]
+FIX = ROOT / "tests" / "analysis_fixtures"
+
+
+def _scan(*names):
+    return analyze_paths([FIX / n for n in names])
+
+
+def _rules(findings):
+    return {f.rule for f in findings}
+
+
+# ---------------------------------------------------------------------------
+# Rule catalogue sanity
+# ---------------------------------------------------------------------------
+
+
+def test_rule_ids_unique_and_complete():
+    ids = [r.id for r in ALL_RULES]
+    assert ids == sorted(set(ids)), "duplicate or unordered rule ids"
+    assert ids == ["R1", "R2", "R3", "R4", "R5", "R6"]
+    for r in ALL_RULES:
+        assert r.title != "?" and r.blurb != "?"
+
+
+# ---------------------------------------------------------------------------
+# Per-rule fixtures: bad flags, ok stays clean
+# ---------------------------------------------------------------------------
+
+
+def test_r1_salted_hash_fixture():
+    bad = _scan("r1_bad.py")
+    assert _rules(bad) == {"R1"}
+    assert len(bad) == 4  # one per seeding form in the fixture
+    assert not _scan("r1_ok.py")
+
+
+def test_r2_unclamped_cast_fixture():
+    bad = _scan("r2_kernel_bad.py")
+    assert _rules(bad) == {"R2"}
+    names = {f.message for f in bad}
+    assert any("_predict_kernel" in m for m in names)
+    assert any("_scaled_body" in m for m in names)
+    assert not _scan("r2_kernel_ok.py")
+
+
+def test_r3_trace_discipline_fixture():
+    bad = _scan("r3_bad.py")
+    assert _rules(bad) == {"R3"}
+    flagged_fns = {
+        fn
+        for fn in (
+            "branch_on_traced",
+            "concretize_traced",
+            "item_on_traced",
+            "numpy_on_traced",
+            "reads_mutable_global",
+            "_loop_kernel",
+        )
+        if any(fn in f.message for f in bad)
+    }
+    assert len(flagged_fns) == 6, f"missing: {flagged_fns ^ set()}"
+    assert not _scan("r3_ok.py")
+
+
+def test_r5_magic_sentinel_fixture():
+    bad = _scan("r5_bad.py")
+    assert _rules(bad) == {"R5"}
+    assert len(bad) == 3  # comparison, where() fill, full() fill
+    assert not _scan("r5_ok.py")
+
+
+def test_r6_kernel_f64_fixture():
+    bad = _scan("r6_kernel_bad.py")
+    assert "R6" in _rules(bad)
+    assert sum(f.rule == "R6" for f in bad) == 3
+    assert not _scan("r6_kernel_ok.py")
+
+
+# ---------------------------------------------------------------------------
+# Gate demonstration: the two shipped bugs, re-introduced
+# ---------------------------------------------------------------------------
+
+
+def test_shipped_bugs_are_caught():
+    bad = _scan("pr_regression_bad.py")
+    assert _rules(bad) == {"R1", "R2"}, [f.format() for f in bad]
+    r1 = [f for f in bad if f.rule == "R1"]
+    r2 = [f for f in bad if f.rule == "R2"]
+    assert len(r1) == 1 and "hash" in r1[0].snippet  # PR 5 seeding bug
+    assert len(r2) == 1 and "_rmi_kernel" in r2[0].message  # PR 1 cast bug
+
+
+def test_shipped_fixes_stay_clean():
+    assert not _scan("pr_regression_ok.py")
+
+
+# ---------------------------------------------------------------------------
+# Tree-wide: findings ⊆ baseline, no stale suppressions
+# ---------------------------------------------------------------------------
+
+
+def test_tree_clean_modulo_baseline():
+    files, findings = analyze_tree()  # project rules (R4) included
+    assert len(files) > 50
+    assert not any("analysis_fixtures" in f.path for f in findings)
+    new, _suppressed, stale = split_by_baseline(findings, load_baseline())
+    assert not new, "new findings:\n" + "\n".join(f.format() for f in new)
+    assert not stale, f"stale baseline entries: {stale}"
+
+
+def test_registry_contract_flags_broken_kind():
+    from repro.index import registry
+
+    def _boom(**params):
+        raise RuntimeError("deliberately broken spec factory")
+
+    registry._REGISTRY["BROKEN"] = registry.KindEntry(
+        kind="BROKEN",
+        spec_cls=None,
+        build=None,
+        query_key="atomic",
+        spec_from_params=_boom,
+    )
+    try:
+        from tools.analysis.rules_contract import RegistryContractRule
+
+        findings = list(RegistryContractRule().check_project(ROOT))
+    finally:
+        del registry._REGISTRY["BROKEN"]
+    assert any("BROKEN" in f.message and f.rule == "R4" for f in findings)
+    # and the healthy kinds contribute nothing
+    assert all("BROKEN" in f.message for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# Baseline mechanics
+# ---------------------------------------------------------------------------
+
+
+def _finding(line=3, snippet="x = hash(name)"):
+    return Finding(
+        rule="R1", path="src/x.py", line=line, col=0, message="msg", snippet=snippet
+    )
+
+
+def test_baseline_suppresses_on_fingerprint_not_line():
+    entries = [{"rule": "R1", "path": "src/x.py", "snippet": "x = hash(name)", "why": "test"}]
+    new, supp, stale = split_by_baseline([_finding(line=3)], entries)
+    assert (len(new), len(supp), len(stale)) == (0, 1, 0)
+    # same fingerprint on a drifted line: still suppressed
+    new, supp, stale = split_by_baseline([_finding(line=99)], entries)
+    assert (len(new), len(supp), len(stale)) == (0, 1, 0)
+    # different snippet (a NEW occurrence): not suppressed
+    new, supp, stale = split_by_baseline([_finding(snippet="y = hash(other)")], entries)
+    assert (len(new), len(supp), len(stale)) == (1, 0, 1)
+
+
+def test_unmatched_baseline_entry_is_stale():
+    entries = [{"rule": "R9", "path": "gone.py", "snippet": "never"}]
+    new, supp, stale = split_by_baseline([], entries)
+    assert not new and not supp and stale == entries
+
+
+# ---------------------------------------------------------------------------
+# CLI contract (the CI gate invocation)
+# ---------------------------------------------------------------------------
+
+
+def _cli(*args):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    return subprocess.run(
+        [sys.executable, "-m", "tools.analysis", *args],
+        cwd=ROOT,
+        capture_output=True,
+        text=True,
+        env=env,
+    )
+
+
+def test_cli_check_nonzero_on_reintroduced_bugs():
+    r = _cli("--check", "--no-baseline", str(FIX / "pr_regression_bad.py"))
+    assert r.returncode == 1
+    assert "[R1]" in r.stdout and "[R2]" in r.stdout
+
+
+def test_cli_check_clean_on_fixed_forms():
+    r = _cli("--check", "--no-baseline", str(FIX / "pr_regression_ok.py"))
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+def test_cli_json_artifact(tmp_path):
+    out = tmp_path / "analysis.json"
+    # without --check the exit stays 0 (exploratory mode) but the JSON
+    # artifact still carries the findings
+    r = _cli("--json", str(out), "--no-baseline", str(FIX / "r1_bad.py"))
+    assert r.returncode == 0, r.stdout + r.stderr
+    data = json.loads(out.read_text())
+    assert data["counts"]["new"] == 4
+    assert {row["id"] for row in data["rules"]} == {"R1", "R2", "R3", "R4", "R5", "R6"}
+    assert all(f["rule"] == "R1" for f in data["findings"])
+
+
+def test_cli_list_rules():
+    r = _cli("--list-rules")
+    assert r.returncode == 0
+    for rid in ("R1", "R2", "R3", "R4", "R5", "R6"):
+        assert rid in r.stdout
+
+
+def test_catalogue_matches_all_rules():
+    rows = analysis.rule_catalogue()
+    assert [rid for rid, _, _ in rows] == [r.id for r in ALL_RULES]

@@ -128,7 +128,7 @@ def test_routing_at_fence_keys(rng):
     ).astype(np.uint64)
     got = np.asarray(si.sharded_lookup(sidx, qs))
     np.testing.assert_array_equal(got, true_ranks(table, qs))
-    assert got[len(fences)] == -1 or fences[0] == 0  # below the global min
+    assert got[len(fences)] == si.NO_PRED or fences[0] == 0  # below the global min
 
 
 def test_predecessor_at_shard_boundaries(rng):

@@ -1,0 +1,1 @@
+# repo tooling namespace (docs_check, analysis) — stdlib-only entry points

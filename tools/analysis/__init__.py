@@ -1,0 +1,73 @@
+"""repro.analysis — project-specific static-analysis pass.
+
+Six rule families, each grounded in a bug this repo actually shipped (or
+a contract a past PR had to retrofit):
+
+====  =========================  ==================================================
+R1    salted-hash seeding        PR 5: ``seed + hash(name)`` made bench tables
+                                 non-reproducible across processes
+R2    unclamped kernel cast      PR 1: out-of-range f32→i32 in the RMI kernel
+                                 survived the later window clip
+R3    trace discipline           python branches on traced args, concretizing
+                                 tracers, mutable-global capture in jitted code
+R4    registry/pytree contract   registered kinds must grid/stack/account —
+                                 the code analogue of docs_check's docs matrix
+R5    magic sentinel literal     raw ``-2``/``-1`` where DROPPED/NO_PRED exist
+R6    f64 in kernel body         TPU kernels are f32/i32; f64 belongs on the host
+====  =========================  ==================================================
+
+Run ``python -m tools.analysis --check`` (CI gate), or pass explicit
+files to scan fixtures hermetically (project rules are skipped then).
+"""
+
+from __future__ import annotations
+
+from .framework import (  # noqa: F401  (re-exported API)
+    BASELINE_PATH,
+    DEFAULT_ROOTS,
+    REPO_ROOT,
+    AstRule,
+    Finding,
+    Module,
+    ProjectRule,
+    Rule,
+    iter_py_files,
+    load_baseline,
+    report_json,
+    run_rules,
+    split_by_baseline,
+)
+from .rules_hash import SaltedHashRule
+from .rules_casts import UnclampedCastRule
+from .rules_trace import TraceDisciplineRule
+from .rules_contract import RegistryContractRule
+from .rules_sentinel import MagicSentinelRule
+from .rules_f64 import KernelF64Rule
+
+#: the registered pass, in rule-id order
+ALL_RULES = (
+    SaltedHashRule(),
+    UnclampedCastRule(),
+    TraceDisciplineRule(),
+    RegistryContractRule(),
+    MagicSentinelRule(),
+    KernelF64Rule(),
+)
+
+
+def rule_catalogue():
+    """(id, title, blurb) rows — the source of truth docs_check verifies
+    ``docs/analysis.md``'s table against."""
+    return [(r.id, r.title, r.blurb) for r in ALL_RULES]
+
+
+def analyze_paths(paths, *, root=REPO_ROOT, project=False, rules=ALL_RULES):
+    """Analyze explicit files (fixtures/tests).  Project rules off by
+    default so the run has no import-time dependency on jax."""
+    return run_rules(list(paths), list(rules), root=root, project=project)
+
+
+def analyze_tree(*, root=REPO_ROOT, project=True, rules=ALL_RULES):
+    """Full-tree scan: every .py under DEFAULT_ROOTS + project rules."""
+    files = iter_py_files(root)
+    return files, run_rules(files, list(rules), root=root, project=project)

@@ -1,0 +1,115 @@
+"""CLI: ``python -m tools.analysis [paths...] [--check] [--json OUT]``.
+
+Exit codes: 0 clean (or baselined), 1 new findings (with ``--check``),
+2 usage/parse trouble.  Without ``--check`` findings are printed but the
+exit code stays 0 — the exploratory mode.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from . import (
+    ALL_RULES,
+    BASELINE_PATH,
+    REPO_ROOT,
+    analyze_paths,
+    analyze_tree,
+    load_baseline,
+    report_json,
+    split_by_baseline,
+)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.analysis",
+        description="project-specific static analysis (JAX/Pallas invariant linter)",
+    )
+    ap.add_argument(
+        "paths",
+        nargs="*",
+        help="explicit files/dirs to scan (default: tree-wide scan of "
+        "src/ benchmarks/ examples/ tools/ tests/)",
+    )
+    ap.add_argument(
+        "--check",
+        action="store_true",
+        help="exit 1 on any non-baselined finding (and on stale baseline entries)",
+    )
+    ap.add_argument("--json", metavar="OUT", help="write the machine-readable report here")
+    ap.add_argument(
+        "--baseline",
+        metavar="PATH",
+        default=None,
+        help=f"suppression baseline (default {BASELINE_PATH.relative_to(REPO_ROOT)})",
+    )
+    ap.add_argument(
+        "--no-baseline",
+        action="store_true",
+        help="ignore the baseline: report every finding",
+    )
+    ap.add_argument(
+        "--no-project",
+        action="store_true",
+        help="skip project rules (R4) even on tree-wide scans",
+    )
+    ap.add_argument("--list-rules", action="store_true", help="print the rule catalogue and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for r in ALL_RULES:
+            print(f"{r.id}  {r.title}\n    {r.blurb}")
+        return 0
+
+    if args.paths:
+        files = []
+        for p in map(Path, args.paths):
+            if p.is_dir():
+                files.extend(sorted(p.rglob("*.py")))
+            elif p.exists():
+                files.append(p)
+            else:
+                print(f"error: no such path: {p}", file=sys.stderr)
+                return 2
+        # explicit paths: hermetic — project rules never run
+        findings = analyze_paths(files, project=False)
+    else:
+        files, findings = analyze_tree(project=not args.no_project)
+
+    entries = [] if args.no_baseline else load_baseline(Path(args.baseline) if args.baseline else None)
+    new, suppressed, stale = split_by_baseline(findings, entries)
+
+    report = report_json(new, suppressed, stale, list(ALL_RULES), len(files))
+    if args.json:
+        Path(args.json).write_text(json.dumps(report, indent=2) + "\n")
+
+    for f in new:
+        print(f.format())
+    if suppressed:
+        print(f"-- {len(suppressed)} baselined finding(s) suppressed", file=sys.stderr)
+    for e in stale:
+        print(
+            f"stale baseline entry: [{e.get('rule')}] {e.get('path')}: "
+            f"{e.get('snippet') or e.get('message')}",
+            file=sys.stderr,
+        )
+    parse_failures = [f for f in new if f.rule == "PARSE"]
+    print(
+        f"{len(files)} file(s), {len(new)} new finding(s), "
+        f"{len(suppressed)} baselined, {len(stale)} stale baseline entr"
+        f"{'y' if len(stale) == 1 else 'ies'}",
+        file=sys.stderr,
+    )
+    if parse_failures:
+        return 2
+    if args.check and (new or stale):
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,309 @@
+"""Shared AST helpers for the rule modules (stdlib ``ast`` only).
+
+Conventions the rules key on are *this repo's* conventions, documented in
+docs/analysis.md:
+
+* **Kernel contexts** — Pallas kernel bodies are functions whose
+  parameters end in ``_ref`` (the ``pl.pallas_call`` convention) or whose
+  name ends in ``_kernel`` / ``_body`` / ``_kernel_batched`` (the shared
+  single/batched body idiom of ``kernels/*_search.py``).  Inside a kernel
+  context, keyword-only parameters (after ``*``) are static Python ints;
+  positional parameters are traced arrays.
+* **Jit contexts** — functions decorated ``@jax.jit`` / ``@jit`` /
+  ``@(functools.)partial(jax.jit, static_argnames=..., static_argnums=...)``,
+  plus functions wrapped by a ``jax.jit(fn)`` call expression elsewhere in
+  the module (the ``self._decode = jax.jit(self._decode_impl)`` idiom).
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, Optional, Set, Tuple
+
+FuncDef = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+_KERNEL_NAME_RE = re.compile(r".*(_kernel|_body|_kernel_batched)$")
+_BOOL_FN_RE = re.compile(r"^_?(is|has|_?le|_?lt|_?ge|_?gt|_?eq|_?ne)_?")
+
+
+def call_name(node: ast.AST) -> str:
+    """Trailing name of a call target: ``jnp.clip`` -> ``clip``."""
+    if isinstance(node, ast.Call):
+        node = node.func
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return ""
+
+
+def is_kernel_context(fn: ast.AST, rel: str = "") -> bool:
+    """Pallas kernel body: has ``_ref`` params (any file), or carries a
+    kernel-suffixed name inside a kernel-ish module (``kernels/*.py``,
+    or any file with ``kernel`` in its name — fixtures use this).  The
+    path condition keeps e.g. models/transformer.py's ``_layer_body``
+    (a plain shard_map layer fn) out of kernel scope."""
+    if not isinstance(fn, FuncDef):
+        return False
+    if any(a.arg.endswith("_ref") for a in fn.args.args + fn.args.posonlyargs):
+        return True
+    return bool(_KERNEL_NAME_RE.match(fn.name)) and "kernel" in rel
+
+
+def kernel_traced_params(fn) -> Set[str]:
+    """Positional params of a kernel context (kw-only = static)."""
+    return {a.arg for a in fn.args.posonlyargs + fn.args.args}
+
+
+def _literal_names(node) -> Set[str]:
+    """String elements of a tuple/list/constant literal."""
+    out: Set[str] = set()
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        out.add(node.value)
+    elif isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        for el in node.elts:
+            if isinstance(el, ast.Constant) and isinstance(el.value, str):
+                out.add(el.value)
+    return out
+
+
+def _literal_ints(node) -> Set[int]:
+    out: Set[int] = set()
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        out.add(node.value)
+    elif isinstance(node, (ast.Tuple, ast.List)):
+        for el in node.elts:
+            if isinstance(el, ast.Constant) and isinstance(el.value, int):
+                out.add(el.value)
+    return out
+
+
+def _is_jax_jit_ref(node) -> bool:
+    """``jax.jit`` / ``jit`` as a decorator or partial() first arg."""
+    if isinstance(node, ast.Attribute):
+        return node.attr == "jit"
+    return isinstance(node, ast.Name) and node.id == "jit"
+
+
+def jit_static_info(fn) -> Optional[Tuple[Set[str], Set[int]]]:
+    """``(static_argnames, static_argnums)`` when ``fn`` is jit-decorated,
+    else None.  Handles bare ``@jax.jit`` and the ``@partial(jax.jit, ...)``
+    forms used throughout this repo."""
+    if not isinstance(fn, FuncDef):
+        return None
+    for dec in fn.decorator_list:
+        if _is_jax_jit_ref(dec):
+            return set(), set()
+        if isinstance(dec, ast.Call):
+            if _is_jax_jit_ref(dec.func):
+                return _jit_call_statics(dec)
+            if call_name(dec.func) == "partial" and dec.args and _is_jax_jit_ref(dec.args[0]):
+                return _jit_call_statics(dec)
+    return None
+
+
+def _jit_call_statics(call: ast.Call) -> Tuple[Set[str], Set[int]]:
+    names: Set[str] = set()
+    nums: Set[int] = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            names |= _literal_names(kw.value)
+        elif kw.arg == "static_argnums":
+            nums |= _literal_ints(kw.value)
+    return names, nums
+
+
+def module_jit_wrapped(tree) -> Dict[str, Tuple[Set[str], Set[int]]]:
+    """Function names wrapped by a ``jax.jit(<fn>)`` call expression
+    anywhere in the module (``jax.jit(self._decode_impl)`` idiom)."""
+    wrapped: Dict[str, Tuple[Set[str], Set[int]]] = {}
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call) and _is_jax_jit_ref(node.func) and node.args):
+            continue
+        target = node.args[0]
+        name = ""
+        if isinstance(target, ast.Name):
+            name = target.id
+        elif isinstance(target, ast.Attribute):
+            name = target.attr
+        if name:
+            wrapped[name] = _jit_call_statics(node)
+    return wrapped
+
+
+def traced_params(fn, statics: Tuple[Set[str], Set[int]]) -> Set[str]:
+    """Non-static parameter names of a jit-decorated function."""
+    names, nums = statics
+    params = [a.arg for a in fn.args.posonlyargs + fn.args.args]
+    out = set()
+    for i, p in enumerate(params):
+        if p in ("self", "cls") or p in names or i in nums:
+            continue
+        out.add(p)
+    # kw-only args are traced too unless named static
+    for a in fn.args.kwonlyargs:
+        if a.arg not in names:
+            out.add(a.arg)
+    return out
+
+
+def names_in(node) -> Set[str]:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+def enclosing_statement(node):
+    cur = node
+    while cur is not None and not isinstance(cur, ast.stmt):
+        cur = getattr(cur, "_parent", None)
+    return cur
+
+
+def enclosing_function(node):
+    cur = getattr(node, "_parent", None)
+    while cur is not None and not isinstance(cur, FuncDef):
+        cur = getattr(cur, "_parent", None)
+    return cur
+
+
+# ---------------------------------------------------------------------------
+# Local value classification for the cast rule (R2)
+# ---------------------------------------------------------------------------
+
+CLAMP_CALLS = {"clip", "minimum", "maximum"}
+_SHAPE_CALLS = {"floor", "ceil", "round", "rint", "abs", "absolute"}
+
+
+def module_bool_functions(tree) -> Set[str]:
+    """Module-level functions whose every ``return`` is boolean-shaped
+    (comparison / boolean combination) — e.g. ``_le_u64``."""
+    out: Set[str] = set()
+    for node in ast.walk(tree):
+        if not isinstance(node, FuncDef):
+            continue
+        rets = [r.value for r in ast.walk(node) if isinstance(r, ast.Return) and r.value]
+        if rets and all(_boolish_expr(r, set(), set()) for r in rets):
+            out.add(node.name)
+    return out
+
+
+def _boolish_expr(node, bool_names: Set[str], bool_funcs: Set[str]) -> bool:
+    if isinstance(node, (ast.Compare, ast.BoolOp)):
+        return True
+    if isinstance(node, ast.Name):
+        return node.id in bool_names
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, (ast.Not, ast.Invert)):
+        return _boolish_expr(node.operand, bool_names, bool_funcs)
+    if isinstance(node, ast.BinOp) and isinstance(node.op, (ast.BitAnd, ast.BitOr, ast.BitXor)):
+        return _boolish_expr(node.left, bool_names, bool_funcs) or _boolish_expr(
+            node.right, bool_names, bool_funcs
+        )
+    if isinstance(node, ast.Call):
+        name = call_name(node)
+        if name in bool_funcs or name.startswith("logical_") or _BOOL_FN_RE.match(name):
+            return True
+    return False
+
+
+def _simple_expr(node) -> bool:
+    """Constants / plain names / arithmetic thereof — cannot *introduce*
+    an unbounded float into a clamped product (statics like ``b / n``)."""
+    if isinstance(node, (ast.Constant, ast.Name)):
+        return True
+    if isinstance(node, ast.UnaryOp):
+        return _simple_expr(node.operand)
+    if isinstance(node, ast.BinOp):
+        return _simple_expr(node.left) and _simple_expr(node.right)
+    return False
+
+
+def _clamped_expr(node, clamped_names: Set[str]) -> bool:
+    if isinstance(node, ast.Name):
+        return node.id in clamped_names
+    if isinstance(node, ast.Call):
+        name = call_name(node)
+        if name in CLAMP_CALLS:
+            return True
+        if name in _SHAPE_CALLS and node.args:
+            return _clamped_expr(node.args[0], clamped_names)
+        return False
+    if isinstance(node, ast.UnaryOp):
+        return _clamped_expr(node.operand, clamped_names)
+    if isinstance(node, ast.BinOp):
+        lc = _clamped_expr(node.left, clamped_names)
+        rc = _clamped_expr(node.right, clamped_names)
+        return (lc and (rc or _simple_expr(node.right))) or (
+            rc and (lc or _simple_expr(node.left))
+        )
+    return False
+
+
+class ValueClasses:
+    """Order-sensitive classification of assigned names in one function:
+    which locals are clamped (dominated by clip/minimum/maximum), which
+    are boolean-shaped, and which are *floaty* (carry float evidence per
+    ``float_pred`` — directly or through a chain of assignments, the
+    ``pred = slope * q + icept`` PR 1 shape).  Reassignment updates the
+    class — the ``pred = ...; pred = jnp.clip(pred, ...)`` idiom works."""
+
+    def __init__(self, fn, bool_funcs: Set[str], float_pred=None):
+        self.clamped: Set[str] = set()
+        self.boolish: Set[str] = set()
+        self.floaty: Set[str] = set()
+        self.bool_funcs = bool_funcs
+        self.float_pred = float_pred
+        self._walk(fn.body)
+
+    def _walk(self, stmts):
+        for st in stmts:
+            if isinstance(st, ast.Assign) and len(st.targets) == 1:
+                self._classify(st.targets[0], st.value)
+            elif isinstance(st, ast.AugAssign):
+                self._classify(st.target, st.value)
+            for sub in ("body", "orelse", "finalbody"):
+                inner = getattr(st, sub, None)
+                if inner:
+                    self._walk(inner)
+
+    def _classify(self, target, value):
+        names = []
+        if isinstance(target, ast.Name):
+            names = [target.id]
+        elif isinstance(target, ast.Tuple):
+            names = [t.id for t in target.elts if isinstance(t, ast.Name)]
+            # tuple unpack: conservatively drop prior classes only
+            for n in names:
+                self.clamped.discard(n)
+                self.boolish.discard(n)
+                self.floaty.discard(n)
+            return
+        for n in names:
+            if _clamped_expr(value, self.clamped):
+                self.clamped.add(n)
+                self.boolish.discard(n)
+                self.floaty.discard(n)
+            elif _boolish_expr(value, self.boolish, self.bool_funcs):
+                self.boolish.add(n)
+                self.clamped.discard(n)
+                self.floaty.discard(n)
+            else:
+                self.clamped.discard(n)
+                self.boolish.discard(n)
+                if self._floaty_value(value):
+                    self.floaty.add(n)
+                else:
+                    self.floaty.discard(n)
+
+    def _floaty_value(self, value) -> bool:
+        if self.float_pred is None:
+            return False
+        return bool(self.float_pred(value)) or bool(names_in(value) & self.floaty)
+
+    def is_clamped(self, node) -> bool:
+        return _clamped_expr(node, self.clamped)
+
+    def is_boolish(self, node) -> bool:
+        return _boolish_expr(node, self.boolish, self.bool_funcs)
+
+    def is_floaty(self, node) -> bool:
+        return self._floaty_value(node)

@@ -1,0 +1,232 @@
+"""The analyzer framework: findings, rule registry, file walking, baseline.
+
+Everything here is **stdlib-only** so the pass runs in the offline
+container before any test (or third-party tool) does.  Two rule shapes:
+
+* :class:`AstRule` — per-module AST visitors.  The framework parses each
+  file once into a :class:`Module` (source, tree, parent links) and
+  hands it to every AST rule.
+* :class:`ProjectRule` — whole-tree semantic rules that may import
+  ``repro`` itself (the registry/pytree contract check R4 — the code
+  analogue of ``tools/docs_check.py``'s docs matrix check).  Project
+  rules only run on full-tree scans, never on explicit file arguments,
+  so fixture runs stay hermetic.
+
+A finding is suppressed when the committed baseline
+(``tools/analysis/baseline.json``) carries a matching entry — matched on
+``(rule, path, snippet)`` so accepted pre-existing findings survive line
+drift but *new* occurrences of the same pattern in other lines/files
+still fail ``--check``.
+"""
+
+from __future__ import annotations
+
+import ast
+import json
+from dataclasses import dataclass, field, asdict
+from pathlib import Path
+from typing import Iterable, List, Optional
+
+REPO_ROOT = Path(__file__).resolve().parents[2]
+
+#: Tree-wide scan roots (repo-relative).  ``tests/analysis_fixtures`` is
+#: excluded below: it holds deliberate rule violations.
+DEFAULT_ROOTS = ("src", "benchmarks", "examples", "tools", "tests")
+EXCLUDE_PARTS = {"__pycache__", ".git", "analysis_fixtures"}
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str  # rule id, e.g. "R1"
+    path: str  # repo-relative posix path
+    line: int
+    col: int
+    message: str
+    hint: str = ""
+    snippet: str = ""  # stripped source line — the baseline fingerprint
+
+    def key(self) -> tuple:
+        # line numbers deliberately NOT part of the key: baselines
+        # survive unrelated edits above the finding
+        return (self.rule, self.path, self.snippet or self.message)
+
+    def format(self) -> str:
+        loc = f"{self.path}:{self.line}:{self.col}"
+        out = f"{loc}: [{self.rule}] {self.message}"
+        if self.hint:
+            out += f"\n    hint: {self.hint}"
+        return out
+
+
+@dataclass
+class Module:
+    """One parsed source file, shared by every AST rule."""
+
+    path: Path
+    rel: str
+    source: str
+    tree: ast.AST
+    lines: List[str] = field(default_factory=list)
+
+    @classmethod
+    def parse(cls, path: Path, root: Path = REPO_ROOT) -> "Module":
+        source = path.read_text()
+        tree = ast.parse(source, filename=str(path))
+        # parent links: rules walk up to find enclosing statements/defs
+        for node in ast.walk(tree):
+            for child in ast.iter_child_nodes(node):
+                child._parent = node  # type: ignore[attr-defined]
+        try:
+            rel = path.resolve().relative_to(root).as_posix()
+        except ValueError:
+            rel = path.as_posix()
+        return cls(path=path, rel=rel, source=source, tree=tree, lines=source.splitlines())
+
+    def line_at(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1].strip()
+        return ""
+
+    def finding(self, rule: str, node: ast.AST, message: str, hint: str = "") -> Finding:
+        line = getattr(node, "lineno", 1)
+        col = getattr(node, "col_offset", 0)
+        return Finding(
+            rule=rule,
+            path=self.rel,
+            line=line,
+            col=col,
+            message=message,
+            hint=hint,
+            snippet=self.line_at(line),
+        )
+
+
+class Rule:
+    """Base: one registered rule family (id, title, bug-class blurb)."""
+
+    id: str = "R?"
+    title: str = "?"
+    #: one-line description for the docs catalogue (docs/analysis.md);
+    #: verified against the table by tools/docs_check.py
+    blurb: str = "?"
+
+
+class AstRule(Rule):
+    def check_module(self, mod: Module) -> Iterable[Finding]:  # pragma: no cover
+        raise NotImplementedError
+
+    def finish(self, modules: List[Module]) -> Iterable[Finding]:
+        """Hook for rules needing a cross-module view (after all
+        check_module calls).  Default: nothing."""
+        return ()
+
+
+class ProjectRule(Rule):
+    def check_project(self, root: Path) -> Iterable[Finding]:  # pragma: no cover
+        raise NotImplementedError
+
+
+def iter_py_files(root: Path = REPO_ROOT, roots=DEFAULT_ROOTS) -> List[Path]:
+    files: List[Path] = []
+    for sub in roots:
+        base = root / sub
+        if not base.exists():
+            continue
+        for p in sorted(base.rglob("*.py")):
+            if any(part in EXCLUDE_PARTS for part in p.parts):
+                continue
+            files.append(p)
+    return files
+
+
+def run_rules(
+    files: List[Path],
+    rules: List[Rule],
+    *,
+    root: Path = REPO_ROOT,
+    project: bool = False,
+) -> List[Finding]:
+    """Run ``rules`` over ``files``; project rules only when ``project``."""
+    findings: List[Finding] = []
+    modules: List[Module] = []
+    for path in files:
+        try:
+            modules.append(Module.parse(path, root=root))
+        except SyntaxError as e:
+            findings.append(
+                Finding(
+                    rule="PARSE",
+                    path=str(path),
+                    line=e.lineno or 1,
+                    col=e.offset or 0,
+                    message=f"syntax error: {e.msg}",
+                )
+            )
+    ast_rules = [r for r in rules if isinstance(r, AstRule)]
+    for mod in modules:
+        for rule in ast_rules:
+            findings.extend(rule.check_module(mod))
+    for rule in ast_rules:
+        findings.extend(rule.finish(modules))
+    if project:
+        for rule in rules:
+            if isinstance(rule, ProjectRule):
+                findings.extend(rule.check_project(root))
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Baseline: committed, fingerprint-matched suppressions
+# ---------------------------------------------------------------------------
+
+BASELINE_PATH = Path(__file__).resolve().parent / "baseline.json"
+
+
+def load_baseline(path: Optional[Path] = None) -> List[dict]:
+    path = path or BASELINE_PATH
+    if not path.exists():
+        return []
+    data = json.loads(path.read_text())
+    return list(data.get("entries", []))
+
+
+def split_by_baseline(findings: List[Finding], entries: List[dict]):
+    """-> (new, suppressed, stale_entries).
+
+    An entry suppresses every finding with the same (rule, path, snippet)
+    fingerprint; entries matching nothing are reported stale so the
+    baseline can only shrink as findings are fixed.
+    """
+    keys = {(e.get("rule"), e.get("path"), e.get("snippet") or e.get("message")) for e in entries}
+    new = [f for f in findings if f.key() not in keys]
+    suppressed = [f for f in findings if f.key() in keys]
+    hit = {f.key() for f in suppressed}
+    stale = [
+        e
+        for e in entries
+        if (e.get("rule"), e.get("path"), e.get("snippet") or e.get("message")) not in hit
+    ]
+    return new, suppressed, stale
+
+
+def report_json(
+    findings_new: List[Finding],
+    suppressed: List[Finding],
+    stale: List[dict],
+    rules: List[Rule],
+    n_files: int,
+) -> dict:
+    return {
+        "version": 1,
+        "rules": [{"id": r.id, "title": r.title, "blurb": r.blurb} for r in rules],
+        "n_files": n_files,
+        "findings": [asdict(f) for f in findings_new],
+        "baselined": [asdict(f) for f in suppressed],
+        "stale_baseline": stale,
+        "counts": {
+            "new": len(findings_new),
+            "baselined": len(suppressed),
+            "stale_baseline": len(stale),
+        },
+    }

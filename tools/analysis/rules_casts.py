@@ -1,0 +1,100 @@
+"""R2 — unclamped narrowing casts in Pallas kernel bodies (PR 1 bug class).
+
+An out-of-range ``f32 -> i32`` cast is implementation-defined garbage on
+every backend, and the garbage *survives* later ``jnp.clip`` calls: the
+PR 1 bug was an RMI root prediction blowing up to ``|p| ~ 1e15`` on key
+gaps, casting to a nonsense i32, and the later window clip happily
+clamping nonsense into a plausible-looking (wrong) search window.  The
+fix — and the invariant this rule enforces — is a *dominating* clamp
+(``clip`` / ``minimum`` / ``maximum``) applied to the float value BEFORE
+the cast (``kernels/rmi_search.py``: ``jnp.clip(p_root, -1e9, 1e9)``).
+
+Scope: kernel-context functions (see ``astutil.is_kernel_context``) in
+``kernels/`` modules.  Boolean-shaped values (limb compares) cast to i32
+are fine — that's the branch-free select idiom.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .framework import AstRule, Module
+from . import astutil
+
+_INT_DTYPES = {"int32", "int64", "int16", "int8", "i32", "i64"}
+_HINT = (
+    "clamp the float value before the cast — jnp.clip(pred, -1.0e9, 1.0e9) "
+    "(the rmi_search.py idiom); clipping after .astype(int32) cannot undo an "
+    "out-of-range cast"
+)
+
+
+def _int_dtype_arg(call: ast.Call) -> bool:
+    if not call.args:
+        return False
+    arg = call.args[0]
+    if isinstance(arg, ast.Attribute):
+        return arg.attr in _INT_DTYPES
+    if isinstance(arg, ast.Name):
+        return arg.id in _INT_DTYPES
+    if isinstance(arg, ast.Constant) and isinstance(arg.value, str):
+        return arg.value in _INT_DTYPES
+    return False
+
+
+def _float_evidence(node) -> bool:
+    """Only flag receivers that plausibly carry a float *prediction*:
+    floor/ceil/round of something, or arithmetic mentioning a float
+    literal.  Plain int-valued gathers/counters cast to i32 stay quiet."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call) and astutil.call_name(sub) in (
+            "floor",
+            "ceil",
+            "round",
+            "rint",
+        ):
+            return True
+        if isinstance(sub, ast.Constant) and isinstance(sub.value, float):
+            return True
+        if isinstance(sub, ast.Call) and astutil.call_name(sub) == "astype":
+            # x.astype(f32) re-entering an int cast chain
+            if sub.args and not _int_dtype_arg(sub):
+                return True
+    return False
+
+
+class UnclampedCastRule(AstRule):
+    id = "R2"
+    title = "unclamped kernel cast"
+    blurb = (
+        "`.astype(int32)` on an unclamped float inside a Pallas kernel body — "
+        "out-of-range f32→i32 is garbage that survives later clips"
+    )
+
+    def check_module(self, mod: Module):
+        bool_funcs = astutil.module_bool_functions(mod.tree)
+        for fn in ast.walk(mod.tree):
+            if not astutil.is_kernel_context(fn, mod.rel):
+                continue
+            classes = astutil.ValueClasses(fn, bool_funcs, float_pred=_float_evidence)
+            yield from self._check_fn(mod, fn, classes)
+
+    def _check_fn(self, mod: Module, fn, classes):
+        for node in ast.walk(fn):
+            if not (isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute)):
+                continue
+            if node.func.attr != "astype" or not _int_dtype_arg(node):
+                continue
+            recv = node.func.value
+            if classes.is_boolish(recv) or classes.is_clamped(recv):
+                continue
+            if not classes.is_floaty(recv):
+                continue
+            yield mod.finding(
+                self.id,
+                node,
+                f"float->int cast without a dominating clamp in kernel body "
+                f"`{fn.name}` — out-of-range f32->i32 is undefined garbage "
+                f"that later clips cannot repair",
+                _HINT,
+            )

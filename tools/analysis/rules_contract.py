@@ -1,0 +1,198 @@
+"""R4 — registry / pytree contract (project rule).
+
+The decorator registry (``repro.index.registry``) made adding an index
+kind a one-decorator affair — which also made it easy to add a kind that
+*looks* registered but violates the contracts every composite path
+assumes.  ``tools/docs_check.py`` already guards the docs matrix; this
+rule extends the same idea from docs into code, by importing the live
+registry and probing each registered kind:
+
+* the spec class round-trips through ``spec_for(kind)`` and contributes
+  a non-empty ``default_grid`` of registered specs (the Pareto tuner's
+  enrolment contract);
+* a :class:`~repro.index.impls.QueryImpl` exists with ``intervals``,
+  ``space_bytes``, ``pallas`` and ``pallas_batched`` — required since
+  ``"pallas"`` is in every backend tuple;
+* ``BATCH_BACKENDS`` == ``TIER_BACKENDS`` ⊆ ``BACKENDS`` — a backend
+  claimed by the batched builder must be claimable by the sharded tier
+  and known to ``Index.lookup``;
+* the **stacking probe**: the kind builds on two small tables of
+  different hardness and ``stack_indexes`` accepts the pair — i.e. every
+  *data-dependent* static (bucketed trip counts) is declared in
+  ``_STEP_KEYS`` (or harmonised, like PGM ``levels``); a new kind whose
+  trip-count static is missing from ``_STEP_KEYS`` fails here instead of
+  deep inside a tier refresh;
+* ``space_bytes() <= nbytes()`` on the built artifact (the PR 3
+  model-constituent accounting invariant).
+
+Runs only on full-tree scans (it imports jax); findings anchor at the
+registration site ``src/repro/index/impls.py``.
+"""
+
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+from .framework import Finding, ProjectRule
+
+_ANCHOR = "src/repro/index/impls.py"
+
+
+def _finding(message: str, hint: str = "") -> Finding:
+    return Finding(
+        rule="R4",
+        path=_ANCHOR,
+        line=1,
+        col=0,
+        message=message,
+        hint=hint,
+        snippet=message,  # project findings fingerprint on the message
+    )
+
+
+class RegistryContractRule(ProjectRule):
+    id = "R4"
+    title = "registry/pytree contract"
+    blurb = (
+        "every registered kind must define a usable default_grid/space_bytes, "
+        "stack through the `_STEP_KEYS` machinery, and back every claimed "
+        "backend (BATCH_BACKENDS/TIER_BACKENDS ⊆ BACKENDS)"
+    )
+
+    def check_project(self, root: Path):
+        src = root / "src"
+        if str(src) not in sys.path:
+            sys.path.insert(0, str(src))
+        try:
+            from repro.index import BACKENDS, registry
+            from repro.index.impls import query_impl
+            from repro.dist.sharded_index import _STEP_KEYS, _harmonize, stack_indexes
+            from repro.tune.batched import BATCH_BACKENDS
+            from repro.dist.sharded_index import TIER_BACKENDS
+            from repro.data import distributions
+        except Exception as e:  # pragma: no cover - container without jax
+            yield _finding(
+                f"registry contract probe could not import repro ({e!r})",
+                "run from the repo root with the package installed (pip install -e .)",
+            )
+            return
+
+        kinds = registry.kinds()
+        if not kinds:
+            yield _finding("registry is empty — no index kind registered")
+            return
+
+        # --- backend claims ---
+        for name, claimed in (("BATCH_BACKENDS", BATCH_BACKENDS), ("TIER_BACKENDS", TIER_BACKENDS)):
+            extra = set(claimed) - set(BACKENDS)
+            if extra:
+                yield _finding(
+                    f"{name} claims backend(s) {sorted(extra)} unknown to "
+                    f"repro.index.BACKENDS {tuple(BACKENDS)}"
+                )
+        if set(BATCH_BACKENDS) != set(TIER_BACKENDS):
+            yield _finding(
+                f"BATCH_BACKENDS {tuple(sorted(BATCH_BACKENDS))} != TIER_BACKENDS "
+                f"{tuple(sorted(TIER_BACKENDS))} — the batched builder and the "
+                f"sharded tier must claim the same backends",
+                "a kind answered batched must be answerable in a tier (both run "
+                "the same batched kernels)",
+            )
+        need_pallas = "pallas" in set(BACKENDS) | set(BATCH_BACKENDS) | set(TIER_BACKENDS)
+
+        # --- probe tables: one easy (near-uniform), one hard (clustered) ---
+        t_easy = distributions.generate("face", 512, seed=11)
+        t_hard = distributions.generate("osm", 512, seed=13)
+
+        for kind in kinds:
+            try:
+                spec = registry.spec_for(kind)
+            except Exception as e:
+                yield _finding(f"kind {kind!r}: spec_for() failed: {e!r}")
+                continue
+            if spec.kind != kind:
+                yield _finding(
+                    f"kind {kind!r}: spec_for() returned a spec of kind "
+                    f"{spec.kind!r} — registry key and spec.kind disagree"
+                )
+            try:
+                grid = type(spec).default_grid(4096)
+            except Exception as e:
+                yield _finding(f"kind {kind!r}: default_grid(4096) raised {e!r}")
+                grid = ()
+            if not grid:
+                yield _finding(
+                    f"kind {kind!r}: default_grid(4096) is empty — the kind "
+                    f"never enrols in the Pareto tuner sweep",
+                    "return at least the default spec (IndexSpec.default_grid does)",
+                )
+            for g in grid:
+                if g.kind not in kinds:
+                    yield _finding(
+                        f"kind {kind!r}: default_grid yields spec of "
+                        f"unregistered kind {g.kind!r}"
+                    )
+            try:
+                impl = query_impl(kind)
+            except Exception as e:
+                yield _finding(f"kind {kind!r}: no QueryImpl ({e!r})")
+                continue
+            for attr in ("intervals", "space_bytes"):
+                if not callable(getattr(impl, attr, None)):
+                    yield _finding(f"kind {kind!r}: QueryImpl.{attr} is not callable")
+            if need_pallas:
+                for attr in ("pallas", "pallas_batched"):
+                    if getattr(impl, attr, None) is None:
+                        yield _finding(
+                            f"kind {kind!r}: QueryImpl.{attr} is missing but "
+                            f"'pallas' is a claimed backend",
+                            "wire the fused kernel or the k-ary fallback "
+                            "(_kary_pallas_fallback / _kary_pallas_batched)",
+                        )
+
+            # --- build + stacking probe ---
+            try:
+                i_easy = registry.entry(kind).build(spec, t_easy)
+                i_hard = registry.entry(kind).build(spec, t_hard)
+            except Exception as e:
+                yield _finding(f"kind {kind!r}: default-spec build failed on probe tables: {e!r}")
+                continue
+            try:
+                sb, nb = i_hard.space_bytes(), i_hard.nbytes()
+            except Exception as e:
+                yield _finding(f"kind {kind!r}: space accounting raised {e!r}")
+            else:
+                if not (0 < sb <= nb):
+                    yield _finding(
+                        f"kind {kind!r}: space_bytes()={sb} outside (0, "
+                        f"nbytes()={nb}] — model-constituent accounting is broken"
+                    )
+            harmonized_ok = {"levels"} if registry.entry(kind).query_key == "pgm" else set()
+            diff = {
+                a for (a, va), (b, vb) in zip(i_easy.static, i_hard.static) if va != vb or a != b
+            }
+            rogue = diff - set(_STEP_KEYS) - harmonized_ok
+            if rogue:
+                yield _finding(
+                    f"kind {kind!r}: static key(s) {sorted(rogue)} are "
+                    f"data-dependent but not in _STEP_KEYS — stacking/tier "
+                    f"refresh will reject same-spec rebuilds",
+                    "add the key to repro.dist.sharded_index._STEP_KEYS (bucketed "
+                    "trip counts take the max) or harmonise like PGM levels",
+                )
+            try:
+                stacked = stack_indexes(_harmonize(kind, [i_easy, i_hard]))
+            except Exception as e:
+                yield _finding(
+                    f"kind {kind!r}: stack_indexes() rejects two same-spec "
+                    f"builds ({e!r}) — the kind cannot join a sharded tier or "
+                    f"BatchedIndexes",
+                )
+                continue
+            missing = set(stacked.arrays) ^ set(i_easy.arrays)
+            if missing:
+                yield _finding(
+                    f"kind {kind!r}: stacked leaves {sorted(missing)} do not "
+                    f"match the single-index leaf set"
+                )

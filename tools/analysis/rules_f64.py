@@ -1,0 +1,63 @@
+"""R6 — f64 literals / dtypes inside Pallas kernel bodies.
+
+TPU vector units have no f64: a ``float64`` dtype reaching a Pallas body
+either fails lowering on real hardware or silently runs in interpret
+mode only — and this repo's contract is that ALL in-kernel arithmetic is
+f32/i32 over u32 limb pairs, with any f64 precision work done **once on
+the host at build time** (``kernels/ops.py`` pre-normalises the CDF
+coordinate in f64 and re-measures ε with the kernel's exact f32
+arithmetic).  A kernel-body f64 is always a porting mistake.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .framework import AstRule, Module
+from . import astutil
+
+_F64_NAMES = {"float64", "f64", "double", "complex128"}
+_HINT = (
+    "kernels are f32/i32 over u32 limbs; do f64 work on the host at build "
+    "time (kernels/ops.py idiom) and pass pre-normalised f32 arrays in"
+)
+
+
+class KernelF64Rule(AstRule):
+    id = "R6"
+    title = "f64 in kernel body"
+    blurb = (
+        "float64 literals/dtypes inside a Pallas kernel body — TPUs have no "
+        "f64; precision work belongs on the host at build time"
+    )
+
+    def check_module(self, mod: Module):
+        for fn in ast.walk(mod.tree):
+            if not astutil.is_kernel_context(fn, mod.rel):
+                continue
+            for node in ast.walk(fn):
+                hit = None
+                if isinstance(node, ast.Attribute) and node.attr in _F64_NAMES:
+                    hit = node.attr
+                elif isinstance(node, ast.Name) and node.id in _F64_NAMES:
+                    hit = node.id
+                elif (
+                    isinstance(node, ast.Constant)
+                    and isinstance(node.value, str)
+                    and node.value in _F64_NAMES
+                ):
+                    # .astype("float64") / dtype="float64"
+                    parent = getattr(node, "_parent", None)
+                    in_dtype_pos = isinstance(parent, ast.Call) or (
+                        isinstance(parent, ast.keyword) and parent.arg in ("dtype", None)
+                    )
+                    if in_dtype_pos:
+                        hit = node.value
+                if hit:
+                    yield mod.finding(
+                        self.id,
+                        node,
+                        f"`{hit}` inside kernel body `{fn.name}` — TPU kernels "
+                        f"have no f64 (lowering failure or interpret-only)",
+                        _HINT,
+                    )

@@ -1,0 +1,95 @@
+"""R1 — salted-hash seeding (the PR 5 bug class).
+
+``hash(str)`` is salted per interpreter process (PYTHONHASHSEED), so any
+``hash()`` feeding a seed / rng / checksum path silently produces
+*different* values in every process — the exact bug that made every
+benchmark table non-reproducible until ``benchmarks/trend.py`` caught it
+(``data/distributions.generate`` seeded ``seed + hash(name)``; now
+``zlib.crc32``).
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+
+from .framework import AstRule, Module
+from . import astutil
+
+#: a hash() call is "feeding a seed path" when the enclosing statement
+#: mentions one of these, or when the enclosing call target matches
+_SEEDY_NAME_RE = re.compile(r"(seed|rng|random|salt|crc|checksum|digest|entropy)", re.I)
+_SEEDY_CALLEE_RE = re.compile(r"(default_rng|RandomState|PRNGKey|Generator|seed|crc32|adler32)", re.I)
+
+_HINT = (
+    "builtin hash() is salted per process (PYTHONHASHSEED); use "
+    "zlib.crc32(x.encode()) for a process-stable offset (the "
+    "data/distributions.generate idiom)"
+)
+
+
+def _is_stringish(arg: ast.AST) -> bool:
+    if isinstance(arg, ast.JoinedStr):
+        return True
+    if isinstance(arg, ast.Constant) and isinstance(arg.value, str):
+        return True
+    if isinstance(arg, ast.Call) and astutil.call_name(arg) in ("str", "repr", "format"):
+        return True
+    if isinstance(arg, ast.BinOp) and isinstance(arg.op, (ast.Add, ast.Mod)):
+        # "a" + b / "fmt" % x string building
+        return _is_stringish(arg.left) or _is_stringish(arg.right)
+    return False
+
+
+def _seedy_context(call: ast.Call) -> bool:
+    # enclosing call chain: default_rng(hash(name)), crc_update(hash(x)), ...
+    cur = getattr(call, "_parent", None)
+    while cur is not None and not isinstance(cur, ast.stmt):
+        if isinstance(cur, ast.Call) and _SEEDY_CALLEE_RE.search(astutil.call_name(cur)):
+            return True
+        cur = getattr(cur, "_parent", None)
+    stmt = astutil.enclosing_statement(call)
+    if stmt is None:
+        return False
+    mentioned = set(astutil.names_in(stmt))
+    for node in ast.walk(stmt):
+        if isinstance(node, ast.Attribute):
+            mentioned.add(node.attr)
+        elif isinstance(node, ast.keyword) and node.arg:
+            mentioned.add(node.arg)
+    return any(_SEEDY_NAME_RE.search(n) for n in mentioned)
+
+
+class SaltedHashRule(AstRule):
+    id = "R1"
+    title = "salted-hash seeding"
+    blurb = (
+        "builtin `hash()` feeding a seed/rng/crc path — per-process salted "
+        "(PYTHONHASHSEED), so derived artifacts are not reproducible across runs"
+    )
+
+    def check_module(self, mod: Module):
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if not (isinstance(node.func, ast.Name) and node.func.id == "hash"):
+                continue
+            if len(node.args) != 1:
+                continue
+            arg = node.args[0]
+            if _is_stringish(arg):
+                yield mod.finding(
+                    self.id,
+                    node,
+                    "hash() of a string is process-salted — any value derived "
+                    "from it differs run to run",
+                    _HINT,
+                )
+            elif _seedy_context(node):
+                yield mod.finding(
+                    self.id,
+                    node,
+                    "hash() feeding a seed/rng path — process-salted for str/bytes "
+                    "(and any object hash can vary across runs)",
+                    _HINT,
+                )

@@ -1,0 +1,126 @@
+"""R5 — sentinel discipline: magic routing literals shadowing named constants.
+
+The sharded tier routes with named sentinels (``repro.dist.DROPPED = -2``
+for capacity-dropped queries, ``NO_PRED = -1`` for "no predecessor").
+A bare ``-2`` in a comparison or fill does the same thing until someone
+renumbers the constant — then it silently mis-classifies.  This rule
+collects every module-level ``ALL_CAPS = -k`` constant across the
+scanned set and flags raw ``-k`` literals used in sentinel positions
+(equality comparisons; fill-value arguments of ``where`` / ``full`` /
+``asarray`` / ``select``) anywhere a named constant for that value
+exists.
+
+Arithmetic (``rank - 1``), indexing (``shape[-2]``), ``axis=-2`` keywords
+and ``reshape(-1)`` never flag — only *sentinel positions* do.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List
+
+from .framework import AstRule, Module
+from . import astutil
+
+#: callee -> positional arg indices that are fill/sentinel values
+_FILL_POSITIONS = {
+    "where": (1, 2),
+    "full": (1,),
+    "full_like": (1,),
+    "asarray": (0,),
+    "array": (0,),
+    "select": (2,),
+    "fill": (0,),
+}
+_FILL_KEYWORDS = {"fill_value", "constant_values"}
+
+
+def _neg_int(node) -> int | None:
+    """-k literal (UnaryOp USub over an int constant) -> -k, else None."""
+    if (
+        isinstance(node, ast.UnaryOp)
+        and isinstance(node.op, ast.USub)
+        and isinstance(node.operand, ast.Constant)
+        and isinstance(node.operand.value, int)
+        and not isinstance(node.operand.value, bool)
+    ):
+        return -node.operand.value
+    return None
+
+
+class MagicSentinelRule(AstRule):
+    id = "R5"
+    title = "magic sentinel literal"
+    blurb = (
+        "raw `-2`/`-1` routing literals in comparisons/fills where a named "
+        "constant (`DROPPED`, `NO_PRED`) exists — renumbering would silently "
+        "mis-classify"
+    )
+
+    def check_module(self, mod: Module):
+        # two-phase: constants are collected across the whole module set
+        # first, findings emitted in finish()
+        return ()
+
+    def finish(self, modules: List[Module]):
+        constants: Dict[int, str] = {}
+        for mod in modules:
+            for node in mod.tree.body:
+                if not (isinstance(node, ast.Assign) and len(node.targets) == 1):
+                    continue
+                t = node.targets[0]
+                v = _neg_int(node.value)
+                if v is not None and isinstance(t, ast.Name) and t.id.isupper():
+                    constants.setdefault(v, t.id)
+        if not constants:
+            return
+        for mod in modules:
+            yield from self._check(mod, constants)
+
+    def _check(self, mod: Module, constants: Dict[int, str]):
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Compare):
+                for op, comp in zip(node.ops, node.comparators):
+                    if not isinstance(op, (ast.Eq, ast.NotEq)):
+                        continue
+                    v = _neg_int(comp)
+                    if v in constants and not self._is_defining(mod, comp):
+                        yield self._finding(mod, comp, v, constants[v], "comparison")
+            elif isinstance(node, ast.Call):
+                callee = astutil.call_name(node)
+                spots = _FILL_POSITIONS.get(callee, ())
+                for i in spots:
+                    if i < len(node.args):
+                        v = _neg_int(node.args[i])
+                        if v in constants:
+                            yield self._finding(
+                                mod, node.args[i], v, constants[v], f"{callee}() fill"
+                            )
+                for kw in node.keywords:
+                    if kw.arg in _FILL_KEYWORDS:
+                        v = _neg_int(kw.value)
+                        if v in constants:
+                            yield self._finding(mod, kw.value, v, constants[v], f"{kw.arg}=")
+
+    @staticmethod
+    def _is_defining(mod: Module, node) -> bool:
+        # `NAME = -k` module-level defining assignments are the one
+        # allowed raw use (and asserts like `DROPPED == -2` in tests of
+        # the constant itself still flag — compare against the name)
+        stmt = astutil.enclosing_statement(node)
+        return (
+            isinstance(stmt, ast.Assign)
+            and len(stmt.targets) == 1
+            and isinstance(stmt.targets[0], ast.Name)
+            and stmt.targets[0].id.isupper()
+        )
+
+    def _finding(self, mod: Module, node, value: int, name: str, where: str):
+        return mod.finding(
+            self.id,
+            node,
+            f"magic sentinel `{value}` in {where} — the named constant "
+            f"`{name}` exists for this value",
+            f"use the named constant (e.g. `from repro.dist import {name}`); "
+            f"a renumber would otherwise silently mis-route",
+        )

@@ -1,0 +1,167 @@
+"""R3 — trace discipline in jitted functions and Pallas kernel bodies.
+
+Today the one-trace-per-(kind, backend) invariant is enforced only by
+after-the-fact ``trace_counts()`` asserts in tests and bench gates; this
+rule catches the mechanical violations at the AST level, before any
+trace happens:
+
+* **Python control flow on traced arguments** — ``if``/``while`` on a
+  non-static jit parameter (or a positional kernel parameter) either
+  raises a ConcretizationError or, worse, silently burns one trace per
+  Python-visible value.  Static args are fine: the rule parses
+  ``static_argnames`` / ``static_argnums`` from the decorator, and in
+  kernel contexts keyword-only params are static by this repo's
+  convention (``*, b, n, steps``).
+* **Concretizing calls on tracers** — ``float()`` / ``int()`` / ``bool()``
+  / ``.item()`` / ``.tolist()`` / ``np.asarray()`` applied to a traced
+  parameter forces a device sync per call at best, a trace error at
+  worst.
+* **Captured mutable module globals** — a jitted function reading a
+  module-level dict/list/set/Counter closes over *trace-time* state:
+  mutations after the first trace are silently invisible.  (The
+  deliberate ``count_trace`` python-side-effect idiom routes through a
+  function call and is not flagged.)
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .framework import AstRule, Module
+from . import astutil
+
+_CONCRETIZE_BUILTINS = {"float", "int", "bool"}
+_CONCRETIZE_METHODS = {"item", "tolist", "__array__"}
+_NP_CONCRETIZE = {"asarray", "array", "asnumpy"}
+_MUTABLE_CALLS = {"dict", "list", "set", "Counter", "defaultdict", "OrderedDict", "deque"}
+
+
+def _module_mutable_globals(tree) -> set:
+    out = set()
+    for node in tree.body:
+        targets = []
+        if isinstance(node, ast.Assign):
+            targets = node.targets
+            value = node.value
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            targets = [node.target]
+            value = node.value
+        else:
+            continue
+        mutable = isinstance(value, (ast.Dict, ast.List, ast.Set, ast.DictComp, ast.ListComp))
+        if isinstance(value, ast.Call) and astutil.call_name(value) in _MUTABLE_CALLS:
+            mutable = True
+        if not mutable:
+            continue
+        for t in targets:
+            if isinstance(t, ast.Name):
+                out.add(t.id)
+    return out
+
+
+class TraceDisciplineRule(AstRule):
+    id = "R3"
+    title = "trace discipline"
+    blurb = (
+        "jitted / kernel functions branching on traced args, concretizing "
+        "tracers (float()/.item()/np.*), or capturing mutable module globals"
+    )
+
+    def check_module(self, mod: Module):
+        mutable_globals = _module_mutable_globals(mod.tree)
+        jit_wrapped = astutil.module_jit_wrapped(mod.tree)
+        for fn in ast.walk(mod.tree):
+            if not isinstance(fn, astutil.FuncDef):
+                continue
+            statics = astutil.jit_static_info(fn)
+            if statics is None and fn.name in jit_wrapped:
+                statics = jit_wrapped[fn.name]
+            kernel = astutil.is_kernel_context(fn, mod.rel)
+            if statics is None and not kernel:
+                continue
+            if statics is not None:
+                traced = astutil.traced_params(fn, statics)
+                kind = "jitted function"
+            else:
+                traced = astutil.kernel_traced_params(fn)
+                kind = "kernel body"
+            yield from self._check_fn(mod, fn, traced, mutable_globals, kind)
+
+    def _check_fn(self, mod: Module, fn, traced, mutable_globals, kind):
+        # nested defs (shard_map blocks, fori bodies) are walked in place:
+        # their params may shadow fn's traced names, but this repo's
+        # nested blocks rename locals, so the cheap approximation holds.
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.If, ast.While)):
+                used = astutil.names_in(node.test) & traced
+                if used:
+                    stmt = "while" if isinstance(node, ast.While) else "if"
+                    yield mod.finding(
+                        self.id,
+                        node,
+                        f"python `{stmt}` on traced argument(s) {sorted(used)} in "
+                        f"{kind} `{fn.name}` — data-dependent python control flow "
+                        f"breaks tracing (or re-traces per value)",
+                        "use jnp.where / lax.cond / lax.while_loop, or declare the "
+                        "argument static (static_argnames; kernels: keyword-only)",
+                    )
+            elif isinstance(node, ast.Call):
+                yield from self._check_call(mod, fn, node, traced, kind)
+            elif isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+                if node.id in mutable_globals and node.id not in traced:
+                    yield mod.finding(
+                        self.id,
+                        node,
+                        f"{kind} `{fn.name}` reads mutable module global "
+                        f"`{node.id}` — captured at trace time; later mutations "
+                        f"are invisible to the compiled function",
+                        "pass the value as an argument, or hoist the read to the "
+                        "host-side caller",
+                    )
+
+    def _check_call(self, mod: Module, fn, node: ast.Call, traced, kind):
+        name = astutil.call_name(node)
+        direct_on_traced = bool(
+            node.args
+            and isinstance(node.args[0], ast.Name)
+            and node.args[0].id in traced
+        )
+        if isinstance(node.func, ast.Name) and name in _CONCRETIZE_BUILTINS and direct_on_traced:
+            yield mod.finding(
+                self.id,
+                node,
+                f"`{name}()` on traced argument `{node.args[0].id}` in {kind} "
+                f"`{fn.name}` — concretizes the tracer",
+                "keep the value on device (jnp ops), or mark the argument static",
+            )
+            return
+        if isinstance(node.func, ast.Attribute):
+            recv = node.func.value
+            if (
+                node.func.attr in _CONCRETIZE_METHODS
+                and isinstance(recv, ast.Name)
+                and recv.id in traced
+            ):
+                yield mod.finding(
+                    self.id,
+                    node,
+                    f"`.{node.func.attr}()` on traced argument `{recv.id}` in "
+                    f"{kind} `{fn.name}` — forces a host sync / trace error",
+                    "return the array and reduce on the host, outside the jit",
+                )
+                return
+            # np.asarray(traced) — numpy pulling a tracer to host
+            if (
+                isinstance(recv, ast.Name)
+                and recv.id in ("np", "numpy")
+                and node.func.attr in _NP_CONCRETIZE
+                and direct_on_traced
+            ):
+                yield mod.finding(
+                    self.id,
+                    node,
+                    f"`np.{node.func.attr}()` on traced argument "
+                    f"`{node.args[0].id}` in {kind} `{fn.name}` — numpy cannot "
+                    f"consume tracers",
+                    "use jnp inside jit; convert on the host boundary instead",
+                )

@@ -1,7 +1,7 @@
 #!/usr/bin/env python
 """Docs consistency gate (the CI ``docs-check`` step).
 
-Two checks, both stdlib + repro only:
+Three checks, all stdlib + repro only:
 
 1. **Backend support matrix** — the table tagged
    ``<!-- docs-check:backend-matrix -->`` in ``docs/backends.md`` must
@@ -9,7 +9,12 @@ Two checks, both stdlib + repro only:
    one column per query backend (``repro.index.BACKENDS``), every cell
    non-empty.  Registering a new kind or backend without documenting it
    fails CI — the matrix can never silently rot.
-2. **Links and anchors** — every relative markdown link in README.md
+2. **Analysis rule catalogue** — the table tagged
+   ``<!-- docs-check:analysis-rules -->`` in ``docs/analysis.md`` must
+   have one row per registered rule in ``tools.analysis.ALL_RULES``
+   (matching id and title, non-empty description) — adding a rule
+   without documenting it fails CI, same deal as the backend matrix.
+3. **Links and anchors** — every relative markdown link in README.md
    and docs/*.md must resolve to an existing file, and ``#anchor``
    fragments must match a heading in the target (GitHub slugification).
 
@@ -26,16 +31,17 @@ from pathlib import Path
 
 ROOT = Path(__file__).resolve().parents[1]
 MATRIX_TAG = "<!-- docs-check:backend-matrix -->"
+RULES_TAG = "<!-- docs-check:analysis-rules -->"
 LINK_RE = re.compile(r"(?<!!)\[[^\]]*\]\(([^)\s]+)\)")
 HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
 
 
-def parse_matrix(md_text: str):
-    """The first markdown table after MATRIX_TAG: (columns, {row: cells})."""
+def parse_matrix(md_text: str, tag: str = MATRIX_TAG):
+    """The first markdown table after ``tag``: (columns, {row: cells})."""
     try:
-        tail = md_text.split(MATRIX_TAG, 1)[1]
+        tail = md_text.split(tag, 1)[1]
     except IndexError:
-        raise ValueError(f"docs/backends.md is missing the {MATRIX_TAG!r} tag")
+        raise ValueError(f"document is missing the {tag!r} tag")
     lines = [ln.strip() for ln in tail.splitlines()]
     rows = [ln for ln in lines if ln.startswith("|")]
     if len(rows) < 3:
@@ -69,6 +75,37 @@ def check_backend_matrix() -> list:
     for kind in rows:
         if kind not in registry.kinds():
             errors.append(f"matrix documents unregistered kind {kind!r}")
+    return errors
+
+
+def check_analysis_rules() -> list:
+    """docs/analysis.md's catalogue table rows == tools.analysis.ALL_RULES."""
+    if str(ROOT) not in sys.path:
+        sys.path.insert(0, str(ROOT))
+    from tools.analysis import rule_catalogue
+
+    errors = []
+    try:
+        columns, rows = parse_matrix((ROOT / "docs" / "analysis.md").read_text(), RULES_TAG)
+    except (OSError, ValueError) as e:
+        return [f"docs/analysis.md rule catalogue: {e}"]
+    registered = rule_catalogue()
+    for rid, title, _blurb in registered:
+        if rid not in rows:
+            errors.append(f"rule {rid!r} ({title}) has no row in the docs/analysis.md catalogue")
+            continue
+        cells = rows[rid]
+        doc_title = cells.get(columns[0], "") if columns else ""
+        if doc_title != title:
+            errors.append(
+                f"catalogue row {rid!r} titles the rule {doc_title!r}; the code says {title!r}"
+            )
+        if not all(cells.values()):
+            errors.append(f"catalogue row {rid!r} has an empty cell")
+    known = {rid for rid, _, _ in registered}
+    for rid in rows:
+        if rid not in known:
+            errors.append(f"catalogue documents unknown rule {rid!r}")
     return errors
 
 
@@ -109,14 +146,14 @@ def check_links() -> list:
 
 
 def main() -> int:
-    errors = check_backend_matrix() + check_links()
+    errors = check_backend_matrix() + check_analysis_rules() + check_links()
     for e in errors:
         print(f"docs-check: {e}", file=sys.stderr)
     if errors:
         print(f"docs-check: FAILED ({len(errors)} problem(s))", file=sys.stderr)
         return 1
     n_docs = len(doc_files())
-    print(f"docs-check: OK ({n_docs} files, matrix covers the registry)")
+    print(f"docs-check: OK ({n_docs} files, matrices cover the registries)")
     return 0
 
 
