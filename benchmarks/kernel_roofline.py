@@ -58,15 +58,15 @@ def run():
 
     # ---- fused RMI search ----
     m = build_rmi(table, b=4096)
-    kidx = ops.prepare_rmi_kernel_index(m, table)
+    _, ksteps_rmi = ops.rmi_kernel_arrays(m, table)
     # traffic per query: u(4) + q limbs(8) + leaf params(3 gathers ~24B)
     # + window gathers: steps x 8B limb pairs + result(4)
-    traffic = nq * (4 + 8 + 24 + kidx.steps * 8 + 4)
+    traffic = nq * (4 + 8 + 24 + ksteps_rmi * 8 + 4)
     t_mem = traffic / HBM_BW
     emit(
         "kernel/rmi_search/v5e_mem_bound",
         t_mem / nq * 1e6,
-        f"steps={kidx.steps};bytes/q={traffic / nq:.0f}",
+        f"steps={ksteps_rmi};bytes/q={traffic / nq:.0f}",
     )
     xla = jax.jit(lambda t, q: m.predecessor(t, q))
     dt = time_fn(xla, jnp.asarray(table), jnp.asarray(qs))

@@ -3,7 +3,7 @@
 ``PYTHONPATH=src python -m benchmarks.run [--only NAME]``
 prints ``name,us_per_call,derived`` CSV lines (common.emit).
 
-``--trend`` switches to the artifact pipeline: the three JSON-artifact
+``--trend`` switches to the artifact pipeline: the four JSON-artifact
 benchmarks run at the CI bench-smoke configuration (smoke scale, the
 same flags ``.github/workflows/ci.yml`` passes), artifacts land in
 ``--artifacts-dir``, and each is immediately diffed against the
@@ -61,7 +61,7 @@ def run_suites(only: str | None) -> None:
 
 
 def run_trend(artifacts_dir: Path, baselines: Path, tolerance: float) -> int:
-    """Generate the three JSON artifacts at smoke scale, then diff each
+    """Generate the four JSON artifacts at smoke scale, then diff each
     against the committed baselines.  Returns the number of failures."""
     # common.py reads SCALE/N_QUERIES from the environment at import
     # time, so pin the smoke config BEFORE any benchmark module import
@@ -69,7 +69,7 @@ def run_trend(artifacts_dir: Path, baselines: Path, tolerance: float) -> int:
     for k, v in SMOKE_ENV.items():
         os.environ.setdefault(k, v)
 
-    from . import kernel_roofline, pareto_frontier, sharded_lookup, trend
+    from . import kernel_roofline, pareto_frontier, sharded_lookup, trend, write_workload
 
     artifacts_dir.mkdir(parents=True, exist_ok=True)
     fails: list = []
@@ -104,13 +104,14 @@ def run_trend(artifacts_dir: Path, baselines: Path, tolerance: float) -> int:
 
     produce("pareto_frontier", _pareto)
     produce("kernel_roofline", kernel_roofline.run)
+    produce("write_workload", write_workload.run)
 
     for f in fails:
         print(f"BENCH TREND: {f}", file=sys.stderr)
     if fails:
         print(f"bench-trend: FAILED ({len(fails)} problem(s))", file=sys.stderr)
     else:
-        print(f"bench-trend: OK (3 artifacts vs {baselines})")
+        print(f"bench-trend: OK (4 artifacts vs {baselines})")
     return len(fails)
 
 

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import time
 
-from repro.core import build_index
+from repro.index import build
 from repro.core.sy_rmi import cdfshop_sweep, mine_ub, build_sy_rmi
 
 from .common import bench_tables, emit
@@ -28,7 +28,7 @@ def run(tiers=None):
             ("RS", {"eps": 32}, "RS"),
             ("PGM", {"eps": 64}, "PGM"),
         ]:
-            m = build_index(kind, bt.table, **params)
+            m = build(kind, bt.table, **params)
             times[label] = m.build_time / n
 
         t0 = time.perf_counter()

@@ -4,7 +4,8 @@ baselines (``benchmarks/baselines/``).
 The repo's bench trajectory starts here: every ``bench-smoke`` CI run
 produces the same JSON artifacts the baselines were generated from
 (``sharded_lookup.json``, ``pareto_frontier.json``,
-``kernel_roofline.json`` at smoke scale), and this tool diffs them:
+``kernel_roofline.json``, ``write_workload.json`` at smoke scale), and
+this tool diffs them:
 
 * **trace counts — exact.**  The one-trace-per-(kind, backend)
   invariant is the repo's core compile-cost contract; a silent retrace
@@ -21,7 +22,8 @@ produces the same JSON artifacts the baselines were generated from
 Run from the repo root after producing fresh artifacts::
 
     python -m benchmarks.trend --baselines benchmarks/baselines \\
-        sharded_lookup.json pareto_frontier.json kernel_roofline.json
+        sharded_lookup.json pareto_frontier.json kernel_roofline.json \\
+        write_workload.json
 
 Refreshing baselines after an *intentional* change (new sweep leg, new
 kernel, trace-count change) is one command per artifact — rerun the
@@ -137,6 +139,9 @@ _CHECKERS = {
     "sharded_lookup": _check_sharded_lookup,
     "pareto_frontier": _check_pareto_frontier,
     "kernel_roofline": _check_kernel_roofline,
+    # same shape/gates as kernel_roofline: metric-set equality, */exact
+    # pinned at 1.0, *compiles + trace counts exact, latency by ratio
+    "write_workload": _check_kernel_roofline,
 }
 
 

@@ -1,0 +1,184 @@
+"""Write-workload benchmark: the GAPPED ingest path end to end.
+
+Measures the mutation surface the updatable kind exposes (absorb ->
+overflow -> compact -> retune, docs/architecture.md): build cost of the
+gapped layout, absorb and overflow throughput of ``insert_batch``,
+``compact()`` cost, the read amplification a populated delta buffer
+adds to lookups, and the ``TunedTier`` drift path (which must absorb
+device-side with ZERO shard refreshes / restacks / re-tunes).
+
+Gates (enforced by benchmarks/trend.py against the committed baseline):
+
+* ``write/exact`` — post-insert and post-compact answers bit-match
+  ``searchsorted`` on the merged keyset (must stay 1.0);
+* ``write/compiles`` + trace counts — the insert/compact paths keep the
+  one-trace-per-(kind, op, pow2-bucket) invariant (exact);
+* everything else — generous latency-ratio trend.
+
+``python -m benchmarks.write_workload [--json OUT]`` prints the usual
+``name,us,derived`` CSV; ``--json`` also writes the trend artifact.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+import repro  # noqa: F401
+from repro import index as ix
+from repro.core.cdf import true_ranks
+from repro.data import distributions, tables
+from repro.tune.rebuild import RebuildPolicy, TunedTier
+
+from .common import N_QUERIES, SCALE, emit as _emit, time_fn
+
+_METRICS: dict = {}
+
+#: one pow2 insert bucket for every single-index leg (pins trace counts)
+BATCH = 2048
+
+
+def emit(name: str, value: float, derived: str = ""):
+    _METRICS[name] = float(value)
+    _emit(name, value, derived)
+
+
+def _gap_midpoints(table: np.ndarray) -> np.ndarray:
+    """Fresh candidate keys that follow the TABLE's density: midpoints
+    of adjacent-key gaps.  Uniform-in-keyspace drift would land almost
+    entirely in the distribution's sparse regions — a handful of leaves
+    — and the all-or-nothing absorb would divert every batch to the
+    delta, measuring only the overflow path."""
+    gaps = table[1:] - table[:-1]
+    return (table[:-1] + gaps // np.uint64(2))[gaps >= 2]
+
+
+def _fresh_keys(rng, table: np.ndarray, n: int) -> np.ndarray:
+    """Exactly n sorted fresh keys spread across the whole table."""
+    cand = _gap_midpoints(table)
+    assert len(cand) >= n, "table too dense for the drift batch"
+    return np.sort(rng.choice(cand, n, replace=False))
+
+
+def run():
+    _METRICS.clear()
+    ix.reset_trace_counts()
+    rng = np.random.default_rng(23)
+    n = max(1 << 14, int((1 << 18) * SCALE))
+    table = distributions.generate("osm", n, seed=11)
+    spec = dict(leaf_cap=64, fill=0.75, delta_cap=4096)
+
+    # ---- build: the gapped layout vs a plain static build ----------------
+    dt = time_fn(lambda: ix.build(ix.GappedSpec(**spec), table))
+    emit("write/build_us", dt * 1e6, f"n={n}")
+    g0 = ix.build(ix.GappedSpec(**spec), table)
+
+    # ---- absorb throughput: inserts into a gappy index -------------------
+    batch = _fresh_keys(rng, table, BATCH)
+    dt = time_fn(lambda: g0.insert_batch(batch))  # pure: same start state each rep
+    g1, rep = g0.insert_batch(batch)
+    emit(
+        "write/absorb_keys_per_s",
+        BATCH / dt,
+        f"absorbed={rep.absorbed};overflowed={rep.overflowed}",
+    )
+    assert rep.absorbed + rep.overflowed == BATCH and rep.duplicates == 0
+
+    # ---- overflow throughput: inserts into a zero-gap index --------------
+    full = ix.build(ix.GappedSpec(leaf_cap=64, fill=1.0, delta_cap=4096), table)
+    dt = time_fn(lambda: full.insert_batch(batch))
+    _, rep_f = full.insert_batch(batch)
+    emit("write/overflow_keys_per_s", BATCH / dt, f"overflowed={rep_f.overflowed}")
+    assert rep_f.overflowed == BATCH, "fill=1.0 leaves must divert wholesale"
+
+    # ---- read amplification of a populated delta -------------------------
+    # a clustered batch — TWO interior points per low-end gap — loads
+    # the first few leaves past their gap budget, so the all-or-nothing
+    # absorb diverts it to the delta: the state whose two-tier read
+    # path and compact() cost we want to measure
+    lo = table[: BATCH + 1]
+    lg = lo[1:] - lo[:-1]
+    clustered = np.unique(
+        np.concatenate(
+            [(lo[:-1] + lg // np.uint64(4))[lg >= 4], (lo[:-1] + lg - lg // np.uint64(4))[lg >= 4]]
+        )
+    )[:BATCH]
+    assert len(clustered) == BATCH, "low-end gaps too narrow for the clustered batch"
+    gd, rep_d = g0.insert_batch(clustered)
+    assert rep_d.delta_count > BATCH // 2, "clustered batch should mostly overflow"
+    merged_d = np.union1d(table, clustered)
+    queries = tables.make_queries(merged_d, N_QUERIES, seed=13)
+    want_d = true_ranks(merged_d, queries)
+    tj, qj = jnp.asarray(table), jnp.asarray(queries)
+    fresh_d = ix.build(ix.GappedSpec(**spec), merged_d)
+    dt_fresh = time_fn(lambda: fresh_d.lookup(tj, qj))
+    emit("write/lookup_fresh_us_per_q", dt_fresh / N_QUERIES * 1e6, f"nq={N_QUERIES}")
+    dt_post = time_fn(lambda: gd.lookup(tj, qj))
+    emit(
+        "write/lookup_post_insert_us_per_q",
+        dt_post / N_QUERIES * 1e6,
+        f"delta_count={rep_d.delta_count}",
+    )
+    emit("write/read_amp", dt_post / dt_fresh, "post-insert / fresh-build lookup")
+
+    # ---- compact: fold the delta back into rebalanced leaves -------------
+    dt = time_fn(lambda: gd.compact())  # pure: same start state each rep
+    gc = gd.compact()
+    emit("write/compact_us", dt * 1e6, f"drained={rep_d.delta_count}")
+
+    # ---- exactness gate: every claimed backend, all three states ---------
+    merged_1 = np.union1d(table, batch)
+    q1 = tables.make_queries(merged_1, N_QUERIES, seed=17)
+    want_1 = true_ranks(merged_1, q1)
+    exact = True
+    for state, qs, want in ((g1, jnp.asarray(q1), want_1), (gd, qj, want_d), (gc, qj, want_d)):
+        for be in state.backends():
+            got = np.asarray(state.lookup(tj, qs, backend=be))
+            exact &= bool((got == want).all())
+    emit("write/exact", float(exact), "post-insert + post-compact vs searchsorted")
+
+    # ---- TunedTier drift: absorb device-side, zero rebuilds --------------
+    tier = TunedTier(
+        table,
+        n_shards=4,
+        policy=RebuildPolicy(backend="xla"),
+        spec=ix.GappedSpec(**spec),
+    )
+    drift = _fresh_keys(rng, table, BATCH)
+    t0 = time.perf_counter()
+    tier.insert_batch(drift)  # InsertReport readback syncs the device
+    dt = time.perf_counter() - t0
+    c = tier.counters
+    assert c.absorbed + c.overflowed == BATCH
+    emit("write/tier_ingest_keys_per_s", BATCH / dt, f"absorbed={c.absorbed}")
+    emit(
+        "write/tier_rebuilds",
+        float(c.shard_refreshes + c.forced_restacks + c.retunes),
+        "must stay 0: GAPPED absorbs without rebuilding",
+    )
+
+    traces = {f"{k}/{b}": v for (k, b), v in sorted(ix.trace_counts().items())}
+    emit("write/compiles", float(sum(traces.values())), "total traces (exact gate)")
+    return {
+        "metrics": dict(_METRICS),
+        "trace_counts": traces,
+        "total_traces": sum(traces.values()),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default=None, help="write metrics + trace counts as JSON")
+    args = ap.parse_args()
+    report = run()
+    if args.json:
+        with open(args.json, "w") as f:
+            f.write(json.dumps(report, indent=2) + "\n")
+
+
+if __name__ == "__main__":
+    main()

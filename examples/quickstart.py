@@ -34,6 +34,7 @@ SPECS = [
     ix.PGMBicriteriaSpec(space_pct=0.05, a=1.0),
     ix.RSSpec(eps=32),
     ix.BTreeSpec(fanout=16),
+    ix.GappedSpec(leaf_cap=256, fill=0.75, delta_cap=4096),
 ]
 
 
@@ -72,6 +73,28 @@ def main():
     print(f"\nshared jitted lookup: {len(SPECS)} models -> {n_traces} traces")
     print("paper's headline: SY-RMI / bi-criteria PGM at 0.05-2% space beat")
     print("plain binary search; space — not accuracy — is the key to efficiency.")
+
+    # --- updatable index: insert_batch / compact (GAPPED only) ----------
+    # GAPPED is the one kind that takes writes after the build: keys are
+    # absorbed into leaf gaps in place, overflow goes to a sorted delta
+    # buffer, and compact() folds the delta back into the leaves.  Reads
+    # stay bit-exact against the merged keyset the whole time.
+    g = ix.build(ix.GappedSpec(leaf_cap=256, fill=0.75, delta_cap=4096), table)
+    rng = np.random.default_rng(7)
+    fresh = np.setdiff1d(
+        np.unique(rng.integers(1, int(table.max()), 3000, dtype=np.uint64)), table
+    )
+    g, report = g.insert_batch(fresh)
+    merged = np.union1d(table, fresh)
+    probe = tables.make_queries(merged, 10_000, seed=3)
+    assert (np.asarray(g.lookup(tj, probe)) == true_ranks(merged, probe)).all()
+    print(
+        f"\nGAPPED ingest: {report.requested} keys -> {report.absorbed} absorbed, "
+        f"{report.overflowed} to delta (fill {report.delta_fill:.0%})"
+    )
+    g = g.compact()  # fold the delta into rebalanced leaves, device-side
+    assert (np.asarray(g.lookup(tj, probe)) == true_ranks(merged, probe)).all()
+    print(f"after compact(): delta empty, still exact on {len(merged):,} merged keys")
 
     # --- budget-based selection: don't name an index, name a budget ------
     # repro.tune sweeps the registry-derived candidate grid (batched

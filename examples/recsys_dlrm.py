@@ -54,7 +54,7 @@ def main():
     vecs = lke.lookup(probe)
     print(f"[dlrm] LearnedKeyedEmbedding: {len(np.unique(raw_ids))} keys compressed into "
           f"{lke.table.shape} table; lookup {probe.shape} -> {vecs.shape} "
-          f"(last 4 are OOV -> shared row). RMI leaves: {lke.rmi.b}")
+          f"(last 4 are OOV -> shared row). RMI leaves: {lke.index.b}")
 
 
 if __name__ == "__main__":

@@ -12,18 +12,16 @@ Layering (post Index-API redesign):
   lookup per kind with ``xla`` / ``bbs`` / ``pallas`` / ``ref``
   backends.
 
-``KINDS`` / ``build_index`` remain importable from here as deprecated
-shims (``KINDS`` resolves lazily to ``repro.index.kinds()``).
+The pre-registry shims (``KINDS`` / ``build_index``) are gone: use
+``repro.index.kinds()`` and ``repro.index.build(spec, table)``.
 """
 
-from . import atomic, btree, builder, cdf, kbfs, pgm, radix_spline, rmi, search, sy_rmi
-from .builder import build_index, model_reduction_factor
-from .cdf import as_table, reduction_factor, true_ranks
+from . import atomic, btree, cdf, kbfs, pgm, radix_spline, rmi, search, sy_rmi
+from .cdf import as_table, model_reduction_factor, reduction_factor, true_ranks
 
 __all__ = [
     "atomic",
     "btree",
-    "builder",
     "cdf",
     "kbfs",
     "pgm",
@@ -31,18 +29,8 @@ __all__ = [
     "rmi",
     "search",
     "sy_rmi",
-    "KINDS",
-    "build_index",
     "model_reduction_factor",
     "as_table",
     "reduction_factor",
     "true_ranks",
 ]
-
-
-def __getattr__(name):
-    if name == "KINDS":
-        from repro import index
-
-        return index.kinds()
-    raise AttributeError(name)

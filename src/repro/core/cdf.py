@@ -57,6 +57,16 @@ def reduction_factor(interval_lo, interval_hi, n: int) -> float:
     return float(100.0 * (1.0 - lengths.mean() / float(n)))
 
 
+def model_reduction_factor(model, table_np: np.ndarray, queries_np: np.ndarray) -> float:
+    """Paper §2 empirical reduction factor of a model on a query batch.
+
+    ``model`` is anything with the shared ``intervals(table, queries)``
+    query surface — a :class:`repro.index.Index` or a core model object.
+    """
+    lo, hi = model.intervals(jnp.asarray(table_np), jnp.asarray(queries_np))
+    return reduction_factor(np.asarray(lo), np.asarray(hi), len(table_np))
+
+
 def verified_max_error(predictions: np.ndarray, ranks: np.ndarray) -> int:
     """Max |prediction - rank| over the table's own keys (build-time)."""
     return int(np.max(np.abs(np.round(predictions) - ranks)))

@@ -124,6 +124,24 @@ def bounded_bbs_branchy(table, q, lo, hi):
     return res
 
 
+def bounded_upper_bound_branchy(table, q, lo, count):
+    """Branchy counterpart of :func:`bounded_upper_bound` for prefix
+    windows: the number of keys ``<= q`` among ``table[lo : lo+count]``,
+    in ``[0, count]``, via the early-exit BBS loop.
+
+    The two-tier updatable read path (``GAPPED``) uses this on both its
+    gapped-leaf valid prefix and its delta-buffer valid prefix under
+    ``backend="bbs"``; ``count`` may be zero (empty leaf / empty delta),
+    which the clamp resolves to 0 regardless of what pad slots the probe
+    touched.  Assumes unique keys within the window (the equality early
+    exit identifies *the* match).
+    """
+    lo = lo.astype(jnp.int64)
+    count = count.astype(jnp.int64)
+    res = bounded_bbs_branchy(table, q, lo, lo + count - 1)
+    return jnp.clip(res - lo + 1, 0, count)
+
+
 # ---------------------------------------------------------------------------
 # Branchy binary search (BBS) — early-exit semantics via while_loop.
 # ---------------------------------------------------------------------------

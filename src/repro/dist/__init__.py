@@ -15,6 +15,8 @@ from .sharded_index import (
     DROPPED,
     NO_PRED,
     ShardedIndex,
+    compact_shard,
+    insert_into_shard,
     refresh_shard,
     reset_tier_metrics,
     sharded_lookup,
@@ -35,6 +37,8 @@ __all__ = [
     "DROPPED",
     "NO_PRED",
     "ShardedIndex",
+    "compact_shard",
+    "insert_into_shard",
     "refresh_shard",
     "reset_tier_metrics",
     "sharded_lookup",

@@ -229,12 +229,47 @@ def _lift_pgm_levels(idx: Index, target: int) -> Index:
     return Index(idx.kind, static, arrays, info=idx.info)
 
 
+def _pad_gapped_leaves(idx: Index, target_l: int) -> Index:
+    """Pad a GAPPED index to ``target_l`` leaves with *inert* rows:
+    max-key ``keys``/``fences``/``route`` entries and **zero** counts.
+
+    The generic :func:`_pad_to` edge-replicates integer leaves, which
+    would fabricate live keys in the padded rows (``counts`` must be 0
+    so the padded leaves hold nothing, absorb nothing at insert, and are
+    skipped by compaction's valid mask); max-key route entries keep the
+    model-guided owner search inside the real leaf range."""
+    L, cap = (int(s) for s in idx.arrays["keys"].shape)
+    if L == target_l:
+        return idx
+    if L > target_l:
+        raise ValueError(f"cannot shrink a GAPPED index from {L} to {target_l} leaves")
+    pad = target_l - L
+    arrays = dict(idx.arrays)
+    arrays["keys"] = jnp.concatenate(
+        [idx.arrays["keys"], jnp.full((pad, cap), _MAXKEY, dtype=jnp.uint64)]
+    )
+    arrays["counts"] = jnp.concatenate(
+        [idx.arrays["counts"], jnp.zeros((pad,), dtype=jnp.int64)]
+    )
+    arrays["fences"] = jnp.concatenate(
+        [idx.arrays["fences"], jnp.full((pad,), _MAXKEY, dtype=jnp.uint64)]
+    )
+    arrays["route"] = jnp.concatenate(
+        [idx.arrays["route"], jnp.full((pad,), _MAXKEY, dtype=jnp.uint64)]
+    )
+    return Index(idx.kind, idx.static, arrays, info=idx.info)
+
+
 def _harmonize(kind: str, per_shard: list) -> list:
     """Make per-shard indexes structurally stackable where the kind
-    allows it (PGM-shaped kinds: lift shallow shards to the max depth)."""
+    allows it (PGM-shaped kinds: lift shallow shards to the max depth;
+    GAPPED: pad shallow shards with inert zero-count leaves)."""
     if registry.entry(kind).query_key == "pgm":
         target = max(i.s("levels") for i in per_shard)
         return [_lift_pgm_levels(i, target) for i in per_shard]
+    if kind == "GAPPED":
+        target = max(int(i.arrays["keys"].shape[0]) for i in per_shard)
+        return [_pad_gapped_leaves(i, target) for i in per_shard]
     return per_shard
 
 
@@ -366,7 +401,14 @@ class ShardedIndex:
         locals_ = [table_np[bounds[i] : bounds[i + 1]] for i in range(n_shards)]
         m = _pow2ceil(max(len(t) for t in locals_))
         padded = [_pad_sorted_table(t, m) for t in locals_]
-        per_shard = [registry.entry(spec.kind).build(spec, p) for p in padded]
+        # self-contained kinds (GAPPED) own their keys: build them on the
+        # raw shard tables so the pad continuation never becomes a live
+        # key (an insert could otherwise land *above* a pad key and shift
+        # intermediate ranks); ragged leaf counts harmonize at stacking
+        from repro.index.impls import query_impl
+
+        build_tables = locals_ if query_impl(spec.kind).lookup is not None else padded
+        per_shard = [registry.entry(spec.kind).build(spec, p) for p in build_tables]
         stacked = stack_indexes(_harmonize(spec.kind, per_shard))
         counts = np.asarray([len(t) for t in locals_], dtype=np.int64)
         offsets = np.concatenate([[0], np.cumsum(counts)[:-1]]).astype(np.int64)
@@ -626,6 +668,13 @@ def sharded_lookup(
         raise ValueError(f"unknown mode {mode!r}; choose from {MODES}")
     if backend not in TIER_BACKENDS:
         raise ValueError(f"unknown tier backend {backend!r}; choose from {TIER_BACKENDS}")
+    from repro.index.impls import query_impl
+
+    kind_backends = query_impl(sidx.kind).backends
+    if backend not in kind_backends:
+        raise ValueError(
+            f"kind {sidx.kind!r} supports backends {kind_backends}, not {backend!r}"
+        )
     queries = jnp.asarray(queries)
     if queries.ndim != 1:
         raise ValueError("sharded_lookup expects a flat (B,) query vector")
@@ -730,6 +779,9 @@ def refresh_shard(sidx: ShardedIndex, shard: int, new_index: Index, new_table) -
                 f"shard's fence {next_fence}"
             )
     padded_tab = jnp.asarray(_pad_sorted_table(new_table, m))
+    if sidx.index.kind == "GAPPED":
+        # inert zero-count leaf rows, not the generic edge-replication pad
+        new_index = _pad_gapped_leaves(new_index, int(sidx.index.arrays["keys"].shape[1]))
     new_arrays = {}
     for k, v in sidx.index.arrays.items():
         if k not in new_index.arrays:
@@ -741,5 +793,90 @@ def refresh_shard(sidx: ShardedIndex, shard: int, new_index: Index, new_table) -
         padded_tab,
         jnp.asarray(new_table[0], jnp.uint64),
         jnp.asarray(len(new_table), POS_DTYPE),
+        shard,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Donated in-place shard mutation (updatable kinds: GAPPED)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("shard",), donate_argnums=(0,))
+def _install_mutated(sidx: ShardedIndex, new_arrays, new_fence, new_count, shard: int):
+    arrays = {k: v.at[shard].set(new_arrays[k]) for k, v in sidx.index.arrays.items()}
+    counts = sidx.counts.at[shard].set(new_count)
+    offsets = jnp.concatenate([jnp.zeros((1,), POS_DTYPE), jnp.cumsum(counts)[:-1]])
+    return ShardedIndex(
+        index=Index(sidx.index.kind, sidx.index.static, arrays),
+        tables=sidx.tables,
+        fences=sidx.fences.at[shard].set(new_fence),
+        counts=counts,
+        offsets=offsets,
+    )
+
+
+def insert_into_shard(sidx: ShardedIndex, shard: int, keys, *, auto_compact: bool = True):
+    """Absorb a key batch into one *updatable* shard without rebuilding.
+
+    The shard's sliced :class:`~repro.index.Index` view runs the kind's
+    registered ``insert_batch`` mutator (gap absorption first, delta
+    overflow second — see :mod:`repro.index.mutation`), and the mutated
+    leaves are swapped back with a donated ``.at[shard].set`` update that
+    also keeps ``counts``/``offsets``/``fences`` in sync with the
+    shard's *live* key set.  ``sidx.tables`` is left untouched: for
+    self-contained kinds the lookup ignores it, and it becomes a stale
+    build-time snapshot (use :func:`repro.index.updatable.live_keys` on
+    ``sidx.shard(s)`` to read the live keys).
+
+    Returns ``(new_sidx, InsertReport)``.  Raises ``TypeError`` for
+    static kinds and :class:`repro.index.mutation.NeedsRebuild` when the
+    shard's fixed capacity is exhausted — the caller's cue to rebuild
+    the shard via :func:`refresh_shard` (see
+    :meth:`repro.tune.rebuild.TunedTier.insert_batch`).
+    """
+    from repro.index import mutation
+
+    if not 0 <= shard < sidx.n_shards:
+        raise ValueError(f"shard {shard} out of range [0, {sidx.n_shards})")
+    keys = np.asarray(keys, dtype=np.uint64).reshape(-1)
+    if keys.size and shard + 1 < sidx.n_shards:
+        # fence discipline: a key at/beyond the next fence belongs to a
+        # later shard — absorbing it here would corrupt global ranks
+        next_fence = np.uint64(sidx.fences[shard + 1])
+        if keys.max() >= next_fence:
+            raise ValueError(
+                f"key {int(keys.max())} at/beyond shard {shard}'s next fence "
+                f"{int(next_fence)}: route keys with route_owners first"
+            )
+    new_local, report = mutation.insert_batch(
+        sidx.shard(shard), keys, auto_compact=auto_compact
+    )
+    new_count = int(sidx.counts[shard]) + report.absorbed + report.overflowed
+    new_sidx = _install_mutated(
+        sidx,
+        new_local.arrays,
+        new_local.arrays["fences"][0],
+        jnp.asarray(new_count, POS_DTYPE),
+        shard,
+    )
+    return new_sidx, report
+
+
+def compact_shard(sidx: ShardedIndex, shard: int) -> ShardedIndex:
+    """Fold one updatable shard's delta buffer into its leaves in place
+    (device-side compaction + donated swap; the live key set — and so
+    ``counts``/``offsets`` — is unchanged).  Raises ``NeedsRebuild``
+    when the live set no longer fits the shard's leaves."""
+    from repro.index import mutation
+
+    if not 0 <= shard < sidx.n_shards:
+        raise ValueError(f"shard {shard} out of range [0, {sidx.n_shards})")
+    new_local = mutation.compact(sidx.shard(shard))
+    return _install_mutated(
+        sidx,
+        new_local.arrays,
+        new_local.arrays["fences"][0],
+        sidx.counts[shard],
         shard,
     )

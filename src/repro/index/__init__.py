@@ -1,21 +1,21 @@
 """repro.index — the unified public API for learned static indexes.
 
-Design (this package replaces the per-class ad-hoc API in
-``repro.core.builder``):
+Design (the math lives in :mod:`repro.core`; this package owns the
+public API):
 
 * **Specs** (:mod:`~repro.index.specs`): one hashable frozen dataclass
   per kind describes *how to build* an index — nothing else.
 * **Registry** (:mod:`~repro.index.registry`): kinds register once, in
-  the paper's hierarchy order, via a decorator; ``kinds()`` replaces the
-  old ``KINDS`` tuple and the ``build_index`` string if-chain.
+  the paper's hierarchy order, via a decorator; ``kinds()`` is the only
+  source of truth for the kind list.
 * **Index** (:mod:`~repro.index.index`): the built artifact — a
   registered JAX pytree whose leaves are the model's flat arrays, so
   indexes can flow through jit/vmap/shard/donate and serialize via
   ``save``/``load`` npz round-trips.
 * **Backends**: ``lookup(table, queries, backend="xla"|"bbs"|"pallas"|
   "ref")`` — one shared jitted query path per kind; the Pallas fast
-  path's f32/i32 re-encoding is folded into build (no separate
-  ``prepare_rmi_kernel_index`` step).  Batched/tier lookups dispatch
+  path's f32/i32 re-encoding is folded into build.  Batched/tier
+  lookups dispatch
   through :func:`batched_pallas_impl` to the fused ``(table, q_tile)``-
   grid kernels — RMI, PGM and RS families each answer a whole batch
   with ONE ``pallas_call``; the model-free kinds use the batched k-ary
@@ -39,10 +39,12 @@ from .index import (
     reset_trace_counts,
     trace_counts,
 )
+from .mutation import InsertReport, NeedsRebuild, updatable_kinds
 from .registry import entry, kinds, spec_for
 from .specs import (
     AtomicSpec,
     BTreeSpec,
+    GappedSpec,
     IndexSpec,
     KOSpec,
     PGMBicriteriaSpec,
@@ -52,6 +54,7 @@ from .specs import (
     SYRMISpec,
 )
 from . import impls as _impls  # noqa: F401  — populates the registry
+from . import updatable as _updatable  # noqa: F401  — registers GAPPED
 
 __all__ = [
     "BACKENDS",
@@ -74,4 +77,8 @@ __all__ = [
     "PGMBicriteriaSpec",
     "RSSpec",
     "BTreeSpec",
+    "GappedSpec",
+    "InsertReport",
+    "NeedsRebuild",
+    "updatable_kinds",
 ]

@@ -94,14 +94,22 @@ def _scalar(x, dtype):
 class QueryImpl:
     intervals: Callable  # (index, table, q) -> (lo, hi)
     space_bytes: Callable  # (index) -> int
-    pallas: Callable  # (index, table, q) -> ranks
+    pallas: Callable = None  # (index, table, q) -> ranks
     pallas_batched: Callable = None  # (stacked index, tables, queries) -> ranks
     epi_key: str = "epi"
+    #: full lookup override — ``(index, table, q, backend) -> ranks``.
+    #: Kinds whose answer is not "interval + bounded search over ``table``"
+    #: (GAPPED: self-contained two-tier merge) set this; ``lookup_impl``
+    #: dispatches to it before any generic backend handling.
+    lookup: Callable = None
+    #: the backends this kind honestly supports (R4 probes the claim and
+    #: docs/backends.md documents it; ``Index.lookup`` enforces it)
+    backends: tuple = ("xla", "bbs", "pallas", "ref")
 
     def __post_init__(self):
         # kinds without a fused batched kernel answer tiers/batches with
         # the model-free batched k-ary kernel (exact, shared trace)
-        if self.pallas_batched is None:
+        if self.pallas_batched is None and "pallas" in self.backends:
             self.pallas_batched = _kary_pallas_batched
 
     def epi_steps(self, index: Index) -> int:

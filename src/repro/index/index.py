@@ -119,15 +119,44 @@ class Index:
 
         return impls.query_impl(self.kind).intervals(self, table, queries)
 
+    def backends(self) -> tuple:
+        """The backends this kind supports (subset of :data:`BACKENDS`)."""
+        from . import impls
+
+        return impls.query_impl(self.kind).backends
+
     def lookup(self, table, queries, *, backend: str = "xla"):
         """Predecessor ranks through the shared jitted query path."""
         if backend not in BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; choose from {BACKENDS}")
+        if backend not in self.backends():
+            raise ValueError(
+                f"kind {self.kind!r} supports backends {self.backends()}, not {backend!r}"
+            )
         return _lookup_jit(self, jnp.asarray(table), jnp.asarray(queries), backend)
 
     def predecessor(self, table, queries, *, branchy: bool = False, backend: str | None = None):
         r"""Predecessor ranks; ``branchy=True`` selects the \*-BBS epilogue."""
         return self.lookup(table, queries, backend=backend or ("bbs" if branchy else "xla"))
+
+    # -- mutation (updatable kinds only) ----------------------------------
+    def insert_batch(self, keys, *, auto_compact: bool = True):
+        """Insert a batch of keys (updatable kinds, e.g. ``GAPPED``).
+
+        Returns ``(new_index, InsertReport)`` — absorption into leaf gaps
+        first, overflow to the delta buffer, ``auto_compact`` folding the
+        delta into the leaves when it would overflow.  Static kinds raise
+        ``TypeError``; see :mod:`repro.index.mutation`.
+        """
+        from . import mutation
+
+        return mutation.insert_batch(self, keys, auto_compact=auto_compact)
+
+    def compact(self) -> "Index":
+        """Fold the delta buffer into the gapped leaves (device-side)."""
+        from . import mutation
+
+        return mutation.compact(self)
 
     # -- accounting / serialization --------------------------------------
     def space_bytes(self) -> int:
@@ -184,6 +213,10 @@ def lookup_impl(index: Index, table, queries, backend: str):
 
     impl = impls.query_impl(index.kind)
 
+    if impl.lookup is not None:
+        # self-contained kinds (GAPPED two-tier merge): the index owns its
+        # keys, so the answer ignores ``table`` on every backend
+        return impl.lookup(index, table, queries, backend)
     if backend == "ref":
         return jnp.searchsorted(table, queries, side="right").astype(POS_DTYPE) - 1
     if backend == "pallas":

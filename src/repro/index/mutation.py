@@ -1,0 +1,109 @@
+"""The redesigned mutation surface for updatable index kinds.
+
+PRs 2–3 grew the write path ad hoc: every ingest was buffered host-side
+and absorbed by a *full shard rebuild* (``refresh_shard`` after
+``TunedTier.ingest`` / ``maybe_rebuild``).  This module is the one
+coherent replacement — a small per-kind mutator registry behind two
+``Index`` methods, with one documented lifecycle::
+
+    absorb -> overflow -> compact -> retune
+
+* ``Index.insert_batch(keys)`` — keys are routed to their model-guided
+  leaf; leaves with room **absorb** them in place (gapped arrays), full
+  leaves **overflow** the keys into the sorted delta buffer, and the
+  returned :class:`InsertReport` carries a ``needs_compaction`` signal
+  once the delta fills past :data:`COMPACT_FILL`.
+* ``Index.compact()`` — folds the delta into rebalanced gapped leaves in
+  one device-side program (no host round-trip, no model refit; only the
+  root model's ε is re-measured against the new fences).
+* **retune** stays where it always was — the Pareto tuner
+  (:class:`repro.tune.rebuild.TunedTier`) — and now fires on *capacity
+  exhaustion* (:class:`NeedsRebuild`), not on every insert.
+
+Static kinds raise ``TypeError`` from both methods: updatability is a
+per-kind capability registered via :func:`register_mutator`, exactly
+like query impls are registered per kind.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict
+
+#: delta fill fraction past which ``InsertReport.needs_compaction`` is
+#: set — the tier's cue to schedule a compaction *between* batches
+COMPACT_FILL = 0.5
+
+
+class NeedsRebuild(RuntimeError):
+    """Raised when a mutation cannot fit the index's fixed capacity
+    (leaves + delta exhausted): the kind-level escape hatch that tells
+    the serving tier to rebuild/retune with a larger spec."""
+
+
+@dataclass(frozen=True)
+class InsertReport:
+    """Host-side summary of one ``insert_batch`` call."""
+
+    requested: int  #: keys passed in
+    absorbed: int  #: merged into leaf gaps in place
+    overflowed: int  #: diverted to the delta buffer
+    duplicates: int  #: already present (batch-internal or in the index)
+    delta_count: int  #: delta occupancy after the call
+    delta_cap: int  #: delta capacity
+    compacted: bool  #: True if an automatic compaction ran mid-call
+
+    @property
+    def delta_fill(self) -> float:
+        return self.delta_count / max(self.delta_cap, 1)
+
+    @property
+    def needs_compaction(self) -> bool:
+        return self.delta_fill >= COMPACT_FILL
+
+
+@dataclass(frozen=True)
+class Mutator:
+    """Per-kind mutation implementation.
+
+    ``insert_batch(index, keys, auto_compact=...) -> (Index, InsertReport)``
+    and ``compact(index) -> Index``; both may raise :class:`NeedsRebuild`.
+    """
+
+    insert_batch: Callable
+    compact: Callable
+
+
+MUTATORS: Dict[str, Mutator] = {}
+
+
+def register_mutator(kind: str, mutator: Mutator) -> None:
+    if kind in MUTATORS:
+        raise ValueError(f"mutator for kind {kind!r} registered twice")
+    MUTATORS[kind] = mutator
+
+
+def updatable_kinds() -> tuple:
+    """Kinds that support ``insert_batch``/``compact``."""
+    return tuple(MUTATORS)
+
+
+def _mutator(index) -> Mutator:
+    m = MUTATORS.get(index.kind)
+    if m is None:
+        raise TypeError(
+            f"index kind {index.kind!r} is static — only {updatable_kinds()} "
+            "support insert_batch/compact (rebuild instead, or route ingest "
+            "through an updatable kind such as GAPPED)"
+        )
+    return m
+
+
+def insert_batch(index, keys, *, auto_compact: bool = True):
+    """Dispatch ``insert_batch`` to the kind's registered mutator."""
+    return _mutator(index).insert_batch(index, keys, auto_compact=auto_compact)
+
+
+def compact(index):
+    """Dispatch ``compact`` to the kind's registered mutator."""
+    return _mutator(index).compact(index)

@@ -1,4 +1,4 @@
-"""Decorator-based kind registry — replaces the ``build_index`` if-chain.
+"""Decorator-based kind registry: one decorator per index kind.
 
 Each index kind registers once, in the paper's hierarchy order, binding:
 
@@ -9,7 +9,7 @@ Each index kind registers once, in the paper's hierarchy order, binding:
   two share one jitted query path)
 
 ``kinds()`` enumerates registered kinds in registration order, which is
-the paper's order — ``repro.core.KINDS`` is now an alias of it.
+the paper's order and is the only source of truth for the kind list.
 """
 
 from __future__ import annotations

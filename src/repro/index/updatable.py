@@ -1,0 +1,458 @@
+"""GAPPED — the updatable learned index kind (ALEX-style gapped arrays
+plus a delta-merge buffer), registered like every static kind.
+
+Encoding (all flat array leaves, one registered pytree):
+
+* ``keys``   — ``(n_leaves, leaf_cap)`` uint64 rows.  Row ``l`` holds its
+  leaf's ``counts[l]`` live keys sorted in a *valid prefix*; the unused
+  tail is the strictly-increasing pad-with-continuation idiom the static
+  kinds already use for stacking (last key + 1, + 2, ... saturating at
+  the max-key sentinel).  The gaps are the insertion slots.
+* ``counts`` / ``fences`` / ``route`` — per-leaf occupancy, per-leaf
+  first key, and the routing array ``fences[1:]`` padded with max-key.
+* ``delta`` / ``delta_count`` — a small sorted overflow buffer (max-key
+  padded valid prefix) merged into every lookup.
+* root model — one monotone linear model on the normalised key
+  (``root_slope``/``root_icept``/``kmin``/``inv_span``) predicts the
+  owning leaf; ``root_eps`` is its measured error bound, re-measured
+  (not refitted) device-side at compaction.
+
+Read path (two-tier): route the query to its leaf, bounded-search the
+leaf's valid prefix, add the leaf's global offset -> the query's rank in
+the main tier; bounded-search the delta prefix -> its rank in the delta.
+The main and delta key sets are disjoint (inserts dedupe), so the
+predecessor in the merged set is the *sum of the two upper bounds* minus
+one — the rank-space form of "take the max of the two per-tier
+predecessor keys".  ``NO_PRED`` (-1) falls out exactly as in the static
+kinds, and the tier keeps mapping capacity drops to ``DROPPED``.
+
+Because the index owns its keys, lookups answer from the leaves + delta
+and *ignore the table argument* — after ``insert_batch`` the build table
+is a stale snapshot.  Backends: ``xla`` (branch-free), ``bbs``
+(early-exit epilogue), ``ref`` (materialise + searchsorted oracle).
+There is deliberately **no pallas claim yet** — the per-kind
+``QueryImpl.backends`` tuple keeps docs/backends.md and the R4 analyzer
+probe honest.
+
+The max-key value ``2**64 - 1`` is reserved as the pad/route sentinel
+and cannot be stored as a live key.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import search
+from repro.core.cdf import POS_DTYPE
+
+from . import impls, mutation
+from .impls import _MAXKEY, _bucket_steps, _pow2ceil, _scalar, QueryImpl
+from .index import Index, count_trace
+from .specs import GappedSpec
+
+
+# ---------------------------------------------------------------------------
+# Routing + two-tier read path
+# ---------------------------------------------------------------------------
+
+
+def _route(index: Index, q):
+    """Model-guided owner leaf: root prediction, then a bounded search of
+    the ``route`` fences within the measured ±``root_eps`` window."""
+    a = index.arrays
+    L = a["route"].shape[0]
+    u = jnp.clip((q.astype(jnp.float64) - a["kmin"]) * a["inv_span"], 0.0, 1.0)
+    pred = jnp.clip(jnp.floor(a["root_slope"] * u + a["root_icept"]), -4.0e15, 4.0e15)
+    pred = jnp.clip(pred.astype(POS_DTYPE), 0, L - 1)
+    eps = a["root_eps"]
+    lo = jnp.clip(pred - eps, 0, L - 1)
+    hi = jnp.clip(pred + eps, 0, L - 1)
+    ub = search.bounded_upper_bound(a["route"], q, lo, hi - lo + 1, steps=index.s("ksteps"))
+    return jnp.clip(ub, 0, L - 1)
+
+
+def _main_ub(index: Index, q, *, branchy: bool):
+    """Number of live main-tier keys ``<= q`` (global rank upper bound)."""
+    a = index.arrays
+    keys = a["keys"]
+    L, cap = keys.shape
+    counts = a["counts"]
+    owner = _route(index, q)
+    base = owner * cap
+    cnt = jnp.take(counts, owner)
+    flat = keys.reshape(-1)
+    if branchy:
+        ub_in = search.bounded_upper_bound_branchy(flat, q, base, cnt)
+    else:
+        ub_in = search.bounded_upper_bound(flat, q, base, cnt, steps=index.s("epi")) - base
+    offsets = jnp.cumsum(counts) - counts
+    return jnp.take(offsets, owner) + ub_in
+
+
+def _delta_ub(index: Index, q, *, branchy: bool):
+    """Number of delta-buffer keys ``<= q``."""
+    a = index.arrays
+    zero = jnp.zeros(q.shape, dtype=jnp.int64)
+    cnt = jnp.broadcast_to(a["delta_count"], q.shape)
+    if branchy:
+        return search.bounded_upper_bound_branchy(a["delta"], q, zero, cnt)
+    return search.bounded_upper_bound(a["delta"], q, zero, cnt, steps=index.s("epi"))
+
+
+def _materialize(index: Index):
+    """(sorted merged keys padded with max-key, live total) — traceable."""
+    a = index.arrays
+    keys = a["keys"]
+    cap = keys.shape[1]
+    pos = jnp.arange(cap)
+    flat = jnp.where(pos[None, :] < a["counts"][:, None], keys, _MAXKEY).reshape(-1)
+    dc = a["delta_count"]
+    dvals = jnp.where(jnp.arange(a["delta"].shape[0]) < dc, a["delta"], _MAXKEY)
+    merged = jnp.sort(jnp.concatenate([flat, dvals]))
+    return merged, jnp.sum(a["counts"]) + dc
+
+
+def live_keys(index: Index) -> np.ndarray:
+    """Host-side sorted live key set (main tier + delta merged)."""
+    merged, total = jax.jit(_materialize)(index)
+    return np.asarray(merged)[: int(total)]
+
+
+def _gapped_lookup(index: Index, table, q, backend: str):
+    if backend == "ref":
+        merged, total = _materialize(index)
+        ub = jnp.minimum(jnp.searchsorted(merged, q, side="right"), total)
+        return (ub - 1).astype(POS_DTYPE)
+    branchy = backend == "bbs"
+    ub = _main_ub(index, q, branchy=branchy) + _delta_ub(index, q, branchy=branchy)
+    return (ub - 1).astype(POS_DTYPE)
+
+
+def _gapped_intervals(index: Index, table, q):
+    # the two-tier merge is exact, so the "interval" is the answer itself
+    r = _main_ub(index, q, branchy=False) + _delta_ub(index, q, branchy=False) - 1
+    return r, r
+
+
+def _gapped_space(index: Index) -> int:
+    a = index.arrays
+    live = int(np.asarray(jnp.sum(a["counts"]))) + int(np.asarray(a["delta_count"]))
+    meta = sum(
+        a[k].nbytes
+        for k in (
+            "counts",
+            "fences",
+            "route",
+            "delta_count",
+            "kmin",
+            "inv_span",
+            "root_slope",
+            "root_icept",
+            "root_eps",
+        )
+    )
+    return live * a["keys"].dtype.itemsize + meta
+
+
+GAPPED_IMPL = QueryImpl(
+    intervals=_gapped_intervals,
+    space_bytes=_gapped_space,
+    lookup=_gapped_lookup,
+    backends=("xla", "bbs", "ref"),
+)
+
+
+# ---------------------------------------------------------------------------
+# Build
+# ---------------------------------------------------------------------------
+
+
+def _build_gapped_index(spec: GappedSpec, table_np: np.ndarray) -> Index:
+    t0 = time.perf_counter()
+    table = np.asarray(table_np, dtype=np.uint64)
+    n = int(table.shape[0])
+    if n == 0:
+        raise ValueError("GAPPED requires a non-empty table")
+    cap = int(spec.leaf_cap)
+    per = max(1, min(cap, int(round(cap * float(spec.fill)))))
+    L = _pow2ceil(-(-n // per))
+    dcap = _pow2ceil(int(spec.delta_cap))
+
+    base, rem = divmod(n, L)
+    counts = (base + (np.arange(L) < rem)).astype(np.int64)
+    bounds = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
+    fences = table[np.minimum(bounds[:-1], n - 1)]
+    route = np.concatenate([fences[1:], [_MAXKEY]]).astype(np.uint64)
+
+    pos = np.arange(cap)
+    valid = pos[None, :] < counts[:, None]
+    vals = table[np.minimum(bounds[:-1, None] + pos[None, :], n - 1)]
+    last = table[np.minimum(np.maximum(bounds[1:] - 1, 0), n - 1)]
+    lastv = np.where(counts > 0, last, fences).astype(np.uint64)
+    over = np.maximum(pos[None, :] - counts[:, None] + 1, 0).astype(np.uint64)
+    pad = lastv[:, None] + np.minimum(over, (_MAXKEY - lastv)[:, None])
+    rows = np.where(valid, vals, pad).astype(np.uint64)
+
+    # root model: least-squares leaf id over the normalised fence key,
+    # slope clamped monotone so the measured ε bounds *every* query
+    kmin = np.float64(table[0])
+    span = np.float64(table[-1]) - kmin
+    inv_span = np.float64(1.0 / span) if span > 0 else np.float64(0.0)
+    uf = np.clip((fences.astype(np.float64) - kmin) * inv_span, 0.0, 1.0)
+    lids = np.arange(L, dtype=np.float64)
+    var = float(np.mean((uf - uf.mean()) ** 2))
+    slope = float(np.mean((uf - uf.mean()) * (lids - lids.mean())) / var) if var > 0 else 0.0
+    slope = max(slope, 0.0)
+    icept = float(lids.mean() - slope * uf.mean())
+    pred = np.clip(np.floor(slope * uf + icept), 0, L - 1).astype(np.int64)
+    eps = int(np.max(np.abs(pred - np.arange(L)))) + 2
+
+    arrays = {
+        "keys": jnp.asarray(rows),
+        "counts": jnp.asarray(counts),
+        "fences": jnp.asarray(fences),
+        "route": jnp.asarray(route),
+        "delta": jnp.full((dcap,), _MAXKEY, dtype=jnp.uint64),
+        "delta_count": _scalar(0, jnp.int64),
+        "kmin": _scalar(kmin, jnp.float64),
+        "inv_span": _scalar(inv_span, jnp.float64),
+        "root_slope": _scalar(slope, jnp.float64),
+        "root_icept": _scalar(icept, jnp.float64),
+        "root_eps": _scalar(eps, jnp.int64),
+    }
+    static = (("epi", _bucket_steps(max(cap, dcap))), ("ksteps", _bucket_steps(L)))
+    info = {
+        "name": f"GAPPED(cap={cap},fill={spec.fill},delta={dcap})",
+        "build_time": time.perf_counter() - t0,
+        "n": n,
+        "n_leaves": L,
+        "leaf_cap": cap,
+        "delta_cap": dcap,
+        "root_eps": eps,
+    }
+    return Index(spec.kind, static, arrays, info)
+
+
+# ---------------------------------------------------------------------------
+# Mutation: insert_batch (absorb -> overflow) and compact (delta -> leaves)
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def _insert_jit(index: Index, batch, bcount):
+    """One insert step: dedupe the sorted batch against itself and the
+    index, absorb per-leaf where gaps suffice (all-or-nothing per leaf),
+    divert the rest to the delta.  Touches at most ``len(batch)`` leaf
+    rows — cost is O(batch · leaf_cap), independent of the table size."""
+    count_trace("GAPPED", "insert")
+    a = index.arrays
+    keys = a["keys"]
+    L, cap = keys.shape
+    counts = a["counts"]
+    delta = a["delta"]
+    dcap = delta.shape[0]
+    dc = a["delta_count"]
+    Bp = batch.shape[0]
+
+    b = jnp.sort(batch)  # max-key pads sort to the tail
+    i = jnp.arange(Bp)
+    in_batch = i < bcount
+    dup_adj = jnp.concatenate([jnp.zeros((1,), bool), b[1:] == b[:-1]])
+
+    flat = keys.reshape(-1)
+    owner = _route(index, b)
+    base = owner * cap
+    cnt = jnp.take(counts, owner)
+    ub_in = search.bounded_upper_bound(flat, b, base, cnt, steps=index.s("epi")) - base
+    hit_main = (ub_in > 0) & (jnp.take(flat, base + ub_in - 1, mode="clip") == b)
+    zero = jnp.zeros(b.shape, dtype=jnp.int64)
+    ub_d = search.bounded_upper_bound(
+        delta, b, zero, jnp.broadcast_to(dc, b.shape), steps=index.s("epi")
+    )
+    hit_delta = (ub_d > 0) & (jnp.take(delta, ub_d - 1, mode="clip") == b)
+
+    fresh = in_batch & ~dup_adj & ~hit_main & ~hit_delta
+    hist = jax.ops.segment_sum(fresh.astype(jnp.int64), owner, num_segments=L)
+    absorb_leaf = hist <= (cap - counts)
+    to_main = fresh & jnp.take(absorb_leaf, owner)
+    to_delta = fresh & ~jnp.take(absorb_leaf, owner)
+
+    # -- absorb: merge only the touched leaf rows (<= Bp of them) --------
+    touched = absorb_leaf & (hist > 0)
+    aff = jnp.nonzero(touched, size=Bp, fill_value=L)[0]  # sorted ascending
+    aff_c = jnp.minimum(aff, L - 1)
+    arows = jnp.take(keys, aff_c, axis=0)
+    acnt = jnp.take(counts, aff_c)
+    pos = jnp.arange(cap)
+    arows_masked = jnp.where(pos[None, :] < acnt[:, None], arows, _MAXKEY)
+    slot = jnp.searchsorted(aff, owner)  # row of each key's leaf in aff
+    newmat = jnp.full((Bp, Bp), _MAXKEY, dtype=jnp.uint64)
+    newmat = newmat.at[slot, i].set(jnp.where(to_main, b, _MAXKEY), mode="drop")
+    merged = jnp.sort(jnp.concatenate([arows_masked, newmat], axis=1), axis=1)[:, :cap]
+    new_acnt = acnt + jnp.take(hist, aff_c)
+    last = jnp.take_along_axis(merged, jnp.clip(new_acnt - 1, 0, cap - 1)[:, None], axis=1)[:, 0]
+    lastv = jnp.where(new_acnt > 0, last, jnp.take(a["fences"], aff_c))
+    over = jnp.clip(pos[None, :] - new_acnt[:, None] + 1, 0, None).astype(jnp.uint64)
+    pad = lastv[:, None] + jnp.minimum(over, (_MAXKEY - lastv)[:, None])
+    newrows = jnp.where(pos[None, :] < new_acnt[:, None], merged, pad)
+    new_keys = keys.at[aff].set(newrows, mode="drop")
+    new_counts = counts + jnp.where(absorb_leaf, hist, 0)
+
+    # -- overflow: merge diverted keys into the sorted delta prefix ------
+    dvals = jnp.where(jnp.arange(dcap) < dc, delta, _MAXKEY)
+    dnew = jnp.where(to_delta, b, _MAXKEY)
+    new_dc = dc + jnp.sum(to_delta)
+    new_delta = jnp.sort(jnp.concatenate([dvals, dnew]))[:dcap]
+    ok = new_dc <= dcap
+
+    # fences[0] tracks the live minimum (metadata; routing uses route)
+    first = jnp.where(bcount > 0, jnp.minimum(a["fences"][0], b[0]), a["fences"][0])
+    new_fences = a["fences"].at[0].set(first)
+
+    arrays = dict(a)
+    arrays.update(
+        keys=new_keys,
+        counts=new_counts,
+        fences=new_fences,
+        delta=new_delta,
+        delta_count=new_dc,
+    )
+    stats = {
+        "absorbed": jnp.sum(to_main),
+        "overflowed": jnp.sum(to_delta),
+        "duplicates": jnp.sum(in_batch & (dup_adj | hit_main | hit_delta)),
+        "new_dc": new_dc,
+        "ok": ok,
+    }
+    return Index(index.kind, index.static, arrays), stats
+
+
+@jax.jit
+def _compact_jit(index: Index):
+    """Fold delta into rebalanced leaves: one device-side sort + gather.
+    Re-measures ``root_eps`` against the new fences with the query path's
+    exact arithmetic; the root model itself is not refitted."""
+    count_trace("GAPPED", "compact")
+    a = index.arrays
+    keys = a["keys"]
+    L, cap = keys.shape
+    counts = a["counts"]
+    dcap = a["delta"].shape[0]
+    dc = a["delta_count"]
+    N = L * cap + dcap
+
+    pos = jnp.arange(cap)
+    flat = jnp.where(pos[None, :] < counts[:, None], keys, _MAXKEY).reshape(-1)
+    dvals = jnp.where(jnp.arange(dcap) < dc, a["delta"], _MAXKEY)
+    merged = jnp.sort(jnp.concatenate([flat, dvals]))
+    total = jnp.sum(counts) + dc
+    ok = total <= L * cap
+
+    ncnt = total // L + (jnp.arange(L) < total % L)
+    gstart = jnp.cumsum(ncnt) - ncnt
+    vals = jnp.take(merged, gstart[:, None] + pos[None, :], mode="clip")
+    last = jnp.take(merged, jnp.clip(gstart + ncnt - 1, 0, N - 1))
+    over = jnp.clip(pos[None, :] - ncnt[:, None] + 1, 0, None).astype(jnp.uint64)
+    pad = last[:, None] + jnp.minimum(over, (_MAXKEY - last)[:, None])
+    nkeys = jnp.where(pos[None, :] < ncnt[:, None], vals, pad)
+    nfences = nkeys[:, 0]
+    nroute = jnp.concatenate([nfences[1:], jnp.full((1,), _MAXKEY, dtype=jnp.uint64)])
+
+    uf = jnp.clip((nfences.astype(jnp.float64) - a["kmin"]) * a["inv_span"], 0.0, 1.0)
+    pred = jnp.clip(jnp.floor(a["root_slope"] * uf + a["root_icept"]), -4.0e15, 4.0e15)
+    pred = jnp.clip(pred.astype(POS_DTYPE), 0, L - 1)
+    neps = jnp.max(jnp.abs(pred - jnp.arange(L))) + 2
+
+    arrays = dict(a)
+    arrays.update(
+        keys=nkeys,
+        counts=ncnt,
+        fences=nfences,
+        route=nroute,
+        delta=jnp.full((dcap,), _MAXKEY, dtype=jnp.uint64),
+        delta_count=jnp.zeros((), dtype=jnp.int64),
+        root_eps=neps.astype(jnp.int64),
+    )
+    return Index(index.kind, index.static, arrays), ok
+
+
+def gapped_compact(index: Index) -> Index:
+    new_index, ok = _compact_jit(index)
+    if not bool(ok):
+        live = int(np.asarray(jnp.sum(index.arrays["counts"]))) + int(
+            np.asarray(index.arrays["delta_count"])
+        )
+        L, cap = index.arrays["keys"].shape
+        raise mutation.NeedsRebuild(
+            f"GAPPED capacity exhausted: {live} live keys exceed "
+            f"{L} leaves x {cap} slots — rebuild with a larger spec"
+        )
+    return new_index
+
+
+def gapped_insert_batch(index: Index, insert_keys, *, auto_compact: bool = True):
+    arr = np.asarray(insert_keys, dtype=np.uint64).reshape(-1)
+    nb = int(arr.size)
+    dcap = int(index.arrays["delta"].shape[0])
+    if nb == 0:
+        dc = int(np.asarray(index.arrays["delta_count"]))
+        return index, mutation.InsertReport(0, 0, 0, 0, dc, dcap, False)
+    # pow2-bucketed batch padding: one insert trace per batch-size bucket
+    batch = np.full(_pow2ceil(nb), _MAXKEY, dtype=np.uint64)
+    batch[:nb] = arr
+    batch = jnp.asarray(batch)
+
+    compacted = False
+    new_index, st = _insert_jit(index, batch, nb)
+    if not bool(st["ok"]):
+        if not auto_compact:
+            raise mutation.NeedsRebuild(
+                f"insert_batch would overflow the delta buffer "
+                f"({int(st['new_dc'])} > {dcap}) — compact() first or pass "
+                "auto_compact=True"
+            )
+        index = gapped_compact(index)  # raises NeedsRebuild when full
+        compacted = True
+        new_index, st = _insert_jit(index, batch, nb)
+        if not bool(st["ok"]):
+            raise mutation.NeedsRebuild(
+                f"batch of {nb} overflows the delta buffer (cap {dcap}) even "
+                "after compaction — rebuild with a larger spec or split the batch"
+            )
+    report = mutation.InsertReport(
+        requested=nb,
+        absorbed=int(st["absorbed"]),
+        overflowed=int(st["overflowed"]),
+        duplicates=int(st["duplicates"]),
+        delta_count=int(st["new_dc"]),
+        delta_cap=dcap,
+        compacted=compacted,
+    )
+    return new_index, report
+
+
+# ---------------------------------------------------------------------------
+# Registration — one decorator call enrols GAPPED everywhere (spec_for,
+# default_grid, Pareto tuner, stack_indexes, npz save/load), exactly as
+# for the static kinds; the mutator registration adds the write path.
+# ---------------------------------------------------------------------------
+
+impls.QUERY_IMPLS["gapped"] = GAPPED_IMPL
+impls._reg(
+    "GAPPED",
+    GappedSpec,
+    "gapped",
+    _build_gapped_index,
+    lambda **p: GappedSpec(
+        leaf_cap=p.get("leaf_cap", 256),
+        fill=p.get("fill", 0.75),
+        delta_cap=p.get("delta_cap", 1024),
+    ),
+)
+mutation.register_mutator(
+    "GAPPED", mutation.Mutator(insert_batch=gapped_insert_batch, compact=gapped_compact)
+)

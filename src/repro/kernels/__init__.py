@@ -17,19 +17,15 @@ re-encodings (``rmi_kernel_arrays`` / ``pgm_kernel_arrays`` /
 ``rs_kernel_arrays``) are folded into ``Index`` build as the
 ``k_*``/``pk_*``/``rk_*`` leaves, ``Index.lookup(..., backend="pallas")``
 dispatches the fused kernels, and ``repro.index.batched_pallas_impl``
-dispatches the batched grids for tiers/batches.  The old
-``prepare_rmi_kernel_index`` / ``fused_rmi_search`` pair remains as a
-deprecated shim.
+dispatches the batched grids for tiers/batches.
 """
 
 from . import ops, ref
 from .ops import (
     decode_attention,
     embedding_bag,
-    fused_rmi_search,
     kary_search,
     pgm_kernel_arrays,
-    prepare_rmi_kernel_index,
     rmi_kernel_arrays,
     rs_kernel_arrays,
     split_u64,

@@ -15,7 +15,6 @@ at stack time, so one re-encoding per table covers every dispatch path.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
 
 import numpy as np
 import jax
@@ -23,7 +22,7 @@ import jax.numpy as jnp
 
 from repro.core.cdf import ceil_log2
 
-from .rmi_search import fused_rmi_search_pallas, DEFAULT_TILE_Q
+from .rmi_search import DEFAULT_TILE_Q
 from .kary_search import kary_search_pallas, LANES
 from .embedding_bag import embedding_bag_pallas
 from .decode_attention import decode_attention_pallas
@@ -54,25 +53,6 @@ def _pad_to(x, mult, fill):
 # ---------------------------------------------------------------------------
 
 
-@dataclass
-class RMIKernelIndex:
-    """f32/u32 re-encoding of a core RMIModel for the TPU kernel."""
-
-    table_hi: jnp.ndarray
-    table_lo: jnp.ndarray
-    root_coef: jnp.ndarray  # (4,) f32
-    leaf_slope: jnp.ndarray  # f32
-    leaf_icept: jnp.ndarray  # f32
-    leaf_eps: jnp.ndarray  # i32
-    leaf_rlo: jnp.ndarray  # i32
-    leaf_rhi: jnp.ndarray  # i32
-    kmin: np.float64
-    inv_span: np.float64
-    steps: int
-    n: int
-    b: int
-
-
 def rmi_kernel_arrays(model, table_np: np.ndarray):
     """Re-encode a core.rmi.RMIModel in kernel precision, re-verifying ε.
 
@@ -82,7 +62,7 @@ def rmi_kernel_arrays(model, table_np: np.ndarray):
     ``arrays`` holds the f32/i32 leaf parameters (``root``, ``slope``,
     ``icept``, ``eps``, ``rlo``, ``rhi``) — this is what
     :class:`repro.index.Index` folds into its pytree leaves at build
-    time, replacing the old separate ``prepare_rmi_kernel_index`` step.
+    time; ``Index.lookup(..., backend="pallas")`` runs the fused kernel.
     """
     n = model.n
     b = model.b
@@ -254,57 +234,6 @@ def rs_kernel_arrays(model, table_np: np.ndarray):
     steps = ceil_log2(min(2 * eps + 3, max(n, 2)))
     arrays = {"u0": u0, "slope": slope, "eps": eps, "kmin": kmin, "inv_span": inv_span}
     return arrays, steps
-
-
-def prepare_rmi_kernel_index(model, table_np: np.ndarray) -> RMIKernelIndex:
-    """DEPRECATED shim — build an :class:`repro.index.Index` instead; the
-    kernel re-encoding now happens at Index construction and the fused
-    kernel runs via ``Index.lookup(..., backend="pallas")``."""
-    arrays, steps = rmi_kernel_arrays(model, table_np)
-    thi, tlo = split_u64(table_np)
-    return RMIKernelIndex(
-        table_hi=thi,
-        table_lo=tlo,
-        root_coef=jnp.asarray(arrays["root"]),
-        leaf_slope=jnp.asarray(arrays["slope"]),
-        leaf_icept=jnp.asarray(arrays["icept"]),
-        leaf_eps=jnp.asarray(arrays["eps"]),
-        leaf_rlo=jnp.asarray(arrays["rlo"]),
-        leaf_rhi=jnp.asarray(arrays["rhi"]),
-        kmin=np.float64(np.asarray(model.kmin)),
-        inv_span=np.float64(np.asarray(model.inv_span)),
-        steps=steps,
-        n=model.n,
-        b=model.b,
-    )
-
-
-def fused_rmi_search(kidx: RMIKernelIndex, queries_u64, *, tile_q: int = DEFAULT_TILE_Q):
-    """Predecessor ranks via the fused Pallas kernel (auto-padded)."""
-    q = jnp.asarray(queries_u64, dtype=jnp.uint64)
-    u = (q.astype(jnp.float64) - kidx.kmin) * kidx.inv_span
-    u = jnp.clip(u, 0.0, 1.0).astype(jnp.float32)
-    qhi, qlo = split_u64(q)
-    u, nq = _pad_to(u, tile_q, 0.0)
-    qhi, _ = _pad_to(qhi, tile_q, 0)
-    qlo, _ = _pad_to(qlo, tile_q, 0)
-    out = fused_rmi_search_pallas(
-        u,
-        qhi,
-        qlo,
-        kidx.table_hi,
-        kidx.table_lo,
-        kidx.root_coef,
-        kidx.leaf_slope,
-        kidx.leaf_icept,
-        kidx.leaf_eps,
-        kidx.leaf_rlo,
-        kidx.leaf_rhi,
-        steps=kidx.steps,
-        tile_q=tile_q,
-        interpret=_interpret(),
-    )
-    return out[:nq]
 
 
 # ---------------------------------------------------------------------------

@@ -24,8 +24,10 @@ TPU adaptations, mirroring :mod:`rmi_search`:
   this f32 arithmetic and widens ε accordingly
   (:func:`repro.kernels.ops.pgm_kernel_arrays`); f32 rounding is
   monotone, so the widened window stays a guarantee for queries between
-  keys, and the exact ``[r0-1, r1-1]`` fence clamp absorbs
-  gap-extrapolation blow-ups exactly as in the f64 path;
+  keys.  The predicted *center* is clamped into the exact
+  ``[r0-1, r1-1]`` fence range before the ±ε widening, so
+  gap-extrapolation and u-resolution blow-ups degrade to a full-segment
+  window instead of collapsing it to one fence slot;
 * the level directories (``off``/``off_r``/``sizes``) are tiny i32
   arrays indexed by the *static* level counter, so the level loop fully
   unrolls with static offsets into the flat padded leaf arrays —
@@ -104,8 +106,17 @@ def _pgm_body(
         pred = jnp.clip(pred, -1.0e9, 1.0e9)  # gap blow-ups: clamp pre-cast
         b_lo = jnp.maximum(r0 - 1, 0)
         b_hi = r1 - 1
-        lo = jnp.clip(jnp.floor(pred).astype(jnp.int32) - (eps + 1), b_lo, b_hi)
-        hi = jnp.clip(jnp.ceil(pred).astype(jnp.int32) + (eps + 1), b_lo, b_hi)
+        # clamp the predicted CENTER into the fence range before widening:
+        # an f32 u-resolution collapse (dense cluster inside a huge key
+        # span) can push pred thousands of ranks past the segment, and
+        # ±(ε+1) around the raw pred would collapse the clipped window to
+        # a single fence slot.  The true rank always lies in
+        # [b_lo, b_hi], so clamping the center never increases
+        # |center - true| and the measured-ε guarantee survives.
+        p_lo = jnp.clip(jnp.floor(pred).astype(jnp.int32), b_lo, b_hi)
+        p_hi = jnp.clip(jnp.ceil(pred).astype(jnp.int32), b_lo, b_hi)
+        lo = jnp.clip(p_lo - (eps + 1), b_lo, b_hi)
+        hi = jnp.clip(p_hi + (eps + 1), b_lo, b_hi)
         if lvl + 1 < levels:
             base_n = off[lvl + 1]
             ub = _bounded_ub_limbs(khi, klo, qhi, qlo, base_n + lo, hi - lo + 1, steps=steps)

@@ -61,8 +61,15 @@ def _rmi_body(u, qhi, qlo, thi, tlo, c, slope_a, icept_a, eps_a, rlo_a, rhi_a, *
     rlo = jnp.take(rlo_a, leaf)
     rhi = jnp.take(rhi_a, leaf)
     p = jnp.clip(slope * u + icept, -1.0e9, 1.0e9)  # +/-eps stays inside i32
-    lo = jnp.clip(jnp.floor(p).astype(jnp.int32) - eps, rlo, rhi)
-    hi = jnp.clip(jnp.ceil(p).astype(jnp.int32) + eps, rlo, rhi)
+    # clamp the predicted CENTER into the leaf fences before widening: a
+    # prediction blown far past the leaf (f32 u collapse on dense
+    # clusters) would otherwise collapse the ±ε window to one fence
+    # slot; the true rank is always inside [rlo, rhi], so clamping the
+    # center never increases |center - true|.
+    p_lo = jnp.clip(jnp.floor(p).astype(jnp.int32), rlo, rhi)
+    p_hi = jnp.clip(jnp.ceil(p).astype(jnp.int32), rlo, rhi)
+    lo = jnp.clip(p_lo - eps, rlo, rhi)
+    hi = jnp.clip(p_hi + eps, rlo, rhi)
 
     # --- stage 3: fixed-trip branch-free bounded search ---
     base = lo

@@ -76,8 +76,14 @@ def _rs_body(
     y1 = jnp.take(rank_a, j).astype(jnp.float32)
     pred = y1 + jnp.take(slope_a, j) * jnp.maximum(u - jnp.take(u0_a, j), 0.0)
     pred = jnp.clip(pred, -1.0e9, 1.0e9)
-    lo = jnp.clip(jnp.floor(pred).astype(jnp.int32) - eps, 0, n - 1)
-    hi = jnp.clip(jnp.ceil(pred).astype(jnp.int32) + eps, 0, n - 1)
+    # clamp the predicted CENTER into the table before widening (see
+    # pgm_search: an f32 u-resolution collapse can push pred far past
+    # the table and collapse the ±ε window to the last slot; the true
+    # rank is always in [0, n-1], so clamping the center is sound).
+    p_lo = jnp.clip(jnp.floor(pred).astype(jnp.int32), 0, n - 1)
+    p_hi = jnp.clip(jnp.ceil(pred).astype(jnp.int32), 0, n - 1)
+    lo = jnp.clip(p_lo - eps, 0, n - 1)
+    hi = jnp.clip(p_hi + eps, 0, n - 1)
 
     # --- stage 3: ε-window probe over the table limbs ---
     ub_t = _bounded_ub_limbs(thi, tlo, qhi, qlo, lo, hi - lo + 1, steps=steps)

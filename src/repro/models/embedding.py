@@ -195,11 +195,6 @@ class LearnedKeyedEmbedding:
             ctx=ctx,
         )
 
-    @property
-    def rmi(self):
-        """Deprecated alias for :attr:`index` (pre-unified-API name)."""
-        return self.index
-
     def translate(self, raw_ids, *, backend: str = "xla"):
         """Raw 64-bit ids -> predecessor ranks in the sorted key set."""
         qf = jnp.asarray(raw_ids, dtype=jnp.uint64).reshape(-1)

@@ -124,7 +124,7 @@ class DecodeEngine:
         """One continuous-batching step: admit, decode, retire (and let
         the tuned tier, if any, act on accumulated drift)."""
         if self.tier is not None:
-            self.tier.maybe_rebuild()
+            self.tier.maybe_compact()
         self._admit()
         live = [s for s in range(self.b) if self.slot_req[s] is not None]
         if not live:

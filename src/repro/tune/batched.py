@@ -410,6 +410,13 @@ class BatchedIndexes:
             raise ValueError(
                 f"unknown batched backend {backend!r}; choose from {BATCH_BACKENDS}"
             )
+        from repro.index.impls import query_impl
+
+        kind_backends = query_impl(self.kind).backends
+        if backend not in kind_backends:
+            raise ValueError(
+                f"kind {self.kind!r} supports backends {kind_backends}, not {backend!r}"
+            )
         queries = jnp.asarray(queries)
         if queries.ndim == 1:
             queries = jnp.broadcast_to(queries[None, :], (self.n_tables, queries.shape[0]))

@@ -133,6 +133,11 @@ def sweep(
     table_np = np.asarray(table_np, dtype=np.uint64)
     if specs is None:
         specs = candidate_grid(len(table_np), kinds)
+    # honest per-kind backend claims: a kind that does not implement the
+    # timed backend (e.g. GAPPED has no pallas path yet) cannot compete
+    from repro.index.impls import query_impl
+
+    specs = [s for s in specs if backend in query_impl(s.kind).backends]
     if queries is None:
         rng = np.random.default_rng(seed)
         queries = rng.choice(table_np, size=min(n_queries, max(16, len(table_np))))

@@ -1,26 +1,42 @@
-"""Serving-side re-tuning: drift detection + donated hot swaps.
+"""Serving-side re-tuning: drift absorption + donated hot swaps.
 
 A production tier is not static: keys are ingested, distributions
 drift, and the spec that won the time-space trade-off at build time
 stops being the winner.  :class:`TunedTier` closes the loop between the
-Pareto tuner and the serving path:
+Pareto tuner and the serving path with ONE documented mutation
+lifecycle (shared with :mod:`repro.index.mutation`)::
 
-* **steady state** — lookups run through the shard_map'd
-  :func:`repro.dist.sharded_lookup` with telemetry on (routing
-  imbalance + drop-rate counters feed ``DecodeEngine.metrics()``);
-* **shard drift** — ingested keys are routed to their owner shard by
-  the tier's own fences and buffered; once a shard's pending fraction
-  crosses :attr:`RebuildPolicy.shard_refresh_frac`, the shard is
-  rebuilt *with the tier's current spec* and hot-swapped through the
-  donated ``refresh_shard`` path (``donate_argnums=0`` — the old
-  stacked buffers are reused, no host round-trip);
-* **tier drift** — when total ingest crosses
-  :attr:`RebuildPolicy.retune_frac` (or a shard outgrows the stacked
-  leaf/table capacity, or its trip-count statics), the whole tier is
-  re-*tuned*: :func:`repro.tune.pareto.best_spec_for_budget` re-runs
-  the bi-criteria selection on the merged table at the policy's space
+    absorb -> overflow -> compact -> retune
+
+* **absorb** — when the tier's spec is an *updatable* kind (``GAPPED``),
+  :meth:`TunedTier.insert_batch` routes each key to its owner shard by
+  the tier's fences and absorbs it **device-side** through the shard's
+  gapped leaves (:func:`repro.dist.sharded_index.insert_into_shard` —
+  a donated ``.at[shard].set`` swap, no host buffering, no rebuild).
+* **overflow** — keys whose leaf is full divert to the shard's sorted
+  delta buffer, still inside the same donated insert.
+* **compact** — :meth:`TunedTier.maybe_compact` folds any delta past
+  :data:`repro.index.mutation.COMPACT_FILL` back into rebalanced leaves
+  (:func:`repro.dist.sharded_index.compact_shard`); only *capacity
+  exhaustion* (:class:`repro.index.mutation.NeedsRebuild`) escalates to
+  a shard rebuild through the donated ``refresh_shard`` path — not
+  every insert, which is the point of the gapped design.
+* **retune** — when total ingest since the last restack crosses
+  :attr:`RebuildPolicy.retune_frac`, the whole tier is re-*tuned*:
+  :func:`repro.tune.pareto.best_spec_for_budget` re-runs the
+  bi-criteria selection on the merged live table at the policy's space
   budget and the tier is restacked under the (possibly different)
   winning spec.
+
+Static kinds keep the PR-5 behaviour as the fallback arm of the same
+lifecycle: ingested keys are buffered host-side per owner shard, and a
+shard whose pending fraction crosses
+:attr:`RebuildPolicy.shard_refresh_frac` is rebuilt with the tier's
+current spec and hot-swapped (``refresh_shard``, ``donate_argnums=0``).
+
+``ingest`` / ``maybe_rebuild`` are deprecated aliases for
+:meth:`~TunedTier.insert_batch` / :meth:`~TunedTier.maybe_compact`
+(one release; they emit ``DeprecationWarning``).
 
 Every decision is a counter in :meth:`TunedTier.metrics`, surfaced by
 the serving engine next to the lookup trace counts.
@@ -28,6 +44,7 @@ the serving engine next to the lookup trace counts.
 
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 
 import numpy as np
@@ -35,12 +52,15 @@ import numpy as np
 from repro.dist.sharded_index import (
     ShardedIndex,
     _fresh_tier_metrics,
+    compact_shard,
     derived_tier_metrics,
+    insert_into_shard,
     refresh_shard,
     route_owners,
     sharded_lookup,
 )
-from repro.index import registry
+from repro.index import mutation, registry
+from repro.index.mutation import NeedsRebuild
 from repro.index.specs import IndexSpec
 
 from .pareto import best_spec_for_budget
@@ -62,17 +82,23 @@ class RebuildPolicy:
 class _Counters:
     lookups: int = 0
     ingested: int = 0
+    absorbed: int = 0  # merged into gapped leaves in place (updatable kinds)
+    overflowed: int = 0  # diverted to a shard's delta buffer
+    duplicates: int = 0  # ingested keys already present
+    shard_compactions: int = 0  # delta -> leaves folds (device-side)
     shard_refreshes: int = 0
     retunes: int = 0
     forced_restacks: int = 0  # refresh_shard rejected (capacity/static) -> full restack
-    pending: int = 0
+    pending: int = 0  # host-buffered keys (static-kind fallback arm)
 
 
 class TunedTier:
     """A served, self-re-tuning sharded index tier.
 
     Build with a spec to pin the architecture, or without one to let the
-    bi-criteria tuner pick it for the policy's space budget.
+    bi-criteria tuner pick it for the policy's space budget.  Updatable
+    specs (``GAPPED``) absorb ingest device-side; static specs buffer
+    and refresh — same lifecycle, see the module docstring.
     """
 
     def __init__(self, table_np, n_shards: int, policy: RebuildPolicy | None = None, *,
@@ -85,8 +111,12 @@ class TunedTier:
         self.spec = spec
         self.sidx = ShardedIndex.build(spec, table_np, n_shards=n_shards)
         self._pending: list[list] = [[] for _ in range(n_shards)]
+        self._since_retune = 0  # keys ingested since the last restack
         self.counters = _Counters()
         self._routing = _fresh_tier_metrics()  # this tier's own sink
+
+    def _updatable(self) -> bool:
+        return self.spec.kind in mutation.updatable_kinds()
 
     # -- serving path ------------------------------------------------------
     def lookup(self, queries, **kw):
@@ -98,23 +128,67 @@ class TunedTier:
         kw.setdefault("backend", self.policy.backend)
         return sharded_lookup(self.sidx, queries, self.ctx, **kw)
 
-    # -- drift -------------------------------------------------------------
-    def ingest(self, new_keys) -> None:
-        """Buffer new keys with their owner shards (fence routing), then
-        refresh / re-tune if the policy's thresholds are crossed."""
+    # -- drift: absorb -> overflow ----------------------------------------
+    def insert_batch(self, new_keys) -> None:
+        """Route new keys to their owner shards (fence routing) and
+        absorb them: device-side through the gapped leaves + delta for
+        updatable specs, host-buffered for static specs; then apply the
+        compact/refresh/retune policy (:meth:`maybe_compact`)."""
         new_keys = np.unique(np.asarray(new_keys, dtype=np.uint64))
         if len(new_keys) == 0:
             return
-        owners = np.asarray(route_owners(self.sidx.fences, new_keys))
-        for s in range(self.sidx.n_shards):
-            mine = new_keys[owners == s]
-            if len(mine):
-                self._pending[s].append(mine)
         self.counters.ingested += len(new_keys)
-        self.counters.pending += len(new_keys)
-        self.maybe_rebuild()
+        self._since_retune += len(new_keys)
+        if self._updatable():
+            todo = new_keys
+            while len(todo):
+                todo = self._absorb(todo)
+        else:
+            owners = np.asarray(route_owners(self.sidx.fences, new_keys))
+            for s in range(self.sidx.n_shards):
+                mine = new_keys[owners == s]
+                if len(mine):
+                    self._pending[s].append(mine)
+            self.counters.pending += len(new_keys)
+        self.maybe_compact()
+
+    def _absorb(self, keys: np.ndarray) -> np.ndarray:
+        """One fence-routing pass of the absorb arm.  Returns the tail of
+        keys that must be *re-routed* because a forced restack moved the
+        fences mid-pass (empty when the pass completed)."""
+        owners = np.asarray(route_owners(self.sidx.fences, keys))
+        for s in range(self.sidx.n_shards):
+            mine = keys[owners == s]
+            if not len(mine):
+                continue
+            try:
+                self.sidx, report = insert_into_shard(self.sidx, s, mine)
+            except NeedsRebuild:
+                # leaves + delta exhausted: rebuild just this shard with
+                # the tier's spec (the lifecycle's escalation arm)
+                self._pending[s].append(mine)
+                self.counters.pending += len(mine)
+                before = self.counters.forced_restacks
+                self.refresh(s)
+                if self.counters.forced_restacks > before:
+                    # the restack consumed every buffered key but moved
+                    # the fences: the unprocessed tail needs re-routing
+                    return keys[owners > s]
+                continue
+            self.counters.absorbed += report.absorbed
+            self.counters.overflowed += report.overflowed
+            self.counters.duplicates += report.duplicates
+            if report.compacted:
+                self.counters.shard_compactions += 1
+        return keys[:0]
 
     def _shard_keys(self, s: int) -> np.ndarray:
+        if self._updatable():
+            from repro.index import updatable
+
+            # the stacked tables are a stale build-time snapshot for
+            # self-contained kinds: read the live merged key set instead
+            return updatable.live_keys(self.sidx.shard(s))
         cnt = int(self.sidx.counts[s])
         return np.asarray(self.sidx.tables[s][:cnt])
 
@@ -126,14 +200,34 @@ class TunedTier:
     def _pending_count(self, s: int) -> int:
         return sum(len(k) for k in self._pending[s])
 
-    # -- rebuild machinery -------------------------------------------------
-    def maybe_rebuild(self) -> str | None:
-        """Apply the policy: ``"retune"``, ``"refresh"`` or ``None``."""
+    # -- compact -> retune -------------------------------------------------
+    def maybe_compact(self) -> str | None:
+        """Apply the policy: ``"retune"``, ``"compact"``, ``"refresh"``
+        or ``None``.  Updatable specs compact any shard whose delta fill
+        crossed :data:`~repro.index.mutation.COMPACT_FILL`; static specs
+        refresh any shard whose host-pending fraction crossed
+        :attr:`RebuildPolicy.shard_refresh_frac`."""
         total = int(self.sidx.counts.sum())
-        if self.counters.pending >= max(1, int(self.policy.retune_frac * total)):
+        drift = self._since_retune if self._updatable() else self.counters.pending
+        if drift >= max(1, int(self.policy.retune_frac * total)):
             self.retune()
             return "retune"
         did = None
+        if self._updatable():
+            dc = np.asarray(self.sidx.index.arrays["delta_count"])
+            dcap = int(self.sidx.index.arrays["delta"].shape[1])
+            for s in range(self.sidx.n_shards):
+                if int(dc[s]) / max(dcap, 1) < mutation.COMPACT_FILL:
+                    continue
+                try:
+                    self.sidx = compact_shard(self.sidx, s)
+                except NeedsRebuild:
+                    self.refresh(s)
+                    did = "refresh"
+                    continue
+                self.counters.shard_compactions += 1
+                did = "compact"
+            return did
         for s in range(self.sidx.n_shards):
             resident = int(self.sidx.counts[s])
             if self._pending_count(s) >= max(1, int(self.policy.shard_refresh_frac * resident)):
@@ -175,7 +269,27 @@ class TunedTier:
         self.spec = spec
         self.sidx = ShardedIndex.build(spec, table_np, n_shards=self.sidx.n_shards)
         self._pending = [[] for _ in range(self.sidx.n_shards)]
+        self._since_retune = 0
         self.counters.pending = 0
+
+    # -- deprecated aliases (one release) ----------------------------------
+    def ingest(self, new_keys) -> None:
+        """Deprecated alias for :meth:`insert_batch`."""
+        warnings.warn(
+            "TunedTier.ingest() is deprecated; use insert_batch()",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        return self.insert_batch(new_keys)
+
+    def maybe_rebuild(self) -> str | None:
+        """Deprecated alias for :meth:`maybe_compact`."""
+        warnings.warn(
+            "TunedTier.maybe_rebuild() is deprecated; use maybe_compact()",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        return self.maybe_compact()
 
     # -- telemetry ---------------------------------------------------------
     def metrics(self) -> dict:

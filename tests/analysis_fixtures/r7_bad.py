@@ -1,0 +1,29 @@
+"""R7 fixture: every way a removed shim name can sneak back in."""
+
+from repro.core import build_index  # BAD: deleted builder shim
+from repro.kernels import prepare_rmi_kernel_index  # BAD: deleted kernel shim
+from repro.core import KINDS  # BAD: core-scoped KINDS tuple is gone
+
+from repro import core
+from repro.kernels import ops
+
+
+def legacy_build(table):
+    # BAD: attribute access resurrects the shim spelling
+    return core.build_index("RMI", table)
+
+
+def legacy_kernel_path(m, table, u, qh, ql):
+    ki = prepare_rmi_kernel_index(m, table)
+    # BAD: deleted fused entry point (the `_pallas`-suffixed one is the
+    # real kernel and stays legal — see r7_ok.py)
+    return ops.fused_rmi_search(ki, u, qh, ql)
+
+
+class RMIKernelIndex:  # BAD: redefining the deleted container
+    pass
+
+
+def list_kinds():
+    # BAD: core.KINDS attribute access
+    return core.KINDS

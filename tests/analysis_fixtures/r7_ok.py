@@ -1,0 +1,31 @@
+"""R7 fixture: the unified replacements and near-miss names — must stay clean."""
+
+from repro import index as ix
+from repro.index import build
+from repro.kernels.rmi_search import fused_rmi_search_pallas  # suffixed real kernel
+
+
+def unified_build(table):
+    return build("RMI", table)
+
+
+def unified_lookup(idx, queries):
+    return idx.lookup(queries, backend="pallas")
+
+
+def list_kinds():
+    # registry kinds() is fine; only repro.core's deleted KINDS is banned
+    return ix.kinds()
+
+
+def local_kinds_tuple():
+    # a *local* KINDS name (not on repro.core) is legal
+    KINDS = ("L", "Q")
+    return KINDS
+
+
+def kernel_call(u, qh, ql, th, tl, coef, s, i, e, rlo, rhi, steps):
+    # exact-name matching: the `_pallas` suffix must not flag
+    return fused_rmi_search_pallas(
+        u, qh, ql, th, tl, coef, s, i, e, rlo, rhi, steps=steps
+    )

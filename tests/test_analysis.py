@@ -50,7 +50,7 @@ def _rules(findings):
 def test_rule_ids_unique_and_complete():
     ids = [r.id for r in ALL_RULES]
     assert ids == sorted(set(ids)), "duplicate or unordered rule ids"
-    assert ids == ["R1", "R2", "R3", "R4", "R5", "R6"]
+    assert ids == ["R1", "R2", "R3", "R4", "R5", "R6", "R7"]
     for r in ALL_RULES:
         assert r.title != "?" and r.blurb != "?"
 
@@ -107,6 +107,26 @@ def test_r6_kernel_f64_fixture():
     assert "R6" in _rules(bad)
     assert sum(f.rule == "R6" for f in bad) == 3
     assert not _scan("r6_kernel_ok.py")
+
+
+def test_r7_removed_api_fixture():
+    bad = _scan("r7_bad.py")
+    assert _rules(bad) == {"R7"}
+    # imports (build_index, prepare_rmi_kernel_index, core KINDS),
+    # attribute accesses (core.build_index, ops.fused_rmi_search,
+    # core.KINDS), and the class redefinition of RMIKernelIndex
+    assert len(bad) == 7, [f.format() for f in bad]
+    names = " ".join(f.message for f in bad)
+    for gone in (
+        "build_index",
+        "prepare_rmi_kernel_index",
+        "fused_rmi_search",
+        "RMIKernelIndex",
+        "KINDS",
+    ):
+        assert gone in names
+    # the `_pallas`-suffixed real kernel and registry kinds() stay legal
+    assert not _scan("r7_ok.py")
 
 
 # ---------------------------------------------------------------------------
@@ -230,14 +250,22 @@ def test_cli_json_artifact(tmp_path):
     assert r.returncode == 0, r.stdout + r.stderr
     data = json.loads(out.read_text())
     assert data["counts"]["new"] == 4
-    assert {row["id"] for row in data["rules"]} == {"R1", "R2", "R3", "R4", "R5", "R6"}
+    assert {row["id"] for row in data["rules"]} == {
+        "R1",
+        "R2",
+        "R3",
+        "R4",
+        "R5",
+        "R6",
+        "R7",
+    }
     assert all(f["rule"] == "R1" for f in data["findings"])
 
 
 def test_cli_list_rules():
     r = _cli("--list-rules")
     assert r.returncode == 0
-    for rid in ("R1", "R2", "R3", "R4", "R5", "R6"):
+    for rid in ("R1", "R2", "R3", "R4", "R5", "R6", "R7"):
         assert rid in r.stdout
 
 

@@ -5,8 +5,7 @@ tolerances calibrated to f32 reduction error.  The search kernels are
 reached through the unified ``repro.index`` API (``backend="pallas"``):
 fused RMI, fused PGM descent, fused RadixSpline, the batched
 (table, q_tile)-grid RMI kernel, and the k-ary fallback — every
-registered kind must be bit-exact vs ``backend="ref"``.  The legacy
-``prepare_rmi_kernel_index`` shim keeps one smoke test.
+registered kind must be bit-exact vs ``backend="ref"``.
 """
 
 import numpy as np
@@ -35,14 +34,44 @@ def test_fused_rmi_kernel(rng, kind, n):
     np.testing.assert_array_equal(got, want)
 
 
-def test_fused_rmi_kernel_legacy_shim(rng):
-    """The deprecated prepare_rmi_kernel_index path still works."""
+def test_fused_rmi_kernel_from_fitted_model(rng):
+    """A separately fitted core RMIModel reaches the fused kernel via
+    ``repro.index.impls.rmi_model_to_index`` (the migration path for
+    the removed prepare/search shim pair)."""
+    from repro.index.impls import rmi_model_to_index
+
     table = make_table(rng, "uniform", 4096)
     qs = rng.choice(table, 256).astype(np.uint64)
     m = build_rmi(table, b=64, root_type="linear")
-    kidx = ops.prepare_rmi_kernel_index(m, table)
-    got = np.asarray(ops.fused_rmi_search(kidx, qs, tile_q=128))
+    idx = rmi_model_to_index("RMI", m, table)
+    got = np.asarray(idx.lookup(jnp.asarray(table), jnp.asarray(qs), backend="pallas"))
     np.testing.assert_array_equal(got, true_ranks(table, qs))
+
+
+def test_pallas_window_center_clamp_regression():
+    """Dense clusters inside a huge key span collapse f32 ``u``
+    resolution: the leaf/segment prediction overshoots the fence range
+    by thousands of ranks, and a ±ε window around the *unclamped*
+    center used to collapse to a single fence slot (wrong rank for
+    in-cluster queries).  The kernels now clamp the predicted center
+    into the fence range before widening; this pins the exact table
+    that exposed it."""
+    rng = np.random.default_rng(42)
+    centers = rng.integers(0, 2**63, size=8, dtype=np.uint64)
+    parts = [c + rng.integers(0, 2**20, size=256, dtype=np.uint64) for c in centers]
+    table = np.unique(np.concatenate(parts))
+    qs = np.concatenate(
+        [rng.choice(table, 400), rng.integers(0, 2**63, 100, dtype=np.uint64)]
+    ).astype(np.uint64)
+    want = true_ranks(table, qs)
+    for spec in (
+        ix.PGMSpec(eps=32),
+        ix.RMISpec(b=64, root_type="linear"),
+        ix.RSSpec(eps=32, r_bits=10),
+    ):
+        m = ix.build(spec, table)
+        got = np.asarray(m.lookup(table, qs, backend="pallas"))
+        np.testing.assert_array_equal(got, want, err_msg=spec.kind)
 
 
 def _edge_queries(rng, table, n_random=200):
@@ -95,7 +124,8 @@ def test_fused_rs_kernel(rng, kind, n):
 
 def test_pallas_bit_exact_all_kinds(rng):
     """Acceptance: lookup(backend="pallas") is bit-exact vs
-    backend="ref" for EVERY registered kind."""
+    backend="ref" for EVERY registered kind that claims a pallas path
+    (kinds that don't — GAPPED — must reject the backend loudly)."""
     table = make_table(rng, "lognormal", 8192)
     qs = _edge_queries(rng, table)
     params = {
@@ -109,10 +139,15 @@ def test_pallas_bit_exact_all_kinds(rng):
         "PGM_M": {"space_pct": 2.0, "a": 1.0},
         "RS": {"eps": 32, "r_bits": 10},
         "BTREE": {"fanout": 16},
+        "GAPPED": {"leaf_cap": 64, "delta_cap": 256},
     }
     assert set(params) == set(ix.kinds())
     for kind in ix.kinds():
         m = ix.build(kind, table, **params[kind])
+        if "pallas" not in m.backends():
+            with pytest.raises(ValueError, match="supports backends"):
+                m.lookup(table, qs, backend="pallas")
+            continue
         got = np.asarray(m.lookup(table, qs, backend="pallas"))
         want = np.asarray(m.lookup(table, qs, backend="ref"))
         np.testing.assert_array_equal(got, want, err_msg=kind)

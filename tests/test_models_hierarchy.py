@@ -1,8 +1,8 @@
 """Every index kind in the paper's hierarchy returns exact predecessor
 ranks on every table family, and space accounting is sane (paper §3.2).
 
-Builds go through the unified ``repro.index`` spec API; the deprecated
-``build_index`` shim keeps one coverage case per run.
+Builds go through the unified ``repro.index`` spec API (string-kind
+builds exercise ``repro.index.build``'s registry dispatch).
 """
 
 import numpy as np
@@ -10,7 +10,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro import index as ix
-from repro.core import build_index, model_reduction_factor
+from repro.core import model_reduction_factor
 from repro.core.cdf import true_ranks
 
 from conftest import TABLE_KINDS, make_table, make_queries
@@ -49,18 +49,18 @@ def test_space_hierarchy(rng):
     small = make_table(rng, "uniform", 1000)
     big = make_table(rng, "uniform", 30000)
     for kind in ("L", "Q", "C"):
-        assert build_index(kind, small).space_bytes() == build_index(kind, big).space_bytes()
-    ko_s, ko_b = build_index("KO", small, k=15), build_index("KO", big, k=15)
+        assert ix.build(kind, small).space_bytes() == ix.build(kind, big).space_bytes()
+    ko_s, ko_b = ix.build("KO", small, k=15), ix.build("KO", big, k=15)
     assert ko_s.space_bytes() == ko_b.space_bytes()  # constant in n for fixed k
-    rmi_64 = build_index("RMI", big, b=64)
-    rmi_1k = build_index("RMI", big, b=1024)
+    rmi_64 = ix.build("RMI", big, b=64)
+    rmi_1k = ix.build("RMI", big, b=1024)
     assert rmi_1k.space_bytes() > rmi_64.space_bytes()
 
 
 def test_pgm_eps_space_tradeoff(rng):
     table = make_table(rng, "clustered", 30000)
-    small_eps = build_index("PGM", table, eps=8)
-    big_eps = build_index("PGM", table, eps=256)
+    small_eps = ix.build("PGM", table, eps=8)
+    big_eps = ix.build("PGM", table, eps=256)
     assert small_eps.space_bytes() > big_eps.space_bytes()
     assert small_eps.n_segments_l0 > big_eps.n_segments_l0
 
@@ -68,7 +68,7 @@ def test_pgm_eps_space_tradeoff(rng):
 def test_pgm_bicriteria_budget(rng):
     table = make_table(rng, "bursty", 30000)
     budget = int(0.02 * len(table) * 8)
-    m = build_index("PGM_M", table, space_budget_bytes=budget, a=1.0)
+    m = ix.build("PGM_M", table, space_budget_bytes=budget, a=1.0)
     assert m.space_bytes() <= budget or m.eps >= len(table) // 2
 
 
@@ -76,8 +76,8 @@ def test_reduction_factor_ordering(rng):
     """Better (smaller-eps) models discard more of the table (paper §2)."""
     table = make_table(rng, "lognormal", 20000)
     qs = make_queries(rng, table, 500)
-    rf_l = model_reduction_factor(build_index("L", table), table, qs)
-    rf_pgm = model_reduction_factor(build_index("PGM", table, eps=16), table, qs)
+    rf_l = model_reduction_factor(ix.build("L", table), table, qs)
+    rf_pgm = model_reduction_factor(ix.build("PGM", table, eps=16), table, qs)
     assert rf_pgm > rf_l
     assert rf_pgm > 99.0
 

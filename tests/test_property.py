@@ -13,7 +13,7 @@ import pytest
 pytest.importorskip("hypothesis", reason="hypothesis not baked into the image")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import build_index
+from repro.index import NeedsRebuild, build
 from repro.core.cdf import as_table, true_ranks
 
 key_lists = st.lists(
@@ -39,7 +39,7 @@ def test_predecessor_invariant(keys, queries):
     want = true_ranks(table, qs)
     tj, qj = jnp.asarray(table), jnp.asarray(qs)
     for kind, params in MODELS:
-        m = build_index(kind, table, **params)
+        m = build(kind, table, **params)
         got = np.asarray(m.predecessor(tj, qj))
         assert (got == want).all(), (kind, table[:8], qs[:8], got, want)
         # interval soundness
@@ -58,7 +58,7 @@ def test_self_query_identity(keys):
     tj = jnp.asarray(table)
     want = np.arange(len(table))
     for kind, params in MODELS:
-        m = build_index(kind, table, **params)
+        m = build(kind, table, **params)
         got = np.asarray(m.predecessor(tj, tj))
         assert (got == want).all(), kind
 
@@ -78,6 +78,48 @@ def test_pgm_segment_error_bound(keys, eps):
     x0 = table[starts[seg_of]]
     pred = starts[seg_of] + slopes[seg_of] * (table - x0)
     assert np.all(np.abs(pred - np.arange(len(table))) <= eps + 1e-6)
+
+
+# max-key is GAPPED's pad/route sentinel and cannot be stored live
+_gapped_keys = st.integers(min_value=0, max_value=2**64 - 2)
+
+
+@settings(max_examples=30, deadline=None)
+@given(data=st.data())
+def test_gapped_after_inserts_matches_fresh_static_build(data):
+    """The ISSUE acceptance invariant: a GAPPED index after N insert
+    batches answers bit-exactly like a static RMI built fresh on the
+    merged keyset, on every backend GAPPED claims.  A batch that
+    exhausts the fixed capacity exercises the retune arm instead (the
+    documented ``NeedsRebuild`` escalation: rebuild on the merged keys).
+    """
+    keys = data.draw(st.lists(_gapped_keys, min_size=2, max_size=200, unique=True))
+    table = as_table(np.array(keys, dtype=np.uint64))
+    spec = dict(leaf_cap=16, fill=0.5, delta_cap=32)
+    g = build("GAPPED", table, **spec)
+    merged = table
+    for _ in range(data.draw(st.integers(min_value=1, max_value=3), label="batches")):
+        batch = data.draw(st.lists(_gapped_keys, min_size=1, max_size=40))
+        batch = np.array(batch, dtype=np.uint64)
+        target = np.union1d(merged, batch)
+        try:
+            g, report = g.insert_batch(batch)
+        except NeedsRebuild:
+            g = build("GAPPED", target, **spec)
+        else:
+            fresh = len(target) - len(merged)
+            assert report.absorbed + report.overflowed == fresh
+            assert report.duplicates == len(batch) - fresh
+        merged = target
+    static = build("RMI", merged, b=16, root_type="linear")
+    qs = np.array(
+        data.draw(st.lists(_gapped_keys, min_size=1, max_size=64)), dtype=np.uint64
+    )
+    want = np.asarray(static.predecessor(jnp.asarray(merged), jnp.asarray(qs)))
+    np.testing.assert_array_equal(want, true_ranks(merged, qs))
+    for be in g.backends():
+        got = np.asarray(g.lookup(jnp.asarray(table), jnp.asarray(qs), backend=be))
+        assert (got == want).all(), (be, merged[:8], qs[:8], got, want)
 
 
 # ---------------------------------------------------------------------------

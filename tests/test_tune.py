@@ -38,6 +38,7 @@ PARAMS = {
     "PGM_M": {"space_pct": 2.0, "a": 1.0},
     "RS": {"eps": 16, "r_bits": 8},
     "BTREE": {"fanout": 8},
+    "GAPPED": {"leaf_cap": 64, "fill": 0.75, "delta_cap": 128},
 }
 
 
@@ -90,6 +91,15 @@ def expected_model_bytes(idx) -> int:
         return m * 16 + _leaf_nbytes(idx, ("radix_table", "kmin", "shift", "eps_eff", "m_valid"))
     if key == "btree":
         return _leaf_nbytes(idx, ("keys", "off", "valid"))
+    if key == "gapped":
+        live = int(np.asarray(a["counts"]).sum()) + int(np.asarray(a["delta_count"]))
+        return live * 8 + _leaf_nbytes(
+            idx,
+            (
+                "counts", "fences", "route", "delta_count",
+                "kmin", "inv_span", "root_slope", "root_icept", "root_eps",
+            ),
+        )
     raise AssertionError(key)
 
 
@@ -149,6 +159,11 @@ def test_batched_lookup_pallas_exact_all_kinds(rng):
     qs = _queries(rng, tables)
     for kind in ix.kinds():
         bm = tune.build_many(ix.spec_for(kind, **PARAMS[kind]), tables)
+        if "pallas" not in bm.index.backends():
+            # per-kind backend honesty: unclaimed backends raise loudly
+            with pytest.raises(ValueError, match="supports backends"):
+                bm.lookup(qs, backend="pallas")
+            continue
         outs = np.asarray(bm.lookup(qs, backend="pallas"))
         for i, t in enumerate(tables):
             np.testing.assert_array_equal(outs[i], true_ranks(t, qs), err_msg=f"{kind}/{i}")
@@ -244,6 +259,10 @@ def test_build_many_one_trace_per_kind_backend(backend, rng):
     ix.reset_trace_counts()
     for kind in ix.kinds():
         bm = tune.build_many(ix.spec_for(kind, **PARAMS[kind]), tables)
+        if backend not in bm.index.backends():
+            with pytest.raises(ValueError, match="supports backends"):
+                bm.lookup(qs, backend=backend)
+            continue
         bm.lookup(qs, backend=backend)
         bm.lookup(qs[: len(qs)], backend=backend)  # same shapes: no retrace
     for key, n in ix.trace_counts().items():
@@ -386,7 +405,7 @@ def test_tuned_tier_refresh_and_retune(rng):
     new_keys = np.setdiff1d(
         np.unique(rng.integers(0, 2**63, size=300, dtype=np.uint64)), table
     )
-    tier.ingest(new_keys)
+    tier.insert_batch(new_keys)
     c = tier.counters
     assert c.shard_refreshes + c.forced_restacks + c.retunes >= 1
     merged = np.union1d(table, new_keys)
@@ -397,7 +416,7 @@ def test_tuned_tier_refresh_and_retune(rng):
     big = np.setdiff1d(
         np.unique(rng.integers(0, 2**63, size=3000, dtype=np.uint64)), merged
     )
-    tier.ingest(big)
+    tier.insert_batch(big)
     assert tier.counters.retunes >= 1
     merged2 = np.union1d(merged, big)
     q3 = rng.choice(merged2, size=512).astype(np.uint64)

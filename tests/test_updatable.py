@@ -1,0 +1,346 @@
+"""GAPPED + mutation-API edge cases.
+
+The broad-strokes coverage (registry completeness, backend parity on
+random tables, kernel rejection) lives in ``test_index_api.py``; this
+file pins the *corners* of the absorb -> overflow -> compact -> retune
+lifecycle: fence-key inserts, duplicate routing, a delta filled to
+exactly its capacity, predecessors answered from each tier, the
+per-kind updatability capability, trace-count discipline, and the
+sharded/tier write surface (donated shard swaps, deprecation wrappers).
+
+Tests use *local* rngs on purpose: the shared session ``rng`` fixture
+is a single stream, and drawing from it here would shift every
+downstream test's tables.
+"""
+
+import warnings
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro import index as ix
+from repro.core.cdf import true_ranks
+from repro.dist import NO_PRED
+from repro.index import GappedSpec, NeedsRebuild, build, updatable_kinds
+from repro.index.updatable import live_keys
+
+_MAXKEY = np.uint64(2**64 - 1)
+
+
+def _lookup(idx, queries, backend="xla"):
+    # GAPPED is self-contained: the table argument is a stale snapshot
+    # and deliberately ignored, so any placeholder works
+    return np.asarray(idx.lookup(jnp.zeros(1, jnp.uint64), jnp.asarray(queries), backend=backend))
+
+
+def _assert_exact(idx, merged, queries):
+    want = true_ranks(merged, np.asarray(queries))
+    for be in idx.backends():
+        got = _lookup(idx, queries, backend=be)
+        np.testing.assert_array_equal(got, want, err_msg=be)
+
+
+# ---------------------------------------------------------------------------
+# capability: updatability is per-kind
+# ---------------------------------------------------------------------------
+
+
+def test_updatable_kinds_capability():
+    assert updatable_kinds() == ("GAPPED",)
+    table = np.arange(1, 65, dtype=np.uint64) * np.uint64(977)
+    static = build("RMI", table, b=8, root_type="linear")
+    with pytest.raises(TypeError, match="updatable"):
+        static.insert_batch(np.asarray([np.uint64(5)]))
+    with pytest.raises(TypeError, match="updatable"):
+        static.compact()
+
+
+def test_compact_on_fresh_build_is_identity_on_answers():
+    table = np.arange(1, 129, dtype=np.uint64) * np.uint64(1009)
+    g = build("GAPPED", table, leaf_cap=16, fill=0.5, delta_cap=32)
+    g2 = g.compact()
+    assert int(np.asarray(g2.arrays["delta_count"])) == 0
+    q = np.concatenate([table, table - np.uint64(1), [np.uint64(0), _MAXKEY]])
+    _assert_exact(g2, table, q)
+
+
+def test_empty_batch_is_a_noop():
+    table = np.arange(1, 65, dtype=np.uint64) * np.uint64(13)
+    g = build("GAPPED", table, leaf_cap=16, fill=0.5, delta_cap=32)
+    g2, rep = g.insert_batch(np.asarray([], dtype=np.uint64))
+    assert g2 is g
+    assert (rep.requested, rep.absorbed, rep.overflowed, rep.duplicates) == (0, 0, 0, 0)
+    assert rep.delta_count == 0 and not rep.compacted and not rep.needs_compaction
+
+
+# ---------------------------------------------------------------------------
+# fence keys, duplicates, below-min inserts
+# ---------------------------------------------------------------------------
+
+
+def test_insert_exactly_at_fence_keys_is_duplicate():
+    table = np.arange(1, 129, dtype=np.uint64) * np.uint64(101)
+    g = build("GAPPED", table, leaf_cap=16, fill=0.5, delta_cap=64)
+    fences = np.asarray(g.arrays["fences"])
+    g2, rep = g.insert_batch(fences)
+    assert rep.duplicates == len(fences) and rep.absorbed == rep.overflowed == 0
+    _assert_exact(g2, table, fences)
+
+
+def test_insert_just_below_fences_lands_in_previous_leaf():
+    table = np.arange(1, 129, dtype=np.uint64) * np.uint64(100)
+    g = build("GAPPED", table, leaf_cap=16, fill=0.5, delta_cap=64)
+    fences = np.asarray(g.arrays["fences"])
+    probe = np.setdiff1d(fences[1:] - np.uint64(1), table)
+    g2, rep = g.insert_batch(probe)
+    assert rep.absorbed + rep.overflowed == len(probe) and rep.duplicates == 0
+    merged = np.union1d(table, probe)
+    q = np.concatenate([merged, probe + np.uint64(1), probe - np.uint64(1)])
+    _assert_exact(g2, merged, q)
+    np.testing.assert_array_equal(live_keys(g2), merged)
+
+
+def test_duplicates_batch_internal_and_cross_tier():
+    table = np.arange(1, 65, dtype=np.uint64) * np.uint64(1000)
+    g = build("GAPPED", table, leaf_cap=8, fill=0.5, delta_cap=32)
+    first = np.asarray([1500, 2500], dtype=np.uint64)
+    g, rep = g.insert_batch(first)
+    assert rep.absorbed + rep.overflowed == 2
+    # one batch-internal dup, one dup vs the main tier, one dup vs the
+    # keys just inserted (leaf or delta), and one genuinely fresh key
+    batch = np.asarray([3500, 3500, 1000, 1500, 4500], dtype=np.uint64)
+    g, rep = g.insert_batch(batch)
+    assert rep.requested == 5
+    assert rep.duplicates == 3
+    assert rep.absorbed + rep.overflowed == 2
+    merged = np.union1d(table, [1500, 2500, 3500, 4500])
+    np.testing.assert_array_equal(live_keys(g), merged)
+    _assert_exact(g, merged, np.concatenate([merged, merged + np.uint64(1)]))
+
+
+def test_insert_below_minimum_key():
+    table = (np.arange(1, 65, dtype=np.uint64) + np.uint64(100)) * np.uint64(50)
+    g = build("GAPPED", table, leaf_cap=16, fill=0.5, delta_cap=32)
+    below = np.asarray([7, 23], dtype=np.uint64)
+    g, rep = g.insert_batch(below)
+    assert rep.absorbed + rep.overflowed == 2
+    merged = np.union1d(table, below)
+    q = np.asarray([0, 6, 7, 8, 22, 23, 24, int(table[0])], dtype=np.uint64)
+    _assert_exact(g, merged, q)
+    assert _lookup(g, np.asarray([6], dtype=np.uint64))[0] == NO_PRED  # below new min
+
+
+# ---------------------------------------------------------------------------
+# delta buffer: all-or-nothing leaf absorption, exact-capacity fill
+# ---------------------------------------------------------------------------
+
+
+def _crowded_leaf_setup():
+    """64 well-spaced keys, leaf 0 covering [1000, 4000): its 4 gap
+    slots cannot take an 8-key batch, so absorption (all-or-nothing per
+    leaf) diverts the whole batch to the delta."""
+    table = np.arange(1, 65, dtype=np.uint64) * np.uint64(1000)
+    g = build("GAPPED", table, leaf_cap=8, fill=0.5, delta_cap=16)
+    assert int(g.arrays["keys"].shape[1]) == 8
+    assert int(np.asarray(g.arrays["counts"])[0]) == 4
+    return table, g
+
+
+def test_overfull_leaf_batch_diverts_wholesale_to_delta():
+    table, g = _crowded_leaf_setup()
+    batch = np.uint64(1000) + np.arange(1, 9, dtype=np.uint64) * np.uint64(100)
+    g, rep = g.insert_batch(batch)
+    assert rep.absorbed == 0 and rep.overflowed == 8
+    merged = np.union1d(table, batch)
+    _assert_exact(g, merged, np.concatenate([merged, batch + np.uint64(1)]))
+
+
+def test_delta_filled_to_exactly_its_capacity():
+    table, g = _crowded_leaf_setup()
+    b1 = np.uint64(1000) + np.arange(1, 9, dtype=np.uint64) * np.uint64(100)
+    b2 = np.uint64(2000) + np.arange(1, 9, dtype=np.uint64) * np.uint64(100)
+    g, r1 = g.insert_batch(b1)
+    g, r2 = g.insert_batch(b2)
+    assert r1.overflowed == r2.overflowed == 8
+    assert r2.delta_count == r2.delta_cap == 16  # exactly full, no raise
+    assert r2.delta_fill == 1.0 and r2.needs_compaction and not r2.compacted
+    merged = np.union1d(table, np.concatenate([b1, b2]))
+    _assert_exact(g, merged, merged)
+
+    # another leaf-0-crowding batch (5 keys > the 4 free gaps, so it
+    # overflows) would push the delta past 16: auto_compact=False must
+    # refuse...
+    b3 = np.uint64(3000) + np.arange(1, 6, dtype=np.uint64) * np.uint64(20)
+    with pytest.raises(NeedsRebuild, match="compact"):
+        g.insert_batch(b3, auto_compact=False)
+    # ...and the default folds the delta first, then retries the batch
+    g2, r3 = g.insert_batch(b3)
+    assert r3.compacted and r3.absorbed + r3.overflowed == 5
+    merged = np.union1d(merged, b3)
+    _assert_exact(g2, merged, merged)
+    np.testing.assert_array_equal(live_keys(g2), merged)
+
+
+def test_needs_rebuild_on_capacity_exhaustion():
+    table = np.arange(1, 9, dtype=np.uint64) * np.uint64(1 << 32)
+    g = build("GAPPED", table, leaf_cap=4, fill=1.0, delta_cap=4)
+    # leaves are built full (fill=1.0): every fresh key overflows, and
+    # compaction cannot rebalance past L*cap live keys
+    rng = np.random.default_rng(5)
+    with pytest.raises(NeedsRebuild, match="larger spec"):
+        for _ in range(16):
+            batch = rng.integers(1, 1 << 35, size=4, dtype=np.uint64)
+            g, _ = g.insert_batch(np.setdiff1d(batch, live_keys(g)))
+
+
+# ---------------------------------------------------------------------------
+# predecessors answered from each tier
+# ---------------------------------------------------------------------------
+
+
+def test_predecessor_from_leaf_delta_and_merged_tiers():
+    table, g = _crowded_leaf_setup()
+    batch = np.uint64(1000) + np.arange(1, 9, dtype=np.uint64) * np.uint64(100)
+    g, rep = g.insert_batch(batch)
+    assert rep.overflowed == 8  # the whole batch lives in the delta
+    merged = np.union1d(table, batch)
+    # predecessor key in the delta only (1150 -> 1100), in the main
+    # tier only (64000+5 -> 64000), the shared boundary (2000+1 ->
+    # 2000), and below everything (-> NO_PRED)
+    q = np.asarray([1150, 64005, 2001, 999], dtype=np.uint64)
+    want = true_ranks(merged, q)
+    assert want[-1] == NO_PRED
+    for be in g.backends():
+        np.testing.assert_array_equal(_lookup(g, q, backend=be), want, err_msg=be)
+
+
+def test_backend_parity_after_inserts(backend):
+    rng = np.random.default_rng(77)
+    table = np.unique(rng.integers(1, 2**62, size=2000, dtype=np.uint64))
+    g = build("GAPPED", table, leaf_cap=64, fill=0.75, delta_cap=256)
+    fresh = np.setdiff1d(
+        np.unique(rng.integers(1, 2**62, size=300, dtype=np.uint64)), table
+    )
+    g, rep = g.insert_batch(fresh)
+    assert rep.absorbed + rep.overflowed == len(fresh)
+    merged = np.union1d(table, fresh)
+    q = np.concatenate([rng.choice(merged, 256), rng.integers(0, 2**62, 256, dtype=np.uint64)])
+    q = q.astype(np.uint64)
+    if backend not in g.backends():
+        with pytest.raises(ValueError, match="supports backends"):
+            _lookup(g, q, backend=backend)
+        return
+    np.testing.assert_array_equal(_lookup(g, q, backend=backend), true_ranks(merged, q))
+
+
+# ---------------------------------------------------------------------------
+# trace discipline: pow2-bucketed insert batches, one compact trace
+# ---------------------------------------------------------------------------
+
+
+def test_insert_traces_bucket_by_batch_size():
+    table = np.arange(1, 257, dtype=np.uint64) * np.uint64(10_000)
+    g = build("GAPPED", table, leaf_cap=16, fill=0.5, delta_cap=64)
+    ix.reset_trace_counts()
+    base = np.uint64(5)
+    g, _ = g.insert_batch(base + np.arange(3, dtype=np.uint64))  # bucket 4
+    g, _ = g.insert_batch(base + np.uint64(100) + np.arange(4, dtype=np.uint64))  # bucket 4
+    g, _ = g.insert_batch(base + np.uint64(200) + np.arange(5, dtype=np.uint64))  # bucket 8
+    counts = ix.trace_counts()
+    assert counts[("GAPPED", "insert")] == 2  # two pow2 buckets, three batches
+    g = g.compact()
+    g2, _ = g.insert_batch(base + np.uint64(300) + np.arange(6, dtype=np.uint64))  # bucket 8
+    counts = ix.trace_counts()
+    assert counts[("GAPPED", "insert")] == 2
+    assert counts[("GAPPED", "compact")] == 1
+
+
+# ---------------------------------------------------------------------------
+# sharded + tier write surface
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_insert_compact_and_fence_discipline():
+    from repro.dist import ShardedIndex, compact_shard, insert_into_shard, sharded_lookup
+    from repro.dist.sharded_index import route_owners
+
+    rng = np.random.default_rng(3)
+    table = np.unique(rng.integers(1, 2**62, size=3000, dtype=np.uint64))
+    spec = GappedSpec(leaf_cap=64, fill=0.75, delta_cap=128)
+    sidx = ShardedIndex.build(spec, table, n_shards=4)
+
+    fresh = np.setdiff1d(np.unique(rng.integers(1, 2**62, size=400, dtype=np.uint64)), table)
+    owners = np.asarray(route_owners(sidx.fences, fresh))
+    for s in range(4):
+        mine = fresh[owners == s]
+        if len(mine):
+            sidx, rep = insert_into_shard(sidx, s, mine)
+            assert rep.absorbed + rep.overflowed + rep.duplicates == len(mine)
+    merged = np.union1d(table, fresh)
+    q = np.concatenate([rng.choice(merged, 256), rng.integers(0, 2**62, 256, dtype=np.uint64)])
+    q = q.astype(np.uint64)
+    for be in ("xla", "bbs", "ref"):
+        got = np.asarray(sharded_lookup(sidx, q, mode="ref", backend=be))
+        np.testing.assert_array_equal(got, true_ranks(merged, q), err_msg=be)
+
+    for s in range(4):
+        sidx = compact_shard(sidx, s)
+    assert int(np.asarray(sidx.index.arrays["delta_count"]).sum()) == 0
+    got = np.asarray(sharded_lookup(sidx, q, mode="ref"))
+    np.testing.assert_array_equal(got, true_ranks(merged, q))
+
+    # a key owned by shard 3 cannot be inserted into shard 0
+    stray = np.asarray([merged[-1] - np.uint64(1)], dtype=np.uint64)
+    if int(route_owners(sidx.fences, stray)[0]) != 0:
+        with pytest.raises(ValueError, match="fence"):
+            insert_into_shard(sidx, 0, stray)
+
+
+def test_tuned_tier_gapped_absorbs_without_rebuilds():
+    from repro.tune import RebuildPolicy, TunedTier
+
+    rng = np.random.default_rng(9)
+    table = np.unique(rng.integers(1, 2**62, size=4000, dtype=np.uint64))
+    tier = TunedTier(
+        table,
+        n_shards=4,
+        policy=RebuildPolicy(
+            shard_refresh_frac=0.02, retune_frac=5.0, n_queries=128, kinds=("GAPPED", "RMI")
+        ),
+        spec=GappedSpec(leaf_cap=64, fill=0.75, delta_cap=128),
+    )
+    drift = np.setdiff1d(np.unique(rng.integers(1, 2**62, size=600, dtype=np.uint64)), table)
+    tier.insert_batch(drift)
+    c = tier.counters
+    assert c.absorbed + c.overflowed == len(drift)
+    assert c.shard_refreshes == 0 and c.forced_restacks == 0 and c.retunes == 0
+    merged = np.union1d(table, drift)
+    q = rng.choice(merged, 512).astype(np.uint64)
+    np.testing.assert_array_equal(
+        np.asarray(tier.lookup(q, mode="ref")), true_ranks(merged, q)
+    )
+
+
+def test_tier_deprecation_wrappers_still_work():
+    from repro.tune import RebuildPolicy, TunedTier
+
+    rng = np.random.default_rng(11)
+    table = np.unique(rng.integers(1, 2**62, size=1500, dtype=np.uint64))
+    tier = TunedTier(
+        table,
+        n_shards=2,
+        policy=RebuildPolicy(shard_refresh_frac=0.5, retune_frac=5.0, n_queries=64),
+        spec=GappedSpec(leaf_cap=64, fill=0.75, delta_cap=128),
+    )
+    fresh = np.setdiff1d(np.asarray([12345, 67890], dtype=np.uint64), table)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        tier.ingest(fresh)  # -> insert_batch
+        tier.maybe_rebuild()  # -> maybe_compact
+    assert sum(issubclass(x.category, DeprecationWarning) for x in w) == 2
+    merged = np.union1d(table, fresh)
+    q = rng.choice(merged, 256).astype(np.uint64)
+    np.testing.assert_array_equal(
+        np.asarray(tier.lookup(q, mode="ref")), true_ranks(merged, q)
+    )

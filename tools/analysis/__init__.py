@@ -1,7 +1,7 @@
 """repro.analysis — project-specific static-analysis pass.
 
-Six rule families, each grounded in a bug this repo actually shipped (or
-a contract a past PR had to retrofit):
+Seven rule families, each grounded in a bug this repo actually shipped
+(or a contract a past PR had to retrofit):
 
 ====  =========================  ==================================================
 R1    salted-hash seeding        PR 5: ``seed + hash(name)`` made bench tables
@@ -14,6 +14,8 @@ R4    registry/pytree contract   registered kinds must grid/stack/account —
                                  the code analogue of docs_check's docs matrix
 R5    magic sentinel literal     raw ``-2``/``-1`` where DROPPED/NO_PRED exist
 R6    f64 in kernel body         TPU kernels are f32/i32; f64 belongs on the host
+R7    removed-API resurrection   the mutation-API redesign deleted the PR 1
+                                 shims; this keeps the old names gone
 ====  =========================  ==================================================
 
 Run ``python -m tools.analysis --check`` (CI gate), or pass explicit
@@ -43,6 +45,7 @@ from .rules_trace import TraceDisciplineRule
 from .rules_contract import RegistryContractRule
 from .rules_sentinel import MagicSentinelRule
 from .rules_f64 import KernelF64Rule
+from .rules_removed import RemovedApiRule
 
 #: the registered pass, in rule-id order
 ALL_RULES = (
@@ -52,6 +55,7 @@ ALL_RULES = (
     RegistryContractRule(),
     MagicSentinelRule(),
     KernelF64Rule(),
+    RemovedApiRule(),
 )
 
 

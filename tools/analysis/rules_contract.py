@@ -10,9 +10,11 @@ registry and probing each registered kind:
 * the spec class round-trips through ``spec_for(kind)`` and contributes
   a non-empty ``default_grid`` of registered specs (the Pareto tuner's
   enrolment contract);
-* a :class:`~repro.index.impls.QueryImpl` exists with ``intervals``,
-  ``space_bytes``, ``pallas`` and ``pallas_batched`` — required since
-  ``"pallas"`` is in every backend tuple;
+* a :class:`~repro.index.impls.QueryImpl` exists with ``intervals``
+  and ``space_bytes``; its ``backends`` honesty tuple is a subset of
+  ``BACKENDS``, and ``pallas``/``pallas_batched`` are required exactly
+  when the kind *claims* the ``"pallas"`` backend (GAPPED legitimately
+  claims only ``xla``/``bbs``/``ref``);
 * ``BATCH_BACKENDS`` == ``TIER_BACKENDS`` ⊆ ``BACKENDS`` — a backend
   claimed by the batched builder must be claimable by the sharded tier
   and known to ``Index.lookup``;
@@ -23,7 +25,15 @@ registry and probing each registered kind:
   trip-count static is missing from ``_STEP_KEYS`` fails here instead of
   deep inside a tier refresh;
 * ``space_bytes() <= nbytes()`` on the built artifact (the PR 3
-  model-constituent accounting invariant).
+  model-constituent accounting invariant);
+* the **mutation probe**: every kind in ``updatable_kinds()`` must
+  absorb/overflow an insert batch with a coherent
+  :class:`~repro.index.mutation.InsertReport`, stay bit-exact against
+  ``searchsorted`` on the merged keyset (including with a non-empty
+  delta, where ``space_bytes() <= nbytes()`` must still hold), and
+  drain the delta on ``compact()``; every *static* kind must raise
+  ``TypeError`` from ``insert_batch`` (the capability is per-kind, not
+  assumed).
 
 Runs only on full-tree scans (it imports jax); findings anchor at the
 registration site ``src/repro/index/impls.py``.
@@ -51,6 +61,59 @@ def _finding(message: str, hint: str = "") -> Finding:
     )
 
 
+def _probe_mutation(kind, idx, table, np):
+    """Exercise the ``insert_batch``/``compact`` lifecycle of one
+    updatable kind against searchsorted ground truth on the merged keys."""
+    rng = np.random.default_rng(17)
+    fresh = np.setdiff1d(
+        np.unique(rng.integers(1, int(table.max()), size=96, dtype=np.uint64)),
+        table,
+    )
+    if not len(fresh):  # pragma: no cover - 96 draws over a huge range
+        return
+    try:
+        idx2, rep = idx.insert_batch(fresh)
+    except Exception as e:
+        yield _finding(f"kind {kind!r}: insert_batch raised {e!r} on a small in-range batch")
+        return
+    if rep.requested != len(fresh) or rep.absorbed + rep.overflowed + rep.duplicates != rep.requested:
+        yield _finding(
+            f"kind {kind!r}: InsertReport does not add up "
+            f"(requested={rep.requested}, absorbed={rep.absorbed}, "
+            f"overflowed={rep.overflowed}, duplicates={rep.duplicates})"
+        )
+    merged = np.union1d(table, fresh)
+    queries = np.concatenate([merged, fresh + np.uint64(1)])
+    truth = np.searchsorted(merged, queries, side="right") - 1
+    for be in idx2.backends():
+        got = np.asarray(idx2.lookup(table, queries, backend=be))
+        if not np.array_equal(got, truth):
+            yield _finding(
+                f"kind {kind!r}: post-insert lookup (backend {be!r}) disagrees "
+                f"with searchsorted on the merged keyset"
+            )
+    if rep.delta_count > 0:
+        sb, nb = idx2.space_bytes(), idx2.nbytes()
+        if not (0 < sb <= nb):
+            yield _finding(
+                f"kind {kind!r}: space_bytes()={sb} outside (0, nbytes()={nb}] "
+                f"with a non-empty delta buffer"
+            )
+    try:
+        idx3 = idx2.compact()
+    except Exception as e:
+        yield _finding(f"kind {kind!r}: compact() raised {e!r}")
+        return
+    if "delta_count" in idx3.arrays and int(np.asarray(idx3.arrays["delta_count"]).sum()):
+        yield _finding(f"kind {kind!r}: compact() left a non-empty delta buffer")
+    got = np.asarray(idx3.lookup(table, queries, backend="xla"))
+    if not np.array_equal(got, truth):
+        yield _finding(
+            f"kind {kind!r}: post-compact lookup disagrees with searchsorted "
+            f"on the merged keyset"
+        )
+
+
 class RegistryContractRule(ProjectRule):
     id = "R4"
     title = "registry/pytree contract"
@@ -65,8 +128,11 @@ class RegistryContractRule(ProjectRule):
         if str(src) not in sys.path:
             sys.path.insert(0, str(src))
         try:
+            import numpy as np
+
             from repro.index import BACKENDS, registry
             from repro.index.impls import query_impl
+            from repro.index.mutation import updatable_kinds
             from repro.dist.sharded_index import _STEP_KEYS, _harmonize, stack_indexes
             from repro.tune.batched import BATCH_BACKENDS
             from repro.dist.sharded_index import TIER_BACKENDS
@@ -99,8 +165,6 @@ class RegistryContractRule(ProjectRule):
                 "a kind answered batched must be answerable in a tier (both run "
                 "the same batched kernels)",
             )
-        need_pallas = "pallas" in set(BACKENDS) | set(BATCH_BACKENDS) | set(TIER_BACKENDS)
-
         # --- probe tables: one easy (near-uniform), one hard (clustered) ---
         t_easy = distributions.generate("face", 512, seed=11)
         t_hard = distributions.generate("osm", 512, seed=13)
@@ -141,14 +205,22 @@ class RegistryContractRule(ProjectRule):
             for attr in ("intervals", "space_bytes"):
                 if not callable(getattr(impl, attr, None)):
                     yield _finding(f"kind {kind!r}: QueryImpl.{attr} is not callable")
-            if need_pallas:
+            claimed_by_kind = tuple(getattr(impl, "backends", ()) or BACKENDS)
+            unknown = set(claimed_by_kind) - set(BACKENDS)
+            if unknown:
+                yield _finding(
+                    f"kind {kind!r}: QueryImpl.backends claims {sorted(unknown)} "
+                    f"unknown to repro.index.BACKENDS {tuple(BACKENDS)}"
+                )
+            if "pallas" in claimed_by_kind:
                 for attr in ("pallas", "pallas_batched"):
                     if getattr(impl, attr, None) is None:
                         yield _finding(
                             f"kind {kind!r}: QueryImpl.{attr} is missing but "
                             f"'pallas' is a claimed backend",
                             "wire the fused kernel or the k-ary fallback "
-                            "(_kary_pallas_fallback / _kary_pallas_batched)",
+                            "(_kary_pallas_fallback / _kary_pallas_batched), or "
+                            "drop 'pallas' from the kind's backends tuple",
                         )
 
             # --- build + stacking probe ---
@@ -196,3 +268,22 @@ class RegistryContractRule(ProjectRule):
                     f"kind {kind!r}: stacked leaves {sorted(missing)} do not "
                     f"match the single-index leaf set"
                 )
+
+            # --- mutation probe: updatability is a per-kind capability ---
+            if kind in updatable_kinds():
+                yield from _probe_mutation(kind, i_easy, t_easy, np)
+            else:
+                try:
+                    i_easy.insert_batch(np.asarray([t_easy[0]], dtype=np.uint64))
+                except TypeError:
+                    pass
+                except Exception as e:
+                    yield _finding(
+                        f"kind {kind!r}: static kind raised {e!r} from "
+                        f"insert_batch — the contract is TypeError"
+                    )
+                else:
+                    yield _finding(
+                        f"kind {kind!r}: static kind accepted insert_batch — "
+                        f"either register a Mutator or let mutation raise TypeError"
+                    )

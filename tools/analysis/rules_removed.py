@@ -1,0 +1,105 @@
+"""R7 — removed-API resurrection: deleted shim names must stay gone.
+
+The mutation-API redesign finished the PR 1 migration by *deleting* the
+deprecated shims: ``repro.core.build_index`` / ``repro.core.KINDS``
+(use ``repro.index.build`` / ``repro.index.kinds()``),
+``prepare_rmi_kernel_index`` / ``fused_rmi_search`` /
+``RMIKernelIndex`` (the kernel re-encoding is folded into ``Index``
+build; ``Index.lookup(..., backend="pallas")`` runs the fused kernel),
+and the ``.rmi`` alias on ``LearnedKeyedEmbedding`` (use ``.index``).
+
+A later PR re-introducing any of these names — as a definition, an
+import, or a ``repro.core``/``repro.kernels`` attribute access — would
+silently resurrect the two-API split this codebase just paid to close.
+This rule flags:
+
+* any definition (``def``/``class``/assignment) of a banned name,
+* any ``import``/``from ... import`` binding one,
+* any attribute access spelling one (``ops.fused_rmi_search``),
+* ``KINDS`` only when imported from / accessed on ``repro.core`` (the
+  bare word is too common to ban outright).
+
+String/docstring mentions never flag — prose may reference history.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .framework import AstRule, Module
+
+#: identifiers that must not reappear anywhere in the scanned tree
+BANNED_NAMES = frozenset(
+    {"build_index", "prepare_rmi_kernel_index", "fused_rmi_search", "RMIKernelIndex"}
+)
+#: names banned only in a repro.core context (import-from or attribute)
+BANNED_CORE_ONLY = frozenset({"KINDS"})
+_CORE_MODULES = ("repro.core", "repro.core.builder")
+
+_REPLACEMENT = {
+    "build_index": "repro.index.build",
+    "KINDS": "repro.index.kinds()",
+    "prepare_rmi_kernel_index": 'repro.index.build + lookup(backend="pallas")',
+    "fused_rmi_search": 'Index.lookup(..., backend="pallas")',
+    "RMIKernelIndex": "repro.index.Index (k_* leaves)",
+}
+
+
+def _is_core_module(modname: str | None) -> bool:
+    return modname is not None and (
+        modname in _CORE_MODULES or modname.startswith("repro.core")
+    )
+
+
+class RemovedApiRule(AstRule):
+    id = "R7"
+    title = "removed-API resurrection"
+    blurb = (
+        "deleted pre-unified-API shims (`build_index`, `core.KINDS`, "
+        "`prepare_rmi_kernel_index`, `fused_rmi_search`, `RMIKernelIndex`) "
+        "reappearing as definitions, imports, or attribute accesses"
+    )
+
+    def check_module(self, mod: Module):
+        for node in ast.walk(mod.tree):
+            name, context = self._banned_use(node)
+            if name is not None:
+                yield mod.finding(
+                    self.id,
+                    node,
+                    f"removed API {name!r} {context}",
+                    hint=f"use {_REPLACEMENT[name]} instead",
+                )
+
+    @staticmethod
+    def _banned_use(node):
+        """(banned_name, context) for a violating node, else (None, None)."""
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            if node.name in BANNED_NAMES:
+                return node.name, "redefined"
+        elif isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name) and t.id in BANNED_NAMES:
+                    return t.id, "redefined"
+        elif isinstance(node, ast.ImportFrom):
+            for alias in node.names:
+                if alias.name in BANNED_NAMES:
+                    return alias.name, f"imported from {node.module or '.'}"
+                if alias.name in BANNED_CORE_ONLY and _is_core_module(node.module):
+                    return alias.name, f"imported from {node.module}"
+        elif isinstance(node, ast.Attribute):
+            if node.attr in BANNED_NAMES:
+                return node.attr, "attribute access"
+            if node.attr in BANNED_CORE_ONLY:
+                # only flag KINDS on a repro.core-ish base (core.KINDS)
+                base = node.value
+                parts = []
+                while isinstance(base, ast.Attribute):
+                    parts.append(base.attr)
+                    base = base.value
+                if isinstance(base, ast.Name):
+                    parts.append(base.id)
+                dotted = ".".join(reversed(parts))
+                if dotted.endswith("core") or _is_core_module(dotted):
+                    return node.attr, f"attribute access on {dotted}"
+        return None, None
