@@ -3,12 +3,13 @@
 ``PYTHONPATH=src python -m benchmarks.run [--only NAME]``
 prints ``name,us_per_call,derived`` CSV lines (common.emit).
 
-``--trend`` switches to the artifact pipeline: the four JSON-artifact
+``--trend`` switches to the artifact pipeline: the five JSON-artifact
 benchmarks run at the CI bench-smoke configuration (smoke scale, the
 same flags ``.github/workflows/ci.yml`` passes), artifacts land in
 ``--artifacts-dir``, and each is immediately diffed against the
 committed baselines by :mod:`benchmarks.trend` — one command reproduces
-the whole CI bench gate locally::
+the whole CI bench gate locally, ending with a one-line PASS summary
+per artifact (checked-metric count + worst latency ratio)::
 
     PYTHONPATH=src python -m benchmarks.run --trend
 """
@@ -61,7 +62,7 @@ def run_suites(only: str | None) -> None:
 
 
 def run_trend(artifacts_dir: Path, baselines: Path, tolerance: float) -> int:
-    """Generate the four JSON artifacts at smoke scale, then diff each
+    """Generate the five JSON artifacts at smoke scale, then diff each
     against the committed baselines.  Returns the number of failures."""
     # common.py reads SCALE/N_QUERIES from the environment at import
     # time, so pin the smoke config BEFORE any benchmark module import
@@ -69,10 +70,18 @@ def run_trend(artifacts_dir: Path, baselines: Path, tolerance: float) -> int:
     for k, v in SMOKE_ENV.items():
         os.environ.setdefault(k, v)
 
-    from . import kernel_roofline, pareto_frontier, sharded_lookup, trend, write_workload
+    from . import (
+        kernel_roofline,
+        pareto_frontier,
+        serve_slo,
+        sharded_lookup,
+        trend,
+        write_workload,
+    )
 
     artifacts_dir.mkdir(parents=True, exist_ok=True)
     fails: list = []
+    produced: list = []
 
     def produce(name: str, make) -> None:
         t0 = time.perf_counter()
@@ -87,6 +96,7 @@ def run_trend(artifacts_dir: Path, baselines: Path, tolerance: float) -> int:
         path.write_text(json.dumps(report, indent=2) + "\n")
         fresh = trend.check_artifact(path, baselines, tolerance)
         fails.extend(fresh)
+        produced.append((name, path, len(fresh)))
         status = "OK" if not fresh else f"{len(fresh)} trend failure(s)"
         print(
             f"# === {name} done in {time.perf_counter() - t0:.1f}s -> {path} [{status}] ===",
@@ -106,12 +116,28 @@ def run_trend(artifacts_dir: Path, baselines: Path, tolerance: float) -> int:
     produce("kernel_roofline", kernel_roofline.run)
     produce("write_workload", write_workload.run)
 
+    def _slo():
+        # also export the registry snapshot CI uploads next to the artifact
+        report = serve_slo.run(jsonl=str(artifacts_dir / "serve_slo_snapshot.jsonl"))
+        # the absolute SLO gates (drop-rate ceiling, sane quantiles,
+        # exactness); the baseline diff is produce()'s trend check
+        fails.extend(f"serve_slo: {f}" for f in serve_slo.check_slo(report))
+        return report
+
+    produce("serve_slo", _slo)
+
     for f in fails:
         print(f"BENCH TREND: {f}", file=sys.stderr)
+    for name, path, n_fail in produced:
+        if n_fail:
+            print(f"# {name}: FAIL ({n_fail} problem(s))", flush=True)
+            continue
+        n, ratio, where = trend.summarize_artifact(path, baselines)
+        print(f"# {name}: PASS ({n} metrics checked, max latency ratio {ratio:.2f}x @ {where})", flush=True)
     if fails:
         print(f"bench-trend: FAILED ({len(fails)} problem(s))", file=sys.stderr)
     else:
-        print(f"bench-trend: OK (4 artifacts vs {baselines})")
+        print(f"bench-trend: OK ({len(produced)} artifacts vs {baselines})")
     return len(fails)
 
 

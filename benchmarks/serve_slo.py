@@ -1,0 +1,190 @@
+"""Serving SLO benchmark: Zipf + shifting query-mix over ``TunedTier``.
+
+The traffic harness the ROADMAP's SLO item asks for, sized to the
+bench-smoke budget: a pinned-spec tier serves a skewed (Zipf) query
+stream whose hot set *shifts* between phases (and picks up a growing
+miss fraction), every batch timed through
+:func:`repro.obs.timing.timed_lookup` — so p50/p99 come from the
+``lookup_latency_us`` histogram snapshot, the way a production SLO is
+actually evaluated (distributions, not means; the SOSD methodology).
+
+Gates (``--check``, and ``benchmarks/trend.py`` via the committed
+``benchmarks/baselines/serve_slo.json``):
+
+* ``slo/drop_rate`` — must stay ≤ :data:`DROP_RATE_SLO` (absolute);
+* ``slo/p50_us`` / ``slo/p99_us`` — device-phase histogram quantiles,
+  ratio-gated against the baseline (CI machines vary);
+* ``slo/exact`` — a spot-check batch must bit-match ``true_ranks``
+  (pinned 1.0);
+* ``slo/compiles`` + trace counts — the serving loop keeps the
+  one-trace discipline: ONE shared lookup trace + ONE owner-histogram
+  trace + ONE obs histogram-update trace (exact).
+
+``python -m benchmarks.serve_slo [--json OUT] [--jsonl SNAP] [--check]``;
+``--jsonl`` exports the full registry snapshot in the stable JSONL
+schema (``python -m repro.obs dump`` reads it).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import numpy as np
+
+import repro  # noqa: F401
+from repro import index as ix
+from repro import obs
+from repro.core.cdf import true_ranks
+from repro.data import distributions
+from repro.tune.rebuild import RebuildPolicy, TunedTier
+
+from .common import SCALE, emit as _emit
+
+_METRICS: dict = {}
+
+#: absolute SLO: fraction of queries the capacity-factored exchange may drop
+DROP_RATE_SLO = 0.01
+#: traffic shape: phases shift the Zipf hot set and raise the miss mix
+PHASES = 3
+BATCHES_PER_PHASE = 6
+BATCH = 1024
+ZIPF_A = 1.15
+
+
+def emit(name: str, value: float, derived: str = ""):
+    _METRICS[name] = float(value)
+    _emit(name, value, derived)
+
+
+def _phase_queries(rng, table: np.ndarray, phase: int) -> np.ndarray:
+    """One batch of the phase's traffic: Zipf ranks around a shifting
+    hot offset, plus a growing fraction of near-miss probes (key+1 —
+    a legitimate predecessor query that is not a stored key)."""
+    n = len(table)
+    ranks = (rng.zipf(ZIPF_A, size=BATCH) - 1 + phase * n // PHASES) % n
+    qs = table[ranks]
+    miss = rng.random(BATCH) < 0.05 * phase
+    return np.where(miss & (qs < np.uint64(np.iinfo(np.uint64).max)), qs + np.uint64(1), qs)
+
+
+def run(jsonl: str | None = None) -> dict:
+    _METRICS.clear()
+    ix.reset_trace_counts()
+    obs.reset()
+    rng = np.random.default_rng(29)
+    n = max(1 << 13, int((1 << 18) * SCALE))
+    table = distributions.generate("osm", n, seed=11)
+
+    tier = TunedTier(
+        table,
+        n_shards=4,
+        policy=RebuildPolicy(backend="xla"),
+        spec=ix.RMISpec(b=512),
+    )
+
+    # warm the serving path once (same batch shape -> same traces), so
+    # the latency histogram measures steady-state serving, not compile
+    tier.lookup(_phase_queries(rng, table, 0))
+
+    # ---- serve the shifting Zipf stream, one histogram per batch ---------
+    exact = True
+    for phase in range(PHASES):
+        for _ in range(BATCHES_PER_PHASE):
+            qs = _phase_queries(rng, table, phase)
+            with obs.span("serve_slo.batch"):
+                out = obs.timed_lookup(tier, qs, tier="slo")
+            # spot-check every phase's last batch against searchsorted
+            got = np.asarray(out)
+        exact &= bool((got == true_ranks(table, np.asarray(qs))).all())
+
+    # ---- render the SLO metrics from the registry snapshot ---------------
+    snap = obs.snapshot()
+    m = tier.metrics()
+    for phase_name, phase in (("host", "host"), ("", "device")):
+        s = obs.find_sample(
+            snap, "lookup_latency_us", kind="RMI", backend="xla", tier="slo", phase=phase
+        )
+        prefix = f"slo/{phase_name}_" if phase_name else "slo/"
+        emit(f"{prefix}p50_us", obs.hist_quantile(s, 0.50), f"count={s['count']}")
+        emit(f"{prefix}p99_us", obs.hist_quantile(s, 0.99))
+    emit(
+        "slo/queries",
+        float(m["routing"]["queries"]),
+        f"{PHASES} phases x {BATCHES_PER_PHASE} + warmup",
+    )
+    emit("slo/drop_rate", m["routing"]["drop_rate"], f"SLO <= {DROP_RATE_SLO}")
+    emit("slo/imbalance_peak", m["routing"]["imbalance_peak"], "Zipf skew, peak shard load")
+    emit("slo/exact", float(exact), "per-phase spot batches vs searchsorted")
+
+    traces = {f"{k}/{b}": v for (k, b), v in sorted(ix.trace_counts().items())}
+    emit("slo/compiles", float(sum(traces.values())), "total traces (exact gate)")
+
+    if jsonl:
+        with open(jsonl, "w") as f:
+            f.write(obs.to_jsonl(obs.snapshot()))
+    return {
+        "metrics": dict(_METRICS),
+        "slo": {"drop_rate_max": DROP_RATE_SLO},
+        "trace_counts": traces,
+        "total_traces": sum(traces.values()),
+    }
+
+
+def check_slo(report: dict) -> list:
+    """The absolute SLO gates: drop-rate ceiling, sane (non-degenerate)
+    histogram quantiles, exactness.  Baseline-free — these hold on any
+    machine at any scale."""
+    fails = []
+    m = report["metrics"]
+    if m["slo/drop_rate"] > report["slo"]["drop_rate_max"]:
+        fails.append(
+            f"drop_rate {m['slo/drop_rate']:.4f} > SLO {report['slo']['drop_rate_max']}"
+        )
+    if not 0 < m["slo/p50_us"] <= m["slo/p99_us"]:
+        fails.append(f"degenerate latency quantiles: p50={m['slo/p50_us']}, p99={m['slo/p99_us']}")
+    if m["slo/exact"] != 1.0:
+        fails.append("slo/exact != 1 (served ranks diverged from searchsorted)")
+    return fails
+
+
+def check(report: dict, baseline_path: str, tol: float = 8.0) -> list:
+    """The full gate: :func:`check_slo` plus the bench-trend diff
+    (ratio-gated latencies, exact traces) against the committed
+    baseline."""
+    from pathlib import Path
+
+    from . import trend
+
+    base = Path(baseline_path)
+    return check_slo(report) + trend.check_artifact_data(base.name, report, base.parent, tol)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default=None, help="write metrics + trace counts as JSON")
+    ap.add_argument("--jsonl", default=None, help="export the registry snapshot as JSONL")
+    ap.add_argument(
+        "--check",
+        action="store_true",
+        help="apply the SLO gates against benchmarks/baselines/serve_slo.json",
+    )
+    ap.add_argument("--baseline", default="benchmarks/baselines/serve_slo.json")
+    ap.add_argument("--tolerance", type=float, default=8.0)
+    args = ap.parse_args()
+    report = run(jsonl=args.jsonl)
+    if args.json:
+        with open(args.json, "w") as f:
+            f.write(json.dumps(report, indent=2) + "\n")
+    if args.check:
+        fails = check(report, args.baseline, args.tolerance)
+        for f in fails:
+            print(f"SERVE SLO: {f}", file=sys.stderr)
+        if fails:
+            sys.exit(1)
+        print("serve_slo: SLO gates OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -142,22 +142,69 @@ _CHECKERS = {
     # same shape/gates as kernel_roofline: metric-set equality, */exact
     # pinned at 1.0, *compiles + trace counts exact, latency by ratio
     "write_workload": _check_kernel_roofline,
+    "serve_slo": _check_kernel_roofline,
 }
 
 
-def check_artifact(fresh_path: Path, baseline_dir: Path, tol: float) -> list:
-    stem = fresh_path.stem
+def check_artifact_data(name: str, fresh: dict, baseline_dir: Path, tol: float) -> list:
+    """Diff an in-memory fresh artifact against its committed baseline
+    (the path-free core of :func:`check_artifact` — benchmark --check
+    flags reuse it without writing the artifact first)."""
+    stem = Path(name).stem
     checker = next((fn for key, fn in _CHECKERS.items() if stem.startswith(key)), None)
     if checker is None:
-        return [f"{fresh_path.name}: no trend checker for this artifact"]
-    base_path = baseline_dir / fresh_path.name
+        return [f"{name}: no trend checker for this artifact"]
+    base_path = baseline_dir / name
     if not base_path.exists():
-        return [f"{fresh_path.name}: no baseline at {base_path} (commit one to start the trend)"]
-    with open(fresh_path) as f:
-        fresh = json.load(f)
+        return [f"{name}: no baseline at {base_path} (commit one to start the trend)"]
     with open(base_path) as f:
         base = json.load(f)
-    return checker(fresh_path.name, fresh, base, tol)
+    return checker(name, fresh, base, tol)
+
+
+def check_artifact(fresh_path: Path, baseline_dir: Path, tol: float) -> list:
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+    return check_artifact_data(fresh_path.name, fresh, baseline_dir, tol)
+
+
+#: numeric-leaf key hints treated as latency/throughput for summaries
+_LATENCY_HINTS = ("us", "ns", "per_s", "time", "latency")
+
+
+def _numeric_leaves(prefix: str, obj, out: dict) -> dict:
+    if isinstance(obj, dict):
+        for k in sorted(obj):
+            _numeric_leaves(f"{prefix}/{k}" if prefix else str(k), obj[k], out)
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            _numeric_leaves(f"{prefix}[{i}]", v, out)
+    elif isinstance(obj, (int, float)) and not isinstance(obj, bool):
+        out[prefix] = float(obj)
+    return out
+
+
+def summarize_artifact(fresh_path: Path, baseline_dir: Path) -> tuple:
+    """``(n_compared, max_latency_ratio, where)`` over the artifact's
+    numeric leaves vs its baseline — the one-line PASS summary
+    ``benchmarks/run.py --trend`` prints per artifact.  The max ratio is
+    taken over latency-ish leaves (``*us*``/``*ns*``/``*per_s*``/...)
+    where both sides are positive; ``where`` names the worst leaf."""
+    base_path = baseline_dir / fresh_path.name
+    with open(fresh_path) as f:
+        fresh = _numeric_leaves("", json.load(f), {})
+    with open(base_path) as f:
+        base = _numeric_leaves("", json.load(f), {})
+    common = sorted(set(fresh) & set(base))
+    worst, where = 1.0, "-"
+    for k in common:
+        if not any(h in k.lower() for h in _LATENCY_HINTS):
+            continue
+        if fresh[k] > 0 and base[k] > 0:
+            r = max(fresh[k] / base[k], base[k] / fresh[k])
+            if r > worst:
+                worst, where = r, k
+    return len(common), worst, where
 
 
 def main() -> None:

@@ -14,12 +14,12 @@ leaves there.
 
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 
 import numpy as np
 import jax.numpy as jnp
 
+from repro.obs.timing import stopwatch
 from . import search
 from .cdf import POS_DTYPE
 
@@ -118,7 +118,7 @@ class AtomicModel:
 
 
 def build_atomic(table_np: np.ndarray, degree: int = 1) -> AtomicModel:
-    t0 = time.perf_counter()
+    sw = stopwatch()
     n = len(table_np)
     kmin, kmax = table_np[0], table_np[-1]
     span = np.float64(kmax - kmin)
@@ -134,7 +134,7 @@ def build_atomic(table_np: np.ndarray, degree: int = 1) -> AtomicModel:
     else:
         coef = poly_fit(u, ranks, degree)
         eps = poly_exact_eps(coef, u, ranks, 0.0, 1.0)
-    dt = time.perf_counter() - t0
+    dt = sw.elapsed
     return AtomicModel(
         degree=degree,
         coef=jnp.asarray(coef),

@@ -12,12 +12,12 @@ are concatenated into one flat key array + offset table there.
 
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass
 
 import numpy as np
 import jax.numpy as jnp
 
+from repro.obs.timing import stopwatch
 from . import search
 from .cdf import POS_DTYPE
 
@@ -65,7 +65,7 @@ class BTreeModel:
 
 
 def build_btree(table_np: np.ndarray, fanout: int = 16) -> BTreeModel:
-    t0 = time.perf_counter()
+    sw = stopwatch()
     n = len(table_np)
     f = max(2, fanout)
     maxk = np.iinfo(np.uint64).max
@@ -87,7 +87,7 @@ def build_btree(table_np: np.ndarray, fanout: int = 16) -> BTreeModel:
     valid.reverse()
     # NOTE: level l holds first-keys of groups of level l+1; the *leaf*
     # level's groups index directly into the table.
-    dt = time.perf_counter() - t0
+    dt = sw.elapsed
     return BTreeModel(
         fanout=f,
         levels=[jnp.asarray(l) for l in levels],

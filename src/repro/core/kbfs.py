@@ -14,12 +14,12 @@ epilogue is the generic ``backend="bbs"`` path there.
 
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass
 
 import numpy as np
 import jax.numpy as jnp
 
+from repro.obs.timing import stopwatch
 from . import search
 from .atomic import poly_fit, poly_exact_eps, poly_eval_jnp
 from .cdf import POS_DTYPE
@@ -87,7 +87,7 @@ def _bounded_bbs(table, q, lo, hi):
 
 def build_ko(table_np: np.ndarray, k: int = 15) -> KOModel:
     """Fit L/Q/C per segment, keep the best (smallest exact eps)."""
-    t0 = time.perf_counter()
+    sw = stopwatch()
     n = len(table_np)
     k = max(1, min(k, n))
     seg_start = (np.arange(k + 1, dtype=np.int64) * n) // k
@@ -124,7 +124,7 @@ def build_ko(table_np: np.ndarray, k: int = 15) -> KOModel:
         kmins[s] = np.float64(kmin)
         inv_spans[s] = inv
 
-    dt = time.perf_counter() - t0
+    dt = sw.elapsed
     return KOModel(
         k=k,
         fences=jnp.asarray(fences),

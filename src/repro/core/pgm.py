@@ -23,13 +23,13 @@ arrays there so same-shape models share one jitted query trace.
 
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass
 from typing import List
 
 import numpy as np
 import jax.numpy as jnp
 
+from repro.obs.timing import stopwatch
 from . import search
 from .cdf import POS_DTYPE, chunked_corridor_scan
 
@@ -225,7 +225,7 @@ def build_pgm(table_np: np.ndarray, eps: int = 64, *, l0=None) -> PGMModel:
     level's ``(starts, slopes)`` — e.g. from the device scan fit
     (:func:`pgm_segments_scan` + :func:`segment_slopes`); the upper
     levels always recurse host-side over the segment first-keys."""
-    t0 = time.perf_counter()
+    sw = stopwatch()
     n = len(table_np)
     eps = max(int(eps), 1)
 
@@ -257,7 +257,7 @@ def build_pgm(table_np: np.ndarray, eps: int = 64, *, l0=None) -> PGMModel:
     level_rank0.reverse()
     level_sizes.reverse()
 
-    dt = time.perf_counter() - t0
+    dt = sw.elapsed
     return PGMModel(
         eps=eps,
         level_keys=level_keys,

@@ -14,12 +14,12 @@ padded to a power of two there for jit-cache sharing.
 
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass
 
 import numpy as np
 import jax.numpy as jnp
 
+from repro.obs.timing import stopwatch
 from . import search
 from .cdf import POS_DTYPE, chunked_corridor_scan
 from .pgm import SCAN_CHUNK
@@ -170,7 +170,7 @@ def build_rs(table_np: np.ndarray, eps: int = 32, r_bits: int = 12, *, knots=Non
     knot indices — e.g. from the device scan fit
     (:func:`rs_knots_scan`); the radix table and the verified error
     bound are always re-derived from them."""
-    t0 = time.perf_counter()
+    sw = stopwatch()
     n = len(table_np)
     keys = table_np.astype(np.float64)
     if knots is None:
@@ -198,7 +198,7 @@ def build_rs(table_np: np.ndarray, eps: int = 32, r_bits: int = 12, *, knots=Non
     pred = y1 + t * (y2 - y1)
     eps_eff = int(np.ceil(np.max(np.abs(pred - np.arange(n, dtype=np.float64))))) + 1
 
-    dt = time.perf_counter() - t0
+    dt = sw.elapsed
     return RSModel(
         eps=eps,
         eps_eff=max(eps_eff, 1),

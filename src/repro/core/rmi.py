@@ -15,13 +15,13 @@ become Index pytree leaves there.
 
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.obs.timing import stopwatch
 from . import search
 from .atomic import poly_fit, poly_eval_jnp, poly_eval_np
 from .cdf import POS_DTYPE
@@ -215,7 +215,7 @@ def _fit_root(u: np.ndarray, ranks: np.ndarray, root_type: str) -> np.ndarray:
 
 
 def build_rmi(table_np: np.ndarray, b: int = 1024, root_type: str = "linear") -> RMIModel:
-    t0 = time.perf_counter()
+    sw = stopwatch()
     n = len(table_np)
     b = max(2, min(b, n))
     kmin, kmax = table_np[0], table_np[-1]
@@ -270,7 +270,7 @@ def build_rmi(table_np: np.ndarray, b: int = 1024, root_type: str = "linear") ->
     width = np.diff(r)  # leaf rank-range widths (+3: one-ulp fence slack)
     max_window = int(np.max(np.minimum(2 * eps + 3, width + 3))) if b else 1
 
-    dt = time.perf_counter() - t0
+    dt = sw.elapsed
     return RMIModel(
         root_type=root_type,
         root_coef=jnp.asarray(root),

@@ -16,7 +16,6 @@ Pipeline, faithful to §3.2/§4:
 
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass
 from typing import Sequence
 
@@ -24,6 +23,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.obs.timing import stopwatch
 from .rmi import RMIModel, build_rmi, ROOT_TYPES
 
 
@@ -59,9 +59,9 @@ def measure_query_time(model, table_j, queries_j, reps: int = 3) -> float:
     out.block_until_ready()
     best = np.inf
     for _ in range(reps):
-        t0 = time.perf_counter()
+        sw = stopwatch()
         fn(table_j, queries_j).block_until_ready()
-        best = min(best, time.perf_counter() - t0)
+        best = min(best, sw.elapsed)
     return best / queries_j.shape[0]
 
 

@@ -77,13 +77,21 @@ from . import collectives
 DROPPED = -2
 
 # ---------------------------------------------------------------------------
-# Tier telemetry: routing imbalance + drop-rate counters
+# Tier telemetry: routing imbalance + drop-rate counters.
+#
+# The counters live in the repro.obs registry (``route_*`` metrics,
+# labeled by tier — "all" is the process-wide aggregate); everything
+# below is a thin view so the PR 2 call signatures keep working.  obs is
+# imported lazily inside the telemetry functions only: the telemetry-off
+# lookup path never pulls repro.obs in at call time.
 # ---------------------------------------------------------------------------
 
-_TIER_METRICS: dict = {}
+#: the tier label the global aggregate view reads
+_ALL_TIERS = "all"
 
 
 def _fresh_tier_metrics() -> dict:
+    """A zeroed caller-owned ``telemetry_sink`` dict (the PR 2 shape)."""
     return {
         "lookups": 0,
         "queries": 0,
@@ -96,20 +104,44 @@ def _fresh_tier_metrics() -> dict:
 
 
 def reset_tier_metrics() -> None:
-    _TIER_METRICS.clear()
-    _TIER_METRICS.update(_fresh_tier_metrics())
+    """Zero the registry-backed ``route_*`` counters (every tier label,
+    including the per-:class:`~repro.tune.rebuild.TunedTier` ones).
 
+    Caller-owned ``telemetry_sink`` dicts are **not** reset — the sink
+    contract is that the caller owns that dict's lifetime; zero it
+    yourself (or take a fresh :func:`_fresh_tier_metrics`)."""
+    from repro import obs
 
-reset_tier_metrics()
+    obs.reset(prefix="route_")
 
 
 def derived_tier_metrics(counters: dict) -> dict:
     """Raw routing counters + the derived rates (drop rate, mean
-    imbalance) — shared by the global view and per-tier sinks."""
-    m = dict(counters)
+    imbalance) — shared by the global view and per-tier sinks.  Missing
+    keys count as zero, so a zero-query (or empty) snapshot yields
+    well-defined 0.0 rates instead of dividing by zero."""
+    m = {**_fresh_tier_metrics(), **counters}
     m["drop_rate"] = m["dropped"] / m["queries"] if m["queries"] else 0.0
     m["imbalance_mean"] = m["routed_max"] / m["routed_even"] if m["routed_even"] else 0.0
     return m
+
+
+def _tier_counters_from_obs(tier: str) -> dict:
+    """Render one tier label's ``route_*`` registry samples back into the
+    PR 2 counter-dict shape."""
+    from repro import obs
+
+    snap = obs.snapshot(prefix="route_")
+    v = lambda name: obs.sample_value(snap, name, tier=tier)
+    return {
+        "lookups": int(v("route_lookups")),
+        "queries": int(v("route_queries")),
+        "dropped": int(v("route_dropped")),
+        "routed_max": int(v("route_max")),
+        "routed_even": v("route_even"),
+        "imbalance_last": v("route_imbalance_last"),
+        "imbalance_peak": v("route_imbalance_peak"),
+    }
 
 
 def tier_metrics() -> dict:
@@ -121,34 +153,54 @@ def tier_metrics() -> dict:
     ``drop_rate`` is the fraction of queries returned as
     :data:`DROPPED` by the capacity-factored exchange.  Surfaced by
     ``DecodeEngine.metrics()`` next to the lookup trace counts.  A
-    caller serving several tiers passes its own ``telemetry_sink`` to
-    :func:`sharded_lookup` for per-tier attribution (the global view
-    here aggregates all of them).
+    caller serving several tiers passes its own ``telemetry_sink`` (or a
+    ``telemetry_label``, which adds a per-tier ``route_*`` labelset in
+    the registry) to :func:`sharded_lookup` for per-tier attribution;
+    the global view here aggregates all of them.  Rendered from the
+    ``repro.obs`` registry — ``obs.snapshot(prefix="route_")`` exposes
+    the same counters with labels.
     """
-    return derived_tier_metrics(_TIER_METRICS)
+    return derived_tier_metrics(_tier_counters_from_obs(_ALL_TIERS))
 
 
 @partial(jax.jit, static_argnames=("n_shards",))
 def _owner_histogram(fences, queries, n_shards: int):
+    count_trace("obs:owner_hist", "jit")
     owners = route_owners(fences, queries)
     return jnp.bincount(owners.astype(jnp.int32), length=n_shards)
 
 
-def _record_tier_metrics(sidx: "ShardedIndex", queries, out, sink: dict | None = None) -> None:
+def _record_tier_metrics(
+    sidx: "ShardedIndex",
+    queries,
+    out,
+    sink: dict | None = None,
+    label: str | None = None,
+) -> None:
+    from repro import obs
+
     hist = np.asarray(_owner_histogram(sidx.fences, queries, sidx.n_shards))
     b = int(hist.sum())
     even = b / sidx.n_shards
     imb = float(hist.max() / even) if even > 0 else 0.0
     dropped = int(np.asarray(out == DROPPED).sum())
-    targets = [_TIER_METRICS] if sink is None else [_TIER_METRICS, sink]
-    for m in targets:
-        m["lookups"] += 1
-        m["queries"] += b
-        m["dropped"] += dropped
-        m["routed_max"] += int(hist.max())
-        m["routed_even"] += even
-        m["imbalance_last"] = imb
-        m["imbalance_peak"] = max(m["imbalance_peak"], imb)
+    tiers = [_ALL_TIERS] if label is None else [_ALL_TIERS, str(label)]
+    for t in tiers:
+        obs.metric("route_lookups").inc(tier=t)
+        obs.metric("route_queries").inc(b, tier=t)
+        obs.metric("route_dropped").inc(dropped, tier=t)
+        obs.metric("route_max").inc(int(hist.max()), tier=t)
+        obs.metric("route_even").inc(even, tier=t)
+        obs.metric("route_imbalance_last").set(imb, tier=t)
+        obs.metric("route_imbalance_peak").max(imb, tier=t)
+    if sink is not None:
+        sink["lookups"] += 1
+        sink["queries"] += b
+        sink["dropped"] += dropped
+        sink["routed_max"] += int(hist.max())
+        sink["routed_even"] += even
+        sink["imbalance_last"] = imb
+        sink["imbalance_peak"] = max(sink["imbalance_peak"], imb)
 
 _MAXKEY = np.uint64(np.iinfo(np.uint64).max)
 
@@ -622,6 +674,7 @@ def sharded_lookup(
     cap_factor: float = 2.0,
     telemetry: bool = False,
     telemetry_sink: dict | None = None,
+    telemetry_label: str | None = None,
 ):
     """Predecessor ranks of ``queries`` against the whole sharded tier.
 
@@ -657,12 +710,15 @@ def sharded_lookup(
         ranks = sharded_lookup(sidx, queries, mode="ref")
 
     ``telemetry=True`` additionally records per-call routing-imbalance
-    and drop-rate counters (:func:`tier_metrics`) — one extra jitted
+    and drop-rate counters into the ``repro.obs`` registry
+    (:func:`tier_metrics` is the aggregate view) — one extra jitted
     owner histogram plus a host sync, so serving loops opt in and
-    benchmarks stay untouched.  ``telemetry_sink`` (a counter dict in
-    :func:`_fresh_tier_metrics` shape) receives the same updates for
-    per-tier attribution when one process serves several tiers; the
-    global counters always aggregate.
+    benchmarks stay untouched.  ``telemetry_label`` attributes the same
+    counters to a per-tier ``route_*`` labelset when one process serves
+    several tiers (the ``tier="all"`` aggregate always updates);
+    ``telemetry_sink`` (a counter dict in :func:`_fresh_tier_metrics`
+    shape) is the legacy dict-based attribution and receives the same
+    updates.
     """
     if mode not in MODES:
         raise ValueError(f"unknown mode {mode!r}; choose from {MODES}")
@@ -704,7 +760,7 @@ def sharded_lookup(
         out = _lookup_a2a(sidx, padded, ctx.mesh, axes, backend, cap)
         out = out[:b] if pad else out
     if telemetry:
-        _record_tier_metrics(sidx, queries, out, telemetry_sink)
+        _record_tier_metrics(sidx, queries, out, telemetry_sink, telemetry_label)
     return out
 
 

@@ -99,11 +99,31 @@ def _mutator(index) -> Mutator:
     return m
 
 
+def _record_report(kind: str, report: "InsertReport") -> None:
+    """Aggregate an InsertReport into the ``mutation_*`` registry
+    counters (labeled by kind).  Host-side only: no extra dispatches,
+    no lookup-trace changes."""
+    from repro import obs
+
+    obs.metric("mutation_requested").inc(report.requested, kind=kind)
+    obs.metric("mutation_absorbed").inc(report.absorbed, kind=kind)
+    obs.metric("mutation_overflowed").inc(report.overflowed, kind=kind)
+    obs.metric("mutation_duplicates").inc(report.duplicates, kind=kind)
+    if report.compacted:
+        obs.metric("mutation_compactions").inc(kind=kind)
+
+
 def insert_batch(index, keys, *, auto_compact: bool = True):
     """Dispatch ``insert_batch`` to the kind's registered mutator."""
-    return _mutator(index).insert_batch(index, keys, auto_compact=auto_compact)
+    new, report = _mutator(index).insert_batch(index, keys, auto_compact=auto_compact)
+    _record_report(index.kind, report)
+    return new, report
 
 
 def compact(index):
     """Dispatch ``compact`` to the kind's registered mutator."""
-    return _mutator(index).compact(index)
+    out = _mutator(index).compact(index)
+    from repro import obs
+
+    obs.metric("mutation_compactions").inc(kind=index.kind)
+    return out

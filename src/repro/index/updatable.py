@@ -40,12 +40,12 @@ and cannot be stored as a live key.
 
 from __future__ import annotations
 
-import time
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.obs.timing import stopwatch
 from repro.core import search
 from repro.core.cdf import POS_DTYPE
 
@@ -172,7 +172,7 @@ GAPPED_IMPL = QueryImpl(
 
 
 def _build_gapped_index(spec: GappedSpec, table_np: np.ndarray) -> Index:
-    t0 = time.perf_counter()
+    sw = stopwatch()
     table = np.asarray(table_np, dtype=np.uint64)
     n = int(table.shape[0])
     if n == 0:
@@ -227,7 +227,7 @@ def _build_gapped_index(spec: GappedSpec, table_np: np.ndarray) -> Index:
     static = (("epi", _bucket_steps(max(cap, dcap))), ("ksteps", _bucket_steps(L)))
     info = {
         "name": f"GAPPED(cap={cap},fill={spec.fill},delta={dcap})",
-        "build_time": time.perf_counter() - t0,
+        "build_time": sw.elapsed,
         "n": n,
         "n_leaves": L,
         "leaf_cap": cap,

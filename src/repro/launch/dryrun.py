@@ -22,7 +22,6 @@ import argparse
 import json
 import math
 import re
-import time
 import traceback
 from pathlib import Path
 
@@ -33,6 +32,7 @@ import repro  # noqa: F401  (x64 etc.)
 from repro import configs
 from repro.dist.sharding import ShardingCtx
 from repro.launch import steps
+from repro.obs.timing import stopwatch
 from repro.launch.mesh import make_production_mesh
 from repro.launch import hlo_analysis
 from repro.train import TrainConfig
@@ -181,7 +181,7 @@ MICROBATCHES = {
 def run_cell(spec, cell, mesh, multi_pod: bool, verbose=True):
     ctx = ShardingCtx(mesh=mesh, profile=profile_for(spec))
     tcfg = TrainConfig(microbatches=MICROBATCHES.get((spec.arch_id, cell.name), 1))
-    t0 = time.perf_counter()
+    sw = stopwatch()
     bundle = steps.build_step(spec, cell, ctx, tcfg)
     batch = steps.make_inputs(spec, cell, abstract=True)
 
@@ -203,10 +203,10 @@ def run_cell(spec, cell, mesh, multi_pod: bool, verbose=True):
 
     with mesh:
         lowered = jax.jit(fn, in_shardings=in_sh).lower(*args)
-        t_lower = time.perf_counter() - t0
-        t1 = time.perf_counter()
+        t_lower = sw.elapsed
+        sw1 = stopwatch()
         compiled = lowered.compile()
-        t_compile = time.perf_counter() - t1
+        t_compile = sw1.elapsed
 
     entry = {
         "arch": spec.arch_id,

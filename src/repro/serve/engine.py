@@ -32,7 +32,11 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+import itertools
+
 from repro.models import transformer
+
+_ENGINE_IDS = itertools.count()
 
 
 @dataclass
@@ -62,25 +66,44 @@ class DecodeEngine:
         self.ticks = 0
         self.tokens_decoded = 0
         self.requests_finished = 0
+        #: repro.obs label: unique per engine so several engines in one
+        #: process keep separate serve_* counter labelsets
+        self.name = f"engine{next(_ENGINE_IDS)}"
         # optional self-re-tuning index tier (repro.tune.rebuild.TunedTier):
         # the engine drives its drift policy and surfaces its counters
         self.tier = tier
 
     def metrics(self) -> dict:
-        """Serving counters + learned-index substrate telemetry."""
-        from repro import index as ix
+        """Serving counters + learned-index substrate telemetry.
+
+        The hot loop keeps plain int attributes (no registry calls per
+        tick); this method publishes them into the ``repro.obs``
+        registry (``serve_*``, labeled by engine) and renders the
+        result — including the ``index_traces`` gauge mirror of
+        ``repro.index.trace_counts()`` — from one registry snapshot.
+        """
+        from repro import obs
         from repro.dist import tier_metrics
 
+        lbl = dict(engine=self.name)
+        obs.metric("serve_ticks").set_value(self.ticks, **lbl)
+        obs.metric("serve_tokens_decoded").set_value(self.tokens_decoded, **lbl)
+        obs.metric("serve_requests_finished").set_value(self.requests_finished, **lbl)
+        obs.metric("serve_queued").set(len(self.queue), **lbl)
+        obs.metric("serve_live_slots").set(sum(r is not None for r in self.slot_req), **lbl)
+        snap = obs.snapshot()
+        traces = {
+            f"{s['labels']['kind']}/{s['labels']['backend']}": int(s["value"])
+            for s in snap.get("index_traces", {}).get("samples", [])
+        }
         out = {
-            "ticks": self.ticks,
-            "tokens_decoded": self.tokens_decoded,
-            "requests_finished": self.requests_finished,
-            "queued": len(self.queue),
-            "live_slots": sum(r is not None for r in self.slot_req),
-            "index_traces": sum(ix.trace_counts().values()),
-            "index_trace_counts": {
-                f"{kind}/{backend}": n for (kind, backend), n in sorted(ix.trace_counts().items())
-            },
+            "ticks": int(obs.sample_value(snap, "serve_ticks", **lbl)),
+            "tokens_decoded": int(obs.sample_value(snap, "serve_tokens_decoded", **lbl)),
+            "requests_finished": int(obs.sample_value(snap, "serve_requests_finished", **lbl)),
+            "queued": int(obs.sample_value(snap, "serve_queued", **lbl)),
+            "live_slots": int(obs.sample_value(snap, "serve_live_slots", **lbl)),
+            "index_traces": sum(traces.values()),
+            "index_trace_counts": traces,
             "tier_routing": tier_metrics(),
         }
         if self.tier is not None:

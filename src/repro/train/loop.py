@@ -15,10 +15,10 @@ device work; the loop adds the production concerns —
 
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
+from repro.obs.timing import stopwatch
 from . import checkpoint
 
 
@@ -64,11 +64,11 @@ def run(
     ewma = None
     pending = None
     for step in range(start_step, cfg.total_steps):
-        t0 = time.perf_counter()
+        sw = stopwatch()
         batch = batch_at(step)
         state, metrics = step_fn(state, batch)
         loss = float(metrics["loss"])
-        dt = time.perf_counter() - t0
+        dt = sw.elapsed
 
         report.steps_run += 1
         report.losses.append(loss)

@@ -48,13 +48,13 @@ backend) no matter how many tables the batch holds.
 
 from __future__ import annotations
 
-import time
 from functools import partial
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.obs.timing import stopwatch
 from repro.core.cdf import POS_DTYPE
 from repro.core.pgm import (
     BICRITERIA_MAX_ITERS,
@@ -143,7 +143,7 @@ def _vmap_fit_rmi(specs: list, tables: list) -> list:
     """
     from repro.index import impls
 
-    t0 = time.perf_counter()
+    sw = stopwatch()
     n = len(tables[0])
     if any(len(t) != n for t in tables):
         raise ValueError("fit='vmap' needs same-length tables (pad first — see build_many)")
@@ -160,7 +160,7 @@ def _vmap_fit_rmi(specs: list, tables: list) -> list:
     slopes, icepts, eps, r = _leaf_fit_many(u, jnp.asarray(root_coefs), b)
     slopes, icepts = np.asarray(slopes), np.asarray(icepts)
     eps, r = np.asarray(eps), np.asarray(r)
-    per_model_s = (time.perf_counter() - t0) / len(tables)  # batch wall time, shared evenly
+    per_model_s = (sw.elapsed) / len(tables)  # batch wall time, shared evenly
     out = []
     for i, (spec, t, (_, root_type)) in enumerate(zip(specs, tables, plans)):
         m = assemble_rmi(

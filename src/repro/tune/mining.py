@@ -21,11 +21,11 @@ and Pareto tuning share ONE engine:
 
 from __future__ import annotations
 
-import time
 from typing import Sequence
 
 import numpy as np
 
+from repro.obs.timing import stopwatch
 from repro.core.rmi import ROOT_TYPES
 from repro.core.sy_rmi import SyRMIResult
 from repro.index.specs import RMISpec
@@ -72,7 +72,7 @@ def mine_sy_rmi(
 ) -> SyRMIResult:
     """Full mining pass over a set of same-tier tables (paper §4)."""
     rng = np.random.default_rng(seed)
-    t0 = time.perf_counter()
+    sw = stopwatch()
     all_cands, votes, sizes, times_all = [], [], [], []
     for table in tables:
         table = np.asarray(table, dtype=np.uint64)
@@ -93,5 +93,5 @@ def mine_sy_rmi(
         winner_root=winner_root,
         sweep_sizes=sizes,
         sweep_times=times_all,
-        mining_time=time.perf_counter() - t0,
+        mining_time=sw.elapsed,
     )

@@ -27,12 +27,12 @@ and serving-side tuners share one format.
 
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass
 
 import numpy as np
 import jax.numpy as jnp
 
+from repro.obs.timing import stopwatch
 from repro.index import registry
 from repro.index.specs import IndexSpec
 
@@ -103,9 +103,9 @@ def _time_lookup(idx, table_j, queries_j, backend: str, reps: int) -> float:
     idx.lookup(table_j, queries_j, backend=backend).block_until_ready()  # warmup/compile
     best = np.inf
     for _ in range(reps):
-        t0 = time.perf_counter()
+        sw = stopwatch()
         idx.lookup(table_j, queries_j, backend=backend).block_until_ready()
-        best = min(best, time.perf_counter() - t0)
+        best = min(best, sw.elapsed)
     return best
 
 
@@ -147,9 +147,9 @@ def sweep(
     if check_exact:
         want = np.searchsorted(table_np, queries, side="right") - 1
 
-    t0 = time.perf_counter()
+    sw = stopwatch()
     indexes = build_grid(specs, table_np, fit=fit)
-    build_s_total = time.perf_counter() - t0
+    build_s_total = sw.elapsed
 
     out = []
     for spec, idx in zip(specs, indexes):

@@ -44,6 +44,7 @@ the serving engine next to the lookup trace counts.
 
 from __future__ import annotations
 
+import itertools
 import warnings
 from dataclasses import dataclass
 
@@ -52,6 +53,7 @@ import numpy as np
 from repro.dist.sharded_index import (
     ShardedIndex,
     _fresh_tier_metrics,
+    _tier_counters_from_obs,
     compact_shard,
     derived_tier_metrics,
     insert_into_shard,
@@ -78,18 +80,56 @@ class RebuildPolicy:
     backend: str = "xla"
 
 
-@dataclass
+#: lifecycle counter fields, in the order metrics() reports them.  Each
+#: backs a ``tier_<field>`` metric in the repro.obs registry, labeled by
+#: the tier's unique name; ``pending`` is a gauge (it decreases).
+_COUNTER_FIELDS = (
+    "lookups",
+    "ingested",
+    "absorbed",  # merged into gapped leaves in place (updatable kinds)
+    "overflowed",  # diverted to a shard's delta buffer
+    "duplicates",  # ingested keys already present
+    "shard_compactions",  # delta -> leaves folds (device-side)
+    "shard_refreshes",
+    "retunes",
+    "forced_restacks",  # refresh_shard rejected (capacity/static) -> full restack
+    "pending",  # host-buffered keys (static-kind fallback arm)
+)
+
+_TIER_IDS = itertools.count()
+
+
 class _Counters:
-    lookups: int = 0
-    ingested: int = 0
-    absorbed: int = 0  # merged into gapped leaves in place (updatable kinds)
-    overflowed: int = 0  # diverted to a shard's delta buffer
-    duplicates: int = 0  # ingested keys already present
-    shard_compactions: int = 0  # delta -> leaves folds (device-side)
-    shard_refreshes: int = 0
-    retunes: int = 0
-    forced_restacks: int = 0  # refresh_shard rejected (capacity/static) -> full restack
-    pending: int = 0  # host-buffered keys (static-kind fallback arm)
+    """Attribute view over the tier's ``tier_*`` registry metrics.
+
+    Reads and writes (``tier.counters.absorbed += n``) go straight to
+    the repro.obs registry under this tier's label, so the dataclass-era
+    call sites — including tests that poke ``counters.pending`` — keep
+    working while ``metrics()`` renders from registry snapshots.
+    """
+
+    __slots__ = ("_tier",)
+
+    def __init__(self, tier: str):
+        object.__setattr__(self, "_tier", tier)
+
+    def _metric(self, field: str):
+        from repro import obs
+
+        return obs.metric(f"tier_{field}")
+
+    def __getattr__(self, field: str) -> int:
+        if field not in _COUNTER_FIELDS:
+            raise AttributeError(field)
+        return int(self._metric(field).value(tier=self._tier))
+
+    def __setattr__(self, field: str, value) -> None:
+        if field not in _COUNTER_FIELDS:
+            raise AttributeError(f"unknown tier counter {field!r}")
+        self._metric(field).set_value(float(value), tier=self._tier)
+
+    def as_dict(self) -> dict:
+        return {f: getattr(self, f) for f in _COUNTER_FIELDS}
 
 
 class TunedTier:
@@ -102,7 +142,7 @@ class TunedTier:
     """
 
     def __init__(self, table_np, n_shards: int, policy: RebuildPolicy | None = None, *,
-                 spec: IndexSpec | None = None, ctx=None):
+                 spec: IndexSpec | None = None, ctx=None, name: str | None = None):
         self.policy = policy or RebuildPolicy()
         self.ctx = ctx
         table_np = np.asarray(table_np, dtype=np.uint64)
@@ -112,8 +152,11 @@ class TunedTier:
         self.sidx = ShardedIndex.build(spec, table_np, n_shards=n_shards)
         self._pending: list[list] = [[] for _ in range(n_shards)]
         self._since_retune = 0  # keys ingested since the last restack
-        self.counters = _Counters()
-        self._routing = _fresh_tier_metrics()  # this tier's own sink
+        #: registry label: unique per tier so several tiers in one
+        #: process keep separate tier_*/route_* counter labelsets
+        self.name = name or f"tier{next(_TIER_IDS)}"
+        self.counters = _Counters(self.name)
+        self._routing = _fresh_tier_metrics()  # legacy dict sink (kept in step)
 
     def _updatable(self) -> bool:
         return self.spec.kind in mutation.updatable_kinds()
@@ -125,6 +168,7 @@ class TunedTier:
         self.counters.lookups += 1
         kw.setdefault("telemetry", True)
         kw.setdefault("telemetry_sink", self._routing)
+        kw.setdefault("telemetry_label", self.name)
         kw.setdefault("backend", self.policy.backend)
         return sharded_lookup(self.sidx, queries, self.ctx, **kw)
 
@@ -293,12 +337,21 @@ class TunedTier:
 
     # -- telemetry ---------------------------------------------------------
     def metrics(self) -> dict:
-        """Rebuild counters + this tier's own routing/drop counters."""
+        """Rebuild counters + this tier's own routing/drop counters,
+        rendered from a ``repro.obs`` registry snapshot (the ``tier_*``
+        and ``route_*`` metrics under this tier's label)."""
+        from repro import obs
+
+        snap = obs.snapshot(prefix="tier_")
+        counters = {
+            f: int(obs.sample_value(snap, f"tier_{f}", tier=self.name))
+            for f in _COUNTER_FIELDS
+        }
         return {
             "spec": self.spec.display_name(),
             "n_shards": self.sidx.n_shards,
             "n_keys": int(self.sidx.counts.sum()),
             "space_bytes": int(self.sidx.space_bytes()),
-            **self.counters.__dict__,
-            "routing": derived_tier_metrics(self._routing),
+            **counters,
+            "routing": derived_tier_metrics(_tier_counters_from_obs(self.name)),
         }

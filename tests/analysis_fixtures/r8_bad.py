@@ -1,0 +1,26 @@
+"""R8 fixture: raw wall-clock deltas that bypass repro.obs.timing."""
+
+import time
+from time import perf_counter as pc
+
+
+def build_with_inline_delta(table):
+    t0 = time.perf_counter()
+    model = sum(table)
+    dt = time.perf_counter() - t0  # BAD: name-flow delta
+    return model, dt
+
+
+def lookup_with_direct_delta(run):
+    start = time.time()
+    run()
+    return time.time() - start  # BAD: name-flow delta on time.time
+
+
+def best_of_reps(run):
+    best = float("inf")
+    for _ in range(3):
+        t = pc()
+        run()
+        best = min(best, pc() - t)  # BAD: from-import alias delta
+    return best

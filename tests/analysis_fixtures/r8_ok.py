@@ -1,0 +1,26 @@
+"""R8 fixture: sanctioned timing — stopwatch/span, or no delta at all."""
+
+import time
+
+from repro.obs.timing import span, stopwatch
+
+
+def build_with_stopwatch(table):
+    sw = stopwatch()
+    model = sum(table)
+    return model, sw.elapsed  # OK: delta through repro.obs
+
+
+def traced_block(run):
+    with span("fixture.block"):  # OK: span records the histogram
+        run()
+
+
+def timestamp_only():
+    # OK: a timer call that never flows into a subtraction (wall-clock
+    # stamping, not a recorded delta)
+    return {"started_at": time.time()}
+
+
+def unrelated_subtraction(a, b):
+    return a - b  # OK: not a timer delta

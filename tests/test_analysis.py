@@ -50,7 +50,7 @@ def _rules(findings):
 def test_rule_ids_unique_and_complete():
     ids = [r.id for r in ALL_RULES]
     assert ids == sorted(set(ids)), "duplicate or unordered rule ids"
-    assert ids == ["R1", "R2", "R3", "R4", "R5", "R6", "R7"]
+    assert ids == ["R1", "R2", "R3", "R4", "R5", "R6", "R7", "R8"]
     for r in ALL_RULES:
         assert r.title != "?" and r.blurb != "?"
 
@@ -132,6 +132,15 @@ def test_r7_removed_api_fixture():
 # ---------------------------------------------------------------------------
 # Gate demonstration: the two shipped bugs, re-introduced
 # ---------------------------------------------------------------------------
+
+
+def test_r8_raw_timing_fixture():
+    bad = _scan("r8_bad.py")
+    assert _rules(bad) == {"R8"}
+    # inline perf_counter delta, time.time delta, from-import alias delta
+    assert len(bad) == 3, [f.format() for f in bad]
+    assert all("repro.obs.timing" in f.hint for f in bad)  # the fix hint
+    assert not _scan("r8_ok.py")
 
 
 def test_shipped_bugs_are_caught():
@@ -258,6 +267,7 @@ def test_cli_json_artifact(tmp_path):
         "R5",
         "R6",
         "R7",
+        "R8",
     }
     assert all(f["rule"] == "R1" for f in data["findings"])
 
@@ -265,7 +275,7 @@ def test_cli_json_artifact(tmp_path):
 def test_cli_list_rules():
     r = _cli("--list-rules")
     assert r.returncode == 0
-    for rid in ("R1", "R2", "R3", "R4", "R5", "R6", "R7"):
+    for rid in ("R1", "R2", "R3", "R4", "R5", "R6", "R7", "R8"):
         assert rid in r.stdout
 
 

@@ -18,8 +18,19 @@ def test_readme_and_docs_links_resolve():
     assert docs_check.check_links() == []
 
 
+def test_metric_catalogue_covers_registry():
+    assert docs_check.check_metric_catalogue() == []
+
+
 def test_required_docs_exist():
-    for rel in ("README.md", "docs/architecture.md", "docs/backends.md", "docs/benchmarks.md"):
+    for rel in (
+        "README.md",
+        "docs/architecture.md",
+        "docs/backends.md",
+        "docs/benchmarks.md",
+        "docs/analysis.md",
+        "docs/observability.md",
+    ):
         assert (ROOT / rel).exists(), rel
 
 
@@ -30,3 +41,13 @@ def test_matrix_check_catches_missing_kind(monkeypatch):
     monkeypatch.setattr(docs_check.Path, "read_text", lambda self, *a, **k: broken, raising=True)
     errors = docs_check.check_backend_matrix()
     assert any("RMI" in e for e in errors)
+
+
+def test_metric_check_catches_missing_metric(monkeypatch):
+    text = (ROOT / "docs" / "observability.md").read_text()
+    broken = "\n".join(
+        ln for ln in text.splitlines() if not ln.startswith("| lookup_latency_us |")
+    )
+    monkeypatch.setattr(docs_check.Path, "read_text", lambda self, *a, **k: broken, raising=True)
+    errors = docs_check.check_metric_catalogue()
+    assert any("lookup_latency_us" in e for e in errors)

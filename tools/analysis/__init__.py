@@ -1,6 +1,6 @@
 """repro.analysis — project-specific static-analysis pass.
 
-Seven rule families, each grounded in a bug this repo actually shipped
+Eight rule families, each grounded in a bug this repo actually shipped
 (or a contract a past PR had to retrofit):
 
 ====  =========================  ==================================================
@@ -16,6 +16,8 @@ R5    magic sentinel literal     raw ``-2``/``-1`` where DROPPED/NO_PRED exist
 R6    f64 in kernel body         TPU kernels are f32/i32; f64 belongs on the host
 R7    removed-API resurrection   the mutation-API redesign deleted the PR 1
                                  shims; this keeps the old names gone
+R8    raw timing outside obs     PR 8 unified telemetry in repro.obs; ad-hoc
+                                 ``perf_counter`` deltas bypass its histograms
 ====  =========================  ==================================================
 
 Run ``python -m tools.analysis --check`` (CI gate), or pass explicit
@@ -46,6 +48,7 @@ from .rules_contract import RegistryContractRule
 from .rules_sentinel import MagicSentinelRule
 from .rules_f64 import KernelF64Rule
 from .rules_removed import RemovedApiRule
+from .rules_time import RawTimingRule
 
 #: the registered pass, in rule-id order
 ALL_RULES = (
@@ -56,6 +59,7 @@ ALL_RULES = (
     MagicSentinelRule(),
     KernelF64Rule(),
     RemovedApiRule(),
+    RawTimingRule(),
 )
 
 

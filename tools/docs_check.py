@@ -1,7 +1,7 @@
 #!/usr/bin/env python
 """Docs consistency gate (the CI ``docs-check`` step).
 
-Three checks, all stdlib + repro only:
+Four checks, all stdlib + repro only:
 
 1. **Backend support matrix** — the table tagged
    ``<!-- docs-check:backend-matrix -->`` in ``docs/backends.md`` must
@@ -14,7 +14,12 @@ Three checks, all stdlib + repro only:
    have one row per registered rule in ``tools.analysis.ALL_RULES``
    (matching id and title, non-empty description) — adding a rule
    without documenting it fails CI, same deal as the backend matrix.
-3. **Links and anchors** — every relative markdown link in README.md
+3. **Metric catalogue** — the table tagged
+   ``<!-- docs-check:metric-catalogue -->`` in
+   ``docs/observability.md`` must have one row per metric in
+   ``repro.obs.metric_catalogue()`` with the matching type and label
+   set — register a metric, document it, or CI fails.
+4. **Links and anchors** — every relative markdown link in README.md
    and docs/*.md must resolve to an existing file, and ``#anchor``
    fragments must match a heading in the target (GitHub slugification).
 
@@ -32,6 +37,7 @@ from pathlib import Path
 ROOT = Path(__file__).resolve().parents[1]
 MATRIX_TAG = "<!-- docs-check:backend-matrix -->"
 RULES_TAG = "<!-- docs-check:analysis-rules -->"
+METRICS_TAG = "<!-- docs-check:metric-catalogue -->"
 LINK_RE = re.compile(r"(?<!!)\[[^\]]*\]\(([^)\s]+)\)")
 HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
 
@@ -109,6 +115,41 @@ def check_analysis_rules() -> list:
     return errors
 
 
+def check_metric_catalogue() -> list:
+    """docs/observability.md's metric table rows == repro.obs catalogue."""
+    from repro.obs import metric_catalogue
+
+    errors = []
+    try:
+        columns, rows = parse_matrix(
+            (ROOT / "docs" / "observability.md").read_text(), METRICS_TAG
+        )
+    except (OSError, ValueError) as e:
+        return [f"docs/observability.md metric catalogue: {e}"]
+    registered = metric_catalogue()
+    for name, mtype, labels, _desc in registered:
+        if name not in rows:
+            errors.append(f"metric {name!r} has no row in the docs/observability.md catalogue")
+            continue
+        cells = rows[name]
+        doc_type = cells.get("type", "")
+        if doc_type != mtype:
+            errors.append(f"metric {name!r} documented as {doc_type!r}; the code says {mtype!r}")
+        doc_labels = cells.get("labels", "").replace("`", "")
+        want_labels = ", ".join(labels) if labels else "-"
+        if doc_labels != want_labels:
+            errors.append(
+                f"metric {name!r} documents labels {doc_labels!r}; the code says {want_labels!r}"
+            )
+        if not all(cells.values()):
+            errors.append(f"metric catalogue row {name!r} has an empty cell")
+    known = {name for name, _, _, _ in registered}
+    for name in rows:
+        if name not in known:
+            errors.append(f"metric catalogue documents unregistered metric {name!r}")
+    return errors
+
+
 def slugify(heading: str) -> str:
     """GitHub-style heading -> anchor slug."""
     h = re.sub(r"[`*_]", "", heading.strip().lower())
@@ -146,7 +187,12 @@ def check_links() -> list:
 
 
 def main() -> int:
-    errors = check_backend_matrix() + check_analysis_rules() + check_links()
+    errors = (
+        check_backend_matrix()
+        + check_analysis_rules()
+        + check_metric_catalogue()
+        + check_links()
+    )
     for e in errors:
         print(f"docs-check: {e}", file=sys.stderr)
     if errors:
