@@ -1,24 +1,38 @@
-"""Serving SLO benchmark: Zipf + shifting query-mix over ``TunedTier``.
+"""Serving SLO benchmark: Zipf + adversarial query mixes over ``TunedTier``.
 
-The traffic harness the ROADMAP's SLO item asks for, sized to the
-bench-smoke budget: a pinned-spec tier serves a skewed (Zipf) query
-stream whose hot set *shifts* between phases (and picks up a growing
-miss fraction), every batch timed through
-:func:`repro.obs.timing.timed_lookup` — so p50/p99 come from the
-``lookup_latency_us`` histogram snapshot, the way a production SLO is
-actually evaluated (distributions, not means; the SOSD methodology).
+The scaled traffic harness of the ROADMAP's SLO item (grown past smoke
+in PR 9): a pinned-spec tier serves skewed query streams, every batch
+timed through :func:`repro.obs.timing.timed_lookup` — p50/p99 come from
+the ``lookup_latency_us`` histogram snapshot, the way a production SLO
+is actually evaluated (distributions, not means; the SOSD methodology).
+At ``REPRO_BENCH_SCALE=1`` each leg serves on the order of a million
+queries (``PHASES x BATCHES_PER_PHASE x BATCH``); smoke scale shrinks
+the batch count, never the batch shape, so the trace set is identical.
+
+Three leg groups:
+
+* **mixed** (``slo/*``) — the original shifting-Zipf stream with a
+  growing near-miss fraction; drop-rate + latency + exactness gates.
+* **cache A/B** (``slo/cache_off/*`` vs ``slo/cache/*``) — the same
+  concentrated-Zipf hot traffic served by a bare tier and by a
+  :class:`repro.serve.hotcache.HotKeyCache`-fronted tier whose sketch
+  is primed per phase (the hot set shifts, the decayed sketch follows).
+  ``slo/cache/speedup_p99`` is the headline: the trend gate fails if
+  the cache-on leg stops beating cache-off p99 in the same artifact.
+* **adversarial** (``slo/adv/*``) — a rebalance-enabled tier under
+  single-shard hammering, hot-set inversion, and a miss flood:
+  query-driven fence rebalancing must trigger (``slo/adv/rebalances``)
+  with zero retunes while every batch stays bit-exact.
 
 Gates (``--check``, and ``benchmarks/trend.py`` via the committed
 ``benchmarks/baselines/serve_slo.json``):
 
 * ``slo/drop_rate`` — must stay ≤ :data:`DROP_RATE_SLO` (absolute);
-* ``slo/p50_us`` / ``slo/p99_us`` — device-phase histogram quantiles,
-  ratio-gated against the baseline (CI machines vary);
-* ``slo/exact`` — a spot-check batch must bit-match ``true_ranks``
-  (pinned 1.0);
-* ``slo/compiles`` + trace counts — the serving loop keeps the
-  one-trace discipline: ONE shared lookup trace + ONE owner-histogram
-  trace + ONE obs histogram-update trace (exact).
+* every ``*/exact`` metric — pinned 1.0 (bit-exact vs ``true_ranks``);
+* ``slo/cache/speedup_p99`` — must stay > 1.0 in the fresh artifact;
+* ``slo/compiles`` + trace counts — exact: the serving loop keeps the
+  one-trace discipline across cache probes, rebuild lookups, and the
+  adversarial tier's forced restack.
 
 ``python -m benchmarks.serve_slo [--json OUT] [--jsonl SNAP] [--check]``;
 ``--jsonl`` exports the full registry snapshot in the stable JSONL
@@ -38,6 +52,7 @@ from repro import index as ix
 from repro import obs
 from repro.core.cdf import true_ranks
 from repro.data import distributions
+from repro.serve.hotcache import HotKeyCache
 from repro.tune.rebuild import RebuildPolicy, TunedTier
 
 from .common import SCALE, emit as _emit
@@ -48,9 +63,16 @@ _METRICS: dict = {}
 DROP_RATE_SLO = 0.01
 #: traffic shape: phases shift the Zipf hot set and raise the miss mix
 PHASES = 3
-BATCHES_PER_PHASE = 6
+#: ~1M queries per leg group at SCALE=1 (PHASES x this x BATCH); smoke
+#: scale shrinks the batch COUNT only — batch shapes (and therefore the
+#: trace set the baseline pins) are scale-invariant
+BATCHES_PER_PHASE = max(4, int(round(320 * SCALE)))
 BATCH = 1024
 ZIPF_A = 1.15
+#: concentrated-Zipf hot-set span for the cache A/B legs — strictly
+#: inside CACHE_CAP so a primed sketch makes the whole span resident
+HOT_SPAN = 2048
+CACHE_CAP = 4096
 
 
 def emit(name: str, value: float, derived: str = ""):
@@ -59,7 +81,7 @@ def emit(name: str, value: float, derived: str = ""):
 
 
 def _phase_queries(rng, table: np.ndarray, phase: int) -> np.ndarray:
-    """One batch of the phase's traffic: Zipf ranks around a shifting
+    """One batch of the mixed leg's traffic: Zipf ranks around a shifting
     hot offset, plus a growing fraction of near-miss probes (key+1 —
     a legitimate predecessor query that is not a stored key)."""
     n = len(table)
@@ -67,6 +89,170 @@ def _phase_queries(rng, table: np.ndarray, phase: int) -> np.ndarray:
     qs = table[ranks]
     miss = rng.random(BATCH) < 0.05 * phase
     return np.where(miss & (qs < np.uint64(np.iinfo(np.uint64).max)), qs + np.uint64(1), qs)
+
+
+def _hot_queries(rng, table: np.ndarray, phase: int) -> np.ndarray:
+    """Concentrated Zipf: every query inside the phase's HOT_SPAN-rank
+    hot window (the cache A/B traffic — a resident hot set answers it)."""
+    n = len(table)
+    ranks = (phase * n // PHASES + (rng.zipf(ZIPF_A, size=BATCH) - 1) % HOT_SPAN) % n
+    return table[ranks]
+
+
+def _hot_span(table: np.ndarray, phase: int) -> np.ndarray:
+    n = len(table)
+    return table[(phase * n // PHASES + np.arange(HOT_SPAN)) % n]
+
+
+def _latency(snap, tier: str, phase: str) -> tuple:
+    s = obs.find_sample(
+        snap, "lookup_latency_us", kind="RMI", backend="xla", tier=tier, phase=phase
+    )
+    return obs.hist_quantile(s, 0.50), obs.hist_quantile(s, 0.99), s["count"]
+
+
+def _leg_mixed(table: np.ndarray, rng) -> None:
+    """The original shifting-Zipf leg: drop/latency/exactness gates."""
+    tier = TunedTier(
+        table, n_shards=4, policy=RebuildPolicy(backend="xla"), spec=ix.RMISpec(b=512),
+        name="slo",
+    )
+    # warm the serving path once (same batch shape -> same traces), so
+    # the latency histogram measures steady-state serving, not compile
+    tier.lookup(_phase_queries(rng, table, 0))
+    exact = True
+    for phase in range(PHASES):
+        for _ in range(BATCHES_PER_PHASE):
+            qs = _phase_queries(rng, table, phase)
+            with obs.span("serve_slo.batch"):
+                out = obs.timed_lookup(tier, qs, tier="slo")
+            # spot-check every phase's last batch against searchsorted
+            got = np.asarray(out)
+        exact &= bool((got == true_ranks(table, np.asarray(qs))).all())
+    snap = obs.snapshot()
+    m = tier.metrics()
+    for phase_name, phase in (("host", "host"), ("", "device")):
+        p50, p99, count = _latency(snap, "slo", phase)
+        prefix = f"slo/{phase_name}_" if phase_name else "slo/"
+        emit(f"{prefix}p50_us", p50, f"count={count}")
+        emit(f"{prefix}p99_us", p99)
+    emit(
+        "slo/queries",
+        float(m["routing"]["queries"]),
+        f"{PHASES} phases x {BATCHES_PER_PHASE} + warmup",
+    )
+    emit("slo/drop_rate", m["routing"]["drop_rate"], f"SLO <= {DROP_RATE_SLO}")
+    emit("slo/imbalance_peak", m["routing"]["imbalance_peak"], "Zipf skew, peak shard load")
+    emit("slo/exact", float(exact), "per-phase spot batches vs searchsorted")
+
+
+def _serve_leg(target, table, rng, label: str, *, prime=None) -> tuple:
+    """Serve PHASES x BATCHES_PER_PHASE concentrated-Zipf batches through
+    ``target``, timing every batch under ``tier=label``; returns
+    ``(exact, p50, p99)`` from the device-phase histogram."""
+    exact = True
+    target.lookup(_hot_queries(rng, table, 0))  # warm compile, untimed
+    for phase in range(PHASES):
+        if prime is not None:
+            prime(phase)
+        for _ in range(BATCHES_PER_PHASE):
+            qs = _hot_queries(rng, table, phase)
+            with obs.span(f"serve_slo.{label}"):
+                out = obs.timed_lookup(target, qs, tier=label)
+            exact &= bool((np.asarray(out) == true_ranks(table, qs)).all())
+    p50, p99, _ = _latency(obs.snapshot(), label, "device")
+    return exact, p50, p99
+
+
+def _leg_cache_ab(table: np.ndarray, rng) -> None:
+    """Cache-off vs cache-on over identical concentrated-Zipf traffic."""
+    policy = RebuildPolicy(backend="xla")
+    spec = ix.RMISpec(b=512)
+    off = TunedTier(table, n_shards=4, policy=policy, spec=spec, name="slo_off")
+    rng_off = np.random.default_rng(rng.integers(1 << 31))
+    rng_on = np.random.default_rng(rng.integers(1 << 31))
+    exact_off, p50_off, p99_off = _serve_leg(off, table, rng_off, "slo_off")
+
+    hot_tier = TunedTier(table, n_shards=4, policy=policy, spec=spec, name="slo_hot")
+    cache = HotKeyCache(hot_tier, capacity=CACHE_CAP)
+    hits0 = [0]
+
+    def prime(phase: int) -> None:
+        # the decayed sketch follows the shifting hot set: pin the
+        # phase's hot span with weight proportional to the per-phase
+        # traffic volume (so the once-decayed prime still outweighs the
+        # previous phase's accumulated counts), feed one real traffic
+        # batch, then rebuild the residency off-path
+        cache.sketch.update(_hot_span(table, phase), weight=4.0 * BATCHES_PER_PHASE)
+        cache.sketch.update(_hot_queries(rng_on, table, phase))
+        cache.rebuild()
+        if phase == 0:  # runs post-warmup, pre-timing: timed-hit floor
+            hits0[0] = int(obs.metric("hotcache_hits").value(tier="slo_hot"))
+
+    exact_on, p50_on, p99_on = _serve_leg(cache, table, rng_on, "slo_hot", prime=prime)
+    hits = int(obs.metric("hotcache_hits").value(tier="slo_hot")) - hits0[0]
+    misses = int(obs.metric("hotcache_misses").value(tier="slo_hot"))
+    served = PHASES * BATCHES_PER_PHASE * BATCH
+
+    emit("slo/cache_off/p50_us", p50_off)
+    emit("slo/cache_off/p99_us", p99_off)
+    emit("slo/cache_off/exact", float(exact_off), "every batch vs searchsorted")
+    emit("slo/cache/p50_us", p50_on)
+    emit("slo/cache/p99_us", p99_on)
+    emit("slo/cache/hit_rate", hits / max(served, 1), f"{hits} hits / {served} timed")
+    emit("slo/cache/misses", float(misses), "fall-throughs incl. warmup")
+    emit("slo/cache/rebuilds", float(obs.metric("hotcache_rebuilds").value(tier="slo_hot")))
+    emit("slo/cache/space_bytes", float(cache.space_bytes()), "residency budget")
+    emit("slo/cache/speedup_p99", p99_off / p99_on, "cache-off p99 / cache-on p99")
+    emit("slo/cache/exact", float(exact_on), "every batch vs searchsorted")
+
+
+def _leg_adversarial(table: np.ndarray, rng) -> None:
+    """Hammer one shard, invert the hot set, flood with misses — the
+    query-driven rebalancer must fire (zero retunes), every batch exact."""
+    n = len(table)
+    tier = TunedTier(
+        table,
+        n_shards=4,
+        policy=RebuildPolicy(
+            backend="xla",
+            rebalance_imbalance=1.5,
+            rebalance_min_lookups=max(2, min(8, BATCHES_PER_PHASE - 2)),
+        ),
+        spec=ix.RMISpec(b=512),
+        name="slo_adv",
+    )
+    tier.lookup(table[rng.integers(0, n, BATCH)])  # warm compile, untimed
+
+    def hammer(r):  # every query inside the last shard's initial range
+        return table[3 * n // 4 + (r.zipf(ZIPF_A, BATCH) - 1) % (n - 3 * n // 4)]
+
+    def invert(r):  # hot set flips to the first shard's initial range
+        return table[(r.zipf(ZIPF_A, BATCH) - 1) % (n // 4)]
+
+    def flood(r):  # half near-miss probes (key+1), never a stored key hit
+        qs = table[r.integers(0, n, BATCH)].copy()
+        probe = r.random(BATCH) < 0.5
+        qs[probe] = np.minimum(
+            qs[probe] + np.uint64(1), np.uint64(np.iinfo(np.uint64).max) - np.uint64(1)
+        )
+        qs[:2] = [np.uint64(0), table[0]]  # below-min -> NO_PRED when min > 0
+        return qs
+
+    for name, gen in (("hammer", hammer), ("invert", invert), ("flood", flood)):
+        exact = True
+        for _ in range(BATCHES_PER_PHASE):
+            qs = gen(rng)
+            with obs.span(f"serve_slo.adv_{name}"):
+                out = obs.timed_lookup(tier, qs, tier="slo_adv")
+            exact &= bool((np.asarray(out) == true_ranks(table, qs)).all())
+        emit(f"slo/adv/{name}/exact", float(exact), "every batch, incl. mid-rebalance")
+    m = tier.metrics()
+    emit("slo/adv/rebalances", float(m["rebalances"]), "query-driven fence rebalances")
+    emit("slo/adv/moved_keys", float(m["rebalance_moved_keys"]))
+    emit("slo/adv/forced_restacks", float(m["forced_restacks"]), "capacity fallback arm")
+    emit("slo/adv/retunes", float(m["retunes"]), "must stay 0: rebalancing is retune-free")
+    emit("slo/adv/drop_rate", m["routing"]["drop_rate"], f"SLO <= {DROP_RATE_SLO}")
 
 
 def run(jsonl: str | None = None) -> dict:
@@ -77,46 +263,9 @@ def run(jsonl: str | None = None) -> dict:
     n = max(1 << 13, int((1 << 18) * SCALE))
     table = distributions.generate("osm", n, seed=11)
 
-    tier = TunedTier(
-        table,
-        n_shards=4,
-        policy=RebuildPolicy(backend="xla"),
-        spec=ix.RMISpec(b=512),
-    )
-
-    # warm the serving path once (same batch shape -> same traces), so
-    # the latency histogram measures steady-state serving, not compile
-    tier.lookup(_phase_queries(rng, table, 0))
-
-    # ---- serve the shifting Zipf stream, one histogram per batch ---------
-    exact = True
-    for phase in range(PHASES):
-        for _ in range(BATCHES_PER_PHASE):
-            qs = _phase_queries(rng, table, phase)
-            with obs.span("serve_slo.batch"):
-                out = obs.timed_lookup(tier, qs, tier="slo")
-            # spot-check every phase's last batch against searchsorted
-            got = np.asarray(out)
-        exact &= bool((got == true_ranks(table, np.asarray(qs))).all())
-
-    # ---- render the SLO metrics from the registry snapshot ---------------
-    snap = obs.snapshot()
-    m = tier.metrics()
-    for phase_name, phase in (("host", "host"), ("", "device")):
-        s = obs.find_sample(
-            snap, "lookup_latency_us", kind="RMI", backend="xla", tier="slo", phase=phase
-        )
-        prefix = f"slo/{phase_name}_" if phase_name else "slo/"
-        emit(f"{prefix}p50_us", obs.hist_quantile(s, 0.50), f"count={s['count']}")
-        emit(f"{prefix}p99_us", obs.hist_quantile(s, 0.99))
-    emit(
-        "slo/queries",
-        float(m["routing"]["queries"]),
-        f"{PHASES} phases x {BATCHES_PER_PHASE} + warmup",
-    )
-    emit("slo/drop_rate", m["routing"]["drop_rate"], f"SLO <= {DROP_RATE_SLO}")
-    emit("slo/imbalance_peak", m["routing"]["imbalance_peak"], "Zipf skew, peak shard load")
-    emit("slo/exact", float(exact), "per-phase spot batches vs searchsorted")
+    _leg_mixed(table, rng)
+    _leg_cache_ab(table, rng)
+    _leg_adversarial(table, rng)
 
     traces = {f"{k}/{b}": v for (k, b), v in sorted(ix.trace_counts().items())}
     emit("slo/compiles", float(sum(traces.values())), "total traces (exact gate)")
@@ -133,26 +282,48 @@ def run(jsonl: str | None = None) -> dict:
 
 
 def check_slo(report: dict) -> list:
-    """The absolute SLO gates: drop-rate ceiling, sane (non-degenerate)
-    histogram quantiles, exactness.  Baseline-free — these hold on any
-    machine at any scale."""
+    """The absolute SLO gates: drop-rate ceilings, sane (non-degenerate)
+    histogram quantiles, every leg's exactness flag.  Baseline-free —
+    these hold on any machine at any scale."""
     fails = []
     m = report["metrics"]
-    if m["slo/drop_rate"] > report["slo"]["drop_rate_max"]:
-        fails.append(
-            f"drop_rate {m['slo/drop_rate']:.4f} > SLO {report['slo']['drop_rate_max']}"
-        )
-    if not 0 < m["slo/p50_us"] <= m["slo/p99_us"]:
-        fails.append(f"degenerate latency quantiles: p50={m['slo/p50_us']}, p99={m['slo/p99_us']}")
-    if m["slo/exact"] != 1.0:
-        fails.append("slo/exact != 1 (served ranks diverged from searchsorted)")
+    # a leg that silently vanished from the report is a gate failure, not
+    # a KeyError — every required metric is checked for presence first
+    required = (
+        "slo/drop_rate",
+        "slo/adv/drop_rate",
+        "slo/p50_us",
+        "slo/p99_us",
+        "slo/cache_off/p50_us",
+        "slo/cache_off/p99_us",
+        "slo/cache/p50_us",
+        "slo/cache/p99_us",
+        "slo/adv/retunes",
+    )
+    missing = [k for k in required if k not in m]
+    if missing:
+        return [f"missing metric {k} (leg dropped from the report?)" for k in missing]
+    for k in ("slo/drop_rate", "slo/adv/drop_rate"):
+        if m[k] > report["slo"]["drop_rate_max"]:
+            fails.append(f"{k} {m[k]:.4f} > SLO {report['slo']['drop_rate_max']}")
+    for pre in ("slo/", "slo/cache_off/", "slo/cache/"):
+        if not 0 < m[pre + "p50_us"] <= m[pre + "p99_us"]:
+            fails.append(
+                f"degenerate latency quantiles: {pre}p50={m[pre + 'p50_us']}, "
+                f"{pre}p99={m[pre + 'p99_us']}"
+            )
+    for k in sorted(m):
+        if k.endswith("/exact") and m[k] != 1.0:
+            fails.append(f"{k} != 1 (served ranks diverged from searchsorted)")
+    if m["slo/adv/retunes"] != 0.0:
+        fails.append(f"slo/adv/retunes = {m['slo/adv/retunes']} (rebalancing must not retune)")
     return fails
 
 
 def check(report: dict, baseline_path: str, tol: float = 8.0) -> list:
     """The full gate: :func:`check_slo` plus the bench-trend diff
-    (ratio-gated latencies, exact traces) against the committed
-    baseline."""
+    (ratio-gated latencies, exact traces, cache-speedup self-gate)
+    against the committed baseline."""
     from pathlib import Path
 
     from . import trend

@@ -135,6 +135,21 @@ def _check_kernel_roofline(name: str, fresh: dict, base: dict, tol: float) -> li
     return fails
 
 
+def _check_serve_slo(name: str, fresh: dict, base: dict, tol: float) -> list:
+    """kernel_roofline gates plus the cache A/B self-gate: the cache-on
+    Zipf leg must beat cache-off p99 *within the fresh artifact* — a
+    machine-independent claim (same host, same run), so it is exact, not
+    ratio-gated."""
+    fails = _check_kernel_roofline(name, fresh, base, tol)
+    sp = fresh.get("metrics", {}).get("slo/cache/speedup_p99")
+    if sp is not None and sp <= 1.0:
+        fails.append(
+            f"{name}: slo/cache/speedup_p99 = {sp:.3g} "
+            "(cache-on Zipf leg must show lower p99 than cache-off)"
+        )
+    return fails
+
+
 _CHECKERS = {
     "sharded_lookup": _check_sharded_lookup,
     "pareto_frontier": _check_pareto_frontier,
@@ -142,7 +157,7 @@ _CHECKERS = {
     # same shape/gates as kernel_roofline: metric-set equality, */exact
     # pinned at 1.0, *compiles + trace counts exact, latency by ratio
     "write_workload": _check_kernel_roofline,
-    "serve_slo": _check_kernel_roofline,
+    "serve_slo": _check_serve_slo,
 }
 
 

@@ -193,6 +193,14 @@ def _record_tier_metrics(
         obs.metric("route_even").inc(even, tier=t)
         obs.metric("route_imbalance_last").set(imb, tier=t)
         obs.metric("route_imbalance_peak").max(imb, tier=t)
+    if label is not None:
+        # per-owner-shard histogram, labeled tiers only (the "all" view
+        # would mix tiers of different shard counts): this is the density
+        # estimate weighted_quantile_bounds rebalances from
+        shard_q = obs.metric("route_shard_queries")
+        for s, c in enumerate(hist):
+            if c:
+                shard_q.inc(int(c), tier=str(label), shard=s)
     if sink is not None:
         sink["lookups"] += 1
         sink["queries"] += b
@@ -201,6 +209,24 @@ def _record_tier_metrics(
         sink["routed_even"] += even
         sink["imbalance_last"] = imb
         sink["imbalance_peak"] = max(sink["imbalance_peak"], imb)
+
+def shard_query_weights(tier: str, n_shards: int) -> np.ndarray:
+    """Observed per-owner-shard query counts for one labeled tier, read
+    back from the ``route_shard_queries`` registry counter (zeros where a
+    shard never owned a query).  The raw material of skew-aware
+    rebalancing: :meth:`repro.tune.rebuild.TunedTier.maybe_rebalance`
+    windows these counts to detect sustained drift."""
+    from repro import obs
+
+    snap = obs.snapshot(prefix="route_shard_queries")
+    return np.asarray(
+        [
+            obs.sample_value(snap, "route_shard_queries", tier=str(tier), shard=s)
+            for s in range(n_shards)
+        ],
+        dtype=np.float64,
+    )
+
 
 _MAXKEY = np.uint64(np.iinfo(np.uint64).max)
 
@@ -438,9 +464,15 @@ class ShardedIndex:
 
     # -- build ------------------------------------------------------------
     @staticmethod
-    def build(kind_or_spec, table_np, n_shards: int, **params) -> "ShardedIndex":
+    def build(kind_or_spec, table_np, n_shards: int, *, bounds=None, **params) -> "ShardedIndex":
         """Partition a global sorted table into ``n_shards`` contiguous
-        shards, build one same-spec Index per shard, and stack."""
+        shards, build one same-spec Index per shard, and stack.
+
+        ``bounds`` (optional) overrides the even split with an explicit
+        strictly increasing rank partition ``[0, ..., n]`` of length
+        ``n_shards + 1`` — the skew-aware rebalancer's restack fallback
+        (:func:`weighted_quantile_bounds` computes such partitions from
+        observed traffic)."""
         table_np = np.asarray(table_np, dtype=np.uint64)
         n = len(table_np)
         if n_shards < 1 or n_shards > n:
@@ -449,7 +481,20 @@ class ShardedIndex:
             spec = kind_or_spec
         else:
             spec = registry.spec_for(str(kind_or_spec), **params)
-        bounds = [round(i * n / n_shards) for i in range(n_shards + 1)]
+        if bounds is None:
+            bounds = [round(i * n / n_shards) for i in range(n_shards + 1)]
+        else:
+            bounds = [int(b) for b in np.asarray(bounds).reshape(-1)]
+            if (
+                len(bounds) != n_shards + 1
+                or bounds[0] != 0
+                or bounds[-1] != n
+                or any(b1 <= b0 for b0, b1 in zip(bounds, bounds[1:]))
+            ):
+                raise ValueError(
+                    f"bounds must be a strictly increasing rank partition [0, ..., {n}] "
+                    f"of length {n_shards + 1}, got {bounds}"
+                )
         locals_ = [table_np[bounds[i] : bounds[i + 1]] for i in range(n_shards)]
         m = _pow2ceil(max(len(t) for t in locals_))
         padded = [_pad_sorted_table(t, m) for t in locals_]
@@ -794,7 +839,11 @@ def refresh_shard(sidx: ShardedIndex, shard: int, new_index: Index, new_table) -
     ``new_index`` must be built with a shard-stable spec: structural
     statics must match the tier and its (padded) leaves must fit the
     stacked leaf shapes.  ``new_table`` is the shard's raw (unpadded)
-    sorted key array.
+    sorted key array — but the *index* must be fitted on
+    :func:`shard_build_table` of it: static kinds normalise predictions
+    by the lookup-time table length, so an index fitted on the raw keys
+    answers wrongly against the padded resident row whenever
+    ``len(new_table) < m`` (exact-power-of-two shards mask this).
     """
     if new_index.kind != sidx.index.kind:
         raise ValueError(f"kind mismatch: tier is {sidx.index.kind!r}, got {new_index.kind!r}")
@@ -851,6 +900,126 @@ def refresh_shard(sidx: ShardedIndex, shard: int, new_index: Index, new_table) -
         jnp.asarray(len(new_table), POS_DTYPE),
         shard,
     )
+
+
+# ---------------------------------------------------------------------------
+# Skew-aware rebalancing: weighted-quantile fences + ordered re-shard
+# ---------------------------------------------------------------------------
+
+
+def shard_build_table(kind: str, part: np.ndarray, m: int) -> np.ndarray:
+    """The table a replacement shard index must be *fitted* on to be
+    installable at stacked capacity ``m`` (mirrors
+    :meth:`ShardedIndex.build`): static kinds fit on the padded table —
+    their query paths normalise model predictions by the lookup-time
+    table length, which is the resident padded row — while
+    self-contained kinds (GAPPED) own their keys and fit on the raw
+    part so a pad key can never become live.  Raises ``ValueError``
+    when ``part`` no longer fits ``m`` (the restack cue)."""
+    from repro.index.impls import query_impl
+
+    part = np.asarray(part, dtype=np.uint64)
+    if query_impl(kind).lookup is not None:
+        return part
+    return _pad_sorted_table(part, m)
+
+
+def weighted_quantile_bounds(merged_keys, fences, weights) -> np.ndarray:
+    """Rank partition of ``merged_keys`` that evens out *observed* load.
+
+    The per-shard query counts ``weights`` (one per current fence slot)
+    define a piecewise-constant traffic density over the sorted global
+    key set: every key in current shard ``s`` carries ``weights[s]``
+    spread evenly over that shard's keys.  Inverting the cumulative
+    weight at ``j/S`` for ``j = 1..S-1`` yields new shard bounds under
+    which each shard would have answered an equal share of the observed
+    traffic — the weighted-quantile split of the ISSUE/ROADMAP item.
+
+    Degenerate inputs stay well-formed: an all-zero weight vector falls
+    back to the even split, and the bounds are clamped to a strictly
+    increasing partition with at least one key per shard (``refresh_shard``
+    rejects empty shards).  Keys outside the current fence range (e.g.
+    pending inserts below the global min) attach to the nearest shard.
+    """
+    merged = np.asarray(merged_keys, dtype=np.uint64)
+    fences = np.asarray(fences, dtype=np.uint64)
+    w = np.asarray(weights, dtype=np.float64).reshape(-1)
+    n, S = len(merged), len(fences)
+    if len(w) != S:
+        raise ValueError(f"got {len(w)} weights for {S} fence slots")
+    if n < S:
+        raise ValueError(f"cannot split {n} keys across {S} shards")
+    own = np.clip(np.searchsorted(fences, merged, side="right") - 1, 0, S - 1)
+    per_owner = np.bincount(own, minlength=S).astype(np.float64)
+    if w.sum() <= 0:
+        w = np.ones(S, dtype=np.float64)
+    # a shard that owns no current keys contributes no density rows;
+    # spread every observed weight over its owner's resident keys
+    per_key = np.where(per_owner[own] > 0, w[own] / np.maximum(per_owner[own], 1.0), 0.0)
+    if per_key.sum() <= 0:
+        per_key = np.ones(n, dtype=np.float64)
+    cum = np.cumsum(per_key)
+    targets = cum[-1] * np.arange(1, S, dtype=np.float64) / S
+    inner = np.searchsorted(cum, targets, side="left") + 1
+    # clamp to a strictly increasing partition with >= 1 key per shard
+    for j in range(len(inner)):
+        lo = (inner[j - 1] + 1) if j else 1
+        inner[j] = max(int(inner[j]), lo)
+    for j in range(len(inner) - 1, -1, -1):
+        hi = (inner[j + 1] - 1) if j + 1 < len(inner) else n - 1
+        inner[j] = min(int(inner[j]), hi)
+    return np.concatenate([[0], inner, [n]]).astype(np.int64)
+
+
+def rebalance_shards(sidx: ShardedIndex, merged_keys, bounds, build_shard) -> ShardedIndex:
+    """Repartition the tier at ``bounds`` over the global sorted key set
+    via the existing donated ``refresh_shard`` swaps — no restack, no
+    host-side re-stacking of untouched leaves.
+
+    Each boundary move creates an install-order dependency only between
+    the two adjacent shards (``refresh_shard`` validates the new shard
+    against the *current* neighbours: a boundary moving right means the
+    right shard must shrink before the left can grow, and vice versa), so
+    the dependency graph is an acyclically oriented path and a simple
+    deferred-retry sweep always terminates in <= ``n_shards`` rounds.
+    Raises ``ValueError`` when a rebuilt shard cannot be installed at all
+    (e.g. it outgrew the stacked table capacity) — the caller's cue to
+    fall back to ``ShardedIndex.build(..., bounds=...)``.
+
+    ``build_shard(build_table)`` builds the per-shard index for a key
+    slice already run through :func:`shard_build_table` (the tier passes
+    its pinned spec, keeping rebalances retune-free).  Every shard is
+    built — and capacity-checked — *before* the first donated install,
+    so a non-installable partition fails with the old tier intact.
+    """
+    merged = np.asarray(merged_keys, dtype=np.uint64)
+    bounds = np.asarray(bounds, dtype=np.int64).reshape(-1)
+    S = sidx.n_shards
+    if len(bounds) != S + 1 or bounds[0] != 0 or bounds[-1] != len(merged):
+        raise ValueError(
+            f"bounds must partition [0, {len(merged)}] into {S} shards, got {bounds.tolist()}"
+        )
+    if (np.diff(bounds) < 1).any():
+        raise ValueError(f"bounds must give every shard >= 1 key, got {bounds.tolist()}")
+    m = int(sidx.tables.shape[1])
+    kind = sidx.index.kind
+    parts = [merged[bounds[s] : bounds[s + 1]] for s in range(S)]
+    built = [build_shard(shard_build_table(kind, p, m)) for p in parts]
+    remaining = set(range(S))
+    while remaining:
+        progressed = False
+        last_err: Exception | None = None
+        for s in sorted(remaining):
+            try:
+                sidx = refresh_shard(sidx, s, built[s], parts[s])
+            except ValueError as e:
+                last_err = e
+                continue
+            remaining.discard(s)
+            progressed = True
+        if not progressed:
+            raise ValueError(f"rebalance not installable via refresh_shard: {last_err}")
+    return sidx
 
 
 # ---------------------------------------------------------------------------

@@ -118,6 +118,26 @@ CATALOGUE: tuple = (
      "refresh_shard rejected (capacity/static) -> full restack"),
     ("tier_pending", "gauge", ("tier",),
      "host-buffered keys (static-kind fallback arm)"),
+    ("route_shard_queries", "counter", ("tier", "shard"),
+     "queries routed to each owner shard (labeled tiers only — feeds rebalancing)"),
+    ("rebalance_total", "counter", ("tier",),
+     "fence rebalances triggered by sustained query-skew drift"),
+    ("rebalance_moved_keys", "counter", ("tier",),
+     "keys whose owner shard changed across rebalances"),
+    ("rebalance_last_imbalance", "gauge", ("tier",),
+     "windowed routing imbalance that triggered the last rebalance"),
+    ("hotcache_hits", "counter", ("tier",),
+     "queries answered by the hot-key cache in one gather"),
+    ("hotcache_misses", "counter", ("tier",),
+     "queries that fell through the hot-key cache to the tier"),
+    ("hotcache_stale", "counter", ("tier",),
+     "lookups that found the cache epoch behind the tier (invalidated)"),
+    ("hotcache_rebuilds", "counter", ("tier",),
+     "hot-key cache rebuilds from the decayed frequency sketch"),
+    ("hotcache_entries", "gauge", ("tier",),
+     "resident hot keys in the cache"),
+    ("hotcache_space_bytes", "gauge", ("tier",),
+     "hot-key cache residency: device arrays + host sketch bytes"),
     ("mutation_requested", "counter", ("kind",),
      "keys requested via repro.index.mutation.insert_batch"),
     ("mutation_absorbed", "counter", ("kind",),

@@ -1,4 +1,4 @@
 """Serving substrate: continuous-batching decode engine + paged KV cache
-with learned-index page table."""
+with learned-index page table + learned hot-key cache."""
 
-from . import engine, kvcache
+from . import engine, hotcache, kvcache

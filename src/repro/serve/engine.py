@@ -148,6 +148,11 @@ class DecodeEngine:
         the tuned tier, if any, act on accumulated drift)."""
         if self.tier is not None:
             self.tier.maybe_compact()
+            # skew-aware fence rebalancing (PR 9): no-op unless the
+            # tier's policy enables it (rebalance_imbalance > 0)
+            mr = getattr(self.tier, "maybe_rebalance", None)
+            if mr is not None:
+                mr()
         self._admit()
         live = [s for s in range(self.b) if self.slot_req[s] is not None]
         if not live:

@@ -1,0 +1,354 @@
+"""Learned hot-key cache: a model-fronted read cache for Zipf traffic.
+
+The serving analogue of the paper's speed-up-per-byte question: a few
+thousand entries of *auxiliary serving state* in front of a
+:class:`repro.tune.rebuild.TunedTier` answer the hot head of a skewed
+read mix in ONE gather instead of a full sharded dispatch.  The design
+is the learned-Bloom-filter idea (Kraska et al.) specialised to exact
+membership over a mined hot set:
+
+* **Sketch** — :class:`KeySketch`, a bounded host-side key-frequency
+  sketch fed by every lookup batch and exponentially decayed at each
+  rebuild, so yesterday's hot set ages out instead of squatting.
+* **Mined hot set** — :meth:`HotKeyCache.rebuild` takes the sketch's
+  top-``capacity`` keys, sorts them, and resolves their predecessor
+  ranks once through the tier's drop-free ``ref`` path.
+* **Model front** — the same monotone-linear root model the ``GAPPED``
+  kind routes with (:func:`repro.index.updatable._route`): normalise
+  the query, predict its slot, bounded-search the measured ±eps window
+  (:func:`repro.core.search.bounded_upper_bound`, static step count
+  from the cache capacity, so the probe compiles ONCE per capacity).
+  A mispredict can only *miss* — never return a wrong rank — so model
+  quality affects speed, not correctness.
+* **Hits** — exact key matches answer from the resident rank array in
+  one gather; a batch of all-hits skips the tier dispatch entirely.
+* **Misses** — fall through to ``tier.lookup`` padded to the incoming
+  batch shape (a shape the tier is already traced for — the miss path
+  can never trigger a new compile mid-serve), then scatter back.
+* **Invalidation** — the tier bumps :attr:`TunedTier.epoch` on every
+  ``insert_batch`` / ``compact`` / ``refresh_shard`` / restack /
+  rebalance; a cache whose ``built_epoch`` lags is *stale* and is
+  rebuilt (or bypassed) before it can serve a wrong answer.  The
+  ``hotcache_stale`` counter makes skipped invalidation auditable —
+  the soak suite's seeded-bug fixture asserts on exactly this seam.
+
+Residency is part of the documented space budget (``docs/serving.md``):
+``hotcache_space_bytes`` reports device arrays + host sketch, and every
+hit/miss/stale/rebuild decision is a ``hotcache_*`` catalogue metric.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import search
+from repro.core.cdf import POS_DTYPE
+from repro.index.impls import _MAXKEY, _bucket_steps, _pow2ceil
+from repro.index.index import count_trace
+
+__all__ = ["KeySketch", "HotKeyCache"]
+
+
+class KeySketch:
+    """Bounded, decayed key-frequency sketch (host-side numpy).
+
+    Tracks approximate per-key hit weights in at most ``capacity``
+    slots.  ``update`` folds a query batch in exactly (np.unique +
+    scatter-add); when the slot budget overflows, the lightest keys are
+    evicted (they are, by construction, the least likely hot-set
+    members).  ``age`` multiplies every weight by ``decay`` and prunes
+    dust, so sustained traffic dominates stale bursts.
+    """
+
+    def __init__(self, capacity: int = 16384):
+        if capacity < 1:
+            raise ValueError("sketch capacity must be >= 1")
+        self.capacity = int(capacity)
+        self.keys = np.empty(0, dtype=np.uint64)  # sorted unique
+        self.weights = np.empty(0, dtype=np.float64)
+
+    def update(self, queries, weight: float = 1.0) -> None:
+        """Fold a query batch in; ``weight`` scales the batch's counts
+        (an operator priming a known-hot span against a large traffic
+        backlog passes weight > 1 so the prime isn't aged into noise)."""
+        q, cnt = np.unique(np.asarray(queries, dtype=np.uint64), return_counts=True)
+        if len(q) == 0:
+            return
+        keys = np.union1d(self.keys, q)
+        w = np.zeros(len(keys), dtype=np.float64)
+        w[np.searchsorted(keys, self.keys)] = self.weights
+        w[np.searchsorted(keys, q)] += cnt * float(weight)
+        if len(keys) > self.capacity:
+            keep = np.sort(np.argpartition(w, -self.capacity)[-self.capacity :])
+            keys, w = keys[keep], w[keep]
+        self.keys, self.weights = keys, w
+
+    def age(self, decay: float = 0.5) -> None:
+        """Exponential decay + dust pruning (weights that rounded to ~0)."""
+        self.weights = self.weights * float(decay)
+        live = self.weights > 1e-6
+        if not live.all():
+            self.keys, self.weights = self.keys[live], self.weights[live]
+
+    def top(self, k: int) -> np.ndarray:
+        """The ``k`` heaviest keys, sorted ascending (ties by key order)."""
+        if len(self.keys) <= k:
+            return self.keys.copy()
+        pick = np.argpartition(self.weights, -k)[-k:]
+        return np.sort(self.keys[pick])
+
+    def space_bytes(self) -> int:
+        return int(self.keys.nbytes + self.weights.nbytes)
+
+
+@partial(jax.jit, static_argnames=("steps",))
+def _probe(keys, ranks, model, n_hot, q, *, steps: int):
+    """Model-guided membership probe over the resident hot set.
+
+    Returns ``(hit, rank)``: ``hit[i]`` iff ``q[i]`` is exactly a live
+    resident key, in which case ``rank[i]`` is its cached predecessor
+    rank.  Pad slots sit at positions ``>= n_hot`` so a pad match can
+    never count as a hit; an eps-window mispredict degrades to a miss.
+    """
+    count_trace("hotcache", "probe")  # python side effect: once per trace
+    C = keys.shape[0]
+    u = jnp.clip((q.astype(jnp.float64) - model["kmin"]) * model["inv_span"], 0.0, 1.0)
+    pred = jnp.clip(jnp.floor(model["slope"] * u + model["icept"]), -4.0e15, 4.0e15)
+    pred = jnp.clip(pred.astype(POS_DTYPE), 0, C - 1)
+    lo = jnp.clip(pred - model["eps"], 0, C - 1)
+    hi = jnp.clip(pred + model["eps"], 0, C - 1)
+    ub = search.bounded_upper_bound(keys, q, lo, hi - lo + 1, steps=steps)
+    pos = jnp.clip(ub - 1, 0, C - 1)
+    hit = (jnp.take(keys, pos) == q) & (pos < n_hot)
+    return hit, jnp.take(ranks, pos)
+
+
+@jax.jit
+def _merge_misses(hit, cached, tier_ranks, inv):
+    """Fixed-shape miss merge: every operand is batch-shaped (``inv``
+    gathers each query's compacted miss slot), so the merge compiles
+    once per batch shape regardless of how many queries missed."""
+    return jnp.where(hit, cached, jnp.take(tier_ranks, inv))
+
+
+class HotKeyCache:
+    """A learned hot-key cache wrapped around a :class:`TunedTier`.
+
+    Drop-in for the tier on the serving path: ``lookup`` probes the
+    resident hot set first, and every mutating / policy method delegates
+    to the wrapped tier, so :class:`repro.serve.engine.DecodeEngine` and
+    :func:`repro.obs.timed_lookup` accept either object unchanged.
+
+    ``capacity`` is rounded up to a power of two (static probe steps =
+    one compiled probe per capacity).  ``rebuild_every > 0`` re-mines
+    the hot set from the sketch after that many lookups; staleness
+    (tier epoch moved) triggers an immediate rebuild when
+    ``rebuild_on_stale`` (the default) else a full-batch bypass — both
+    are coherent, only their latency profile differs.
+    """
+
+    def __init__(
+        self,
+        tier,
+        *,
+        capacity: int = 4096,
+        sketch_capacity: int | None = None,
+        decay: float = 0.5,
+        rebuild_every: int = 0,
+        rebuild_on_stale: bool = True,
+    ):
+        self.tier = tier
+        self.capacity = _pow2ceil(capacity)
+        self.sketch = KeySketch(sketch_capacity or 4 * self.capacity)
+        self.decay = float(decay)
+        self.rebuild_every = int(rebuild_every)
+        self.rebuild_on_stale = bool(rebuild_on_stale)
+        self._steps = _bucket_steps(self.capacity)
+        self._merge_warmed: set = set()
+        self._lookups_since_build = 0
+        self.built_epoch = -1  # behind any real epoch until the first rebuild
+        self.n_hot = 0
+        self._keys = jnp.full((self.capacity,), _MAXKEY, dtype=jnp.uint64)
+        self._ranks = jnp.full((self.capacity,), search.NO_PRED, dtype=POS_DTYPE)
+        self._model = {
+            "kmin": jnp.float64(0.0),
+            "inv_span": jnp.float64(0.0),
+            "slope": jnp.float64(0.0),
+            "icept": jnp.float64(0.0),
+            "eps": jnp.asarray(0, dtype=POS_DTYPE),
+        }
+
+    # -- passthroughs (timed_lookup / DecodeEngine duck-typing) -----------
+    @property
+    def spec(self):
+        return self.tier.spec
+
+    @property
+    def policy(self):
+        return self.tier.policy
+
+    @property
+    def epoch(self) -> int:
+        return self.tier.epoch
+
+    def insert_batch(self, new_keys) -> None:
+        self.tier.insert_batch(new_keys)
+
+    def maybe_compact(self):
+        return self.tier.maybe_compact()
+
+    def maybe_rebalance(self):
+        return self.tier.maybe_rebalance()
+
+    # -- lifecycle ---------------------------------------------------------
+    def stale(self) -> bool:
+        return self.built_epoch != self.tier.epoch
+
+    def space_bytes(self) -> int:
+        """Cache residency: device arrays + model scalars + host sketch."""
+        dev = self._keys.size * 8 + self._ranks.size * 8 + 5 * 8
+        return int(dev) + self.sketch.space_bytes()
+
+    def rebuild(self) -> int:
+        """Re-mine the hot set from the (aged) sketch and refit the probe
+        model; returns the resident entry count.  Ranks are resolved
+        through the tier's drop-free ``ref`` dispatch with telemetry off,
+        so a rebuild never perturbs the routing counters it is fed by."""
+        from repro import obs
+        from repro.dist.sharded_index import sharded_lookup
+
+        self.sketch.age(self.decay)
+        hot = self.sketch.top(self.capacity)
+        hot = hot[hot != _MAXKEY]  # reserved pad sentinel, never a live key
+        self.n_hot = len(hot)
+        if self.n_hot:
+            padded = np.full(self.capacity, _MAXKEY, dtype=np.uint64)
+            padded[: self.n_hot] = hot
+            ranks = sharded_lookup(
+                self.tier.sidx,
+                jnp.asarray(padded),
+                self.tier.ctx,
+                backend=self.tier.policy.backend,
+                mode="ref",
+            )
+            self._keys = jnp.asarray(padded)
+            self._ranks = jnp.asarray(ranks, dtype=POS_DTYPE)
+            self._model = self._fit(hot)
+            # A rebuild is off-path maintenance: block on the freshly
+            # resolved residency here so its device work can never leak
+            # into (and be billed to) the next serving lookup.
+            jax.block_until_ready((self._keys, self._ranks))
+        self.built_epoch = self.tier.epoch
+        self._lookups_since_build = 0
+        lbl = dict(tier=getattr(self.tier, "name", "-"))
+        obs.metric("hotcache_rebuilds").inc(**lbl)
+        obs.metric("hotcache_entries").set(self.n_hot, **lbl)
+        obs.metric("hotcache_space_bytes").set(self.space_bytes(), **lbl)
+        return self.n_hot
+
+    def _fit(self, hot: np.ndarray) -> dict:
+        """Monotone linear slot model + measured eps (host f64, matching
+        the probe's device arithmetic; +2 margin absorbs FMA drift — an
+        underestimate could only cost a miss, never a wrong rank)."""
+        n = len(hot)
+        kmin = np.float64(hot[0])
+        span = np.float64(hot[-1]) - kmin
+        inv_span = np.float64(1.0 / span) if span > 0 else np.float64(0.0)
+        u = np.clip((hot.astype(np.float64) - kmin) * inv_span, 0.0, 1.0)
+        slots = np.arange(n, dtype=np.float64)
+        if n > 1 and span > 0:
+            slope, icept = np.polyfit(u, slots, 1)
+        else:
+            slope, icept = np.float64(0.0), np.float64(0.0)
+        pred = np.clip(np.floor(slope * u + icept), -4.0e15, 4.0e15)
+        eps = int(np.max(np.abs(pred - slots))) + 2
+        return {
+            "kmin": jnp.float64(kmin),
+            "inv_span": jnp.float64(inv_span),
+            "slope": jnp.float64(slope),
+            "icept": jnp.float64(icept),
+            "eps": jnp.asarray(min(eps, self.capacity), dtype=POS_DTYPE),
+        }
+
+    # -- serving path ------------------------------------------------------
+    def lookup(self, queries, **kw):
+        """Tier-compatible lookup: probe the hot set, answer hits from
+        the rank residency in one gather, fall misses through to the
+        wrapped tier (padded to the incoming batch shape, which the tier
+        is already traced for — a partial-miss batch can never compile),
+        scatter back.  Bit-exact vs the cache-off tier by construction:
+        hits replay ranks the tier itself resolved at the current
+        epoch."""
+        from repro import obs
+
+        q_np = np.asarray(queries, dtype=np.uint64)
+        self.sketch.update(q_np)
+        self._lookups_since_build += 1
+        lbl = dict(tier=getattr(self.tier, "name", "-"))
+        if self.stale():
+            obs.metric("hotcache_stale").inc(**lbl)
+            if self.rebuild_on_stale:
+                self.rebuild()
+            else:
+                obs.metric("hotcache_misses").inc(len(q_np), **lbl)
+                return self.tier.lookup(queries, **kw)
+        elif self.rebuild_every and self._lookups_since_build >= self.rebuild_every:
+            self.rebuild()
+        if self.n_hot == 0:
+            obs.metric("hotcache_misses").inc(len(q_np), **lbl)
+            return self.tier.lookup(queries, **kw)
+        q = jnp.asarray(q_np)
+        hit, cached = _probe(
+            self._keys, self._ranks, self._model, self.n_hot, q, steps=self._steps
+        )
+        if len(q_np) not in self._merge_warmed:
+            # trace the miss merge on the FIRST batch of each shape
+            # (typically warmup), so the first partial-miss batch later
+            # never pays its compile inside a timed serving window
+            self._merge_warmed.add(len(q_np))
+            zeros = jnp.zeros(len(q_np), dtype=POS_DTYPE)
+            jax.block_until_ready(_merge_misses(hit, cached, zeros, zeros))
+        hit_np = np.asarray(hit)
+        n_hit = int(hit_np.sum())
+        obs.metric("hotcache_hits").inc(n_hit, **lbl)
+        obs.metric("hotcache_misses").inc(len(q_np) - n_hit, **lbl)
+        if n_hit == len(q_np):
+            return cached  # one gather, zero tier dispatches
+        # fixed-shape fall-through: misses are compacted to the front of a
+        # batch-shaped buffer (pad lanes replay the first miss), and the
+        # scatter-back is a gather + where over batch-shaped operands — no
+        # op in the miss path ever sees a miss-count-dependent shape, so a
+        # partial-miss batch can never compile mid-serve
+        miss_idx = np.flatnonzero(~hit_np)
+        padded = np.full(len(q_np), q_np[miss_idx[0]], dtype=np.uint64)
+        padded[: len(miss_idx)] = q_np[miss_idx]
+        inv = np.zeros(len(q_np), dtype=POS_DTYPE)
+        inv[miss_idx] = np.arange(len(miss_idx))
+        tier_ranks = jnp.asarray(self.tier.lookup(padded, **kw), dtype=POS_DTYPE)
+        return _merge_misses(hit, cached, tier_ranks, jnp.asarray(inv))
+
+    # -- telemetry ---------------------------------------------------------
+    def metrics(self) -> dict:
+        """Wrapped tier metrics + a ``hotcache`` section rendered from
+        the registry snapshot under the tier's label."""
+        from repro import obs
+
+        snap = obs.snapshot(prefix="hotcache_")
+        lbl = dict(tier=getattr(self.tier, "name", "-"))
+        out = self.tier.metrics()
+        out["hotcache"] = {
+            "entries": self.n_hot,
+            "capacity": self.capacity,
+            "space_bytes": self.space_bytes(),
+            "built_epoch": self.built_epoch,
+            "stale": self.stale(),
+            "hits": int(obs.sample_value(snap, "hotcache_hits", **lbl)),
+            "misses": int(obs.sample_value(snap, "hotcache_misses", **lbl)),
+            "stale_detected": int(obs.sample_value(snap, "hotcache_stale", **lbl)),
+            "rebuilds": int(obs.sample_value(snap, "hotcache_rebuilds", **lbl)),
+        }
+        return out

@@ -57,9 +57,13 @@ from repro.dist.sharded_index import (
     compact_shard,
     derived_tier_metrics,
     insert_into_shard,
+    rebalance_shards,
     refresh_shard,
     route_owners,
+    shard_build_table,
+    shard_query_weights,
     sharded_lookup,
+    weighted_quantile_bounds,
 )
 from repro.index import mutation, registry
 from repro.index.mutation import NeedsRebuild
@@ -70,7 +74,9 @@ from .pareto import best_spec_for_budget
 
 @dataclass(frozen=True)
 class RebuildPolicy:
-    """When to refresh a shard, when to re-tune the whole tier."""
+    """When to refresh a shard, when to re-tune the whole tier — and,
+    when enabled, when sustained query-skew drift rebalances the fences
+    (``rebalance_imbalance > 0``; see :meth:`TunedTier.maybe_rebalance`)."""
 
     space_budget_pct: float = 2.0  # bi-criteria budget for re-tuning
     shard_refresh_frac: float = 0.05  # pending/resident keys that triggers a shard refresh
@@ -78,6 +84,13 @@ class RebuildPolicy:
     kinds: tuple | None = None  # restrict the re-tune grid (None = every registered kind)
     n_queries: int = 2048  # simulation-query batch for the re-tune sweep
     backend: str = "xla"
+    #: windowed mean routing imbalance (busiest / even shard load) that
+    #: triggers a fence rebalance; 0.0 (the default) disables rebalancing
+    rebalance_imbalance: float = 0.0
+    #: windowed drop rate (capacity-factored exchange) that also triggers it
+    rebalance_drop_rate: float = 0.002
+    #: lookups a drift window must span before it counts as *sustained*
+    rebalance_min_lookups: int = 8
 
 
 #: lifecycle counter fields, in the order metrics() reports them.  Each
@@ -157,20 +170,39 @@ class TunedTier:
         self.name = name or f"tier{next(_TIER_IDS)}"
         self.counters = _Counters(self.name)
         self._routing = _fresh_tier_metrics()  # legacy dict sink (kept in step)
+        #: staleness epoch: bumped on every state change that can alter
+        #: served answers (insert/compact/refresh/restack/rebalance).
+        #: Derived read structures (repro.serve.hotcache.HotKeyCache)
+        #: compare their build epoch against this to detect staleness.
+        self.epoch = 0
+        # (counters, per-shard weights) snapshot opening the current
+        # drift-detection window; None until the first maybe_rebalance
+        self._rb_window: tuple | None = None
 
     def _updatable(self) -> bool:
         return self.spec.kind in mutation.updatable_kinds()
 
+    def _bump_epoch(self) -> None:
+        """Mark every derived read structure (hot-key caches) stale."""
+        self.epoch += 1
+
     # -- serving path ------------------------------------------------------
     def lookup(self, queries, **kw):
         """Tier lookup with telemetry on (imbalance/drop counters,
-        attributed to this tier's own sink as well as the global view)."""
+        attributed to this tier's own sink as well as the global view).
+        When the policy enables rebalancing, each lookup also feeds the
+        drift window (:meth:`maybe_rebalance`) — answers are computed
+        against the pre-rebalance fences, so the batch that trips the
+        threshold is still served exactly."""
         self.counters.lookups += 1
         kw.setdefault("telemetry", True)
         kw.setdefault("telemetry_sink", self._routing)
         kw.setdefault("telemetry_label", self.name)
         kw.setdefault("backend", self.policy.backend)
-        return sharded_lookup(self.sidx, queries, self.ctx, **kw)
+        out = sharded_lookup(self.sidx, queries, self.ctx, **kw)
+        if self.policy.rebalance_imbalance > 0:
+            self.maybe_rebalance()
+        return out
 
     # -- drift: absorb -> overflow ----------------------------------------
     def insert_batch(self, new_keys) -> None:
@@ -183,6 +215,7 @@ class TunedTier:
             return
         self.counters.ingested += len(new_keys)
         self._since_retune += len(new_keys)
+        self._bump_epoch()
         if self._updatable():
             todo = new_keys
             while len(todo):
@@ -270,6 +303,7 @@ class TunedTier:
                     did = "refresh"
                     continue
                 self.counters.shard_compactions += 1
+                self._bump_epoch()
                 did = "compact"
             return did
         for s in range(self.sidx.n_shards):
@@ -284,8 +318,14 @@ class TunedTier:
         the donated ``refresh_shard`` path; fall back to a full restack
         when the rebuilt shard no longer fits the stacked structure."""
         merged = np.unique(np.concatenate([self._shard_keys(s)] + self._pending[s]))
-        new_index = registry.entry(self.spec.kind).build(self.spec, merged)
         try:
+            # static kinds must be FITTED on the padded resident row
+            # (shard_build_table), or the installed model mispredicts
+            # against the stacked capacity-m table
+            build_tab = shard_build_table(
+                self.spec.kind, merged, int(self.sidx.tables.shape[1])
+            )
+            new_index = registry.entry(self.spec.kind).build(self.spec, build_tab)
             self.sidx = refresh_shard(self.sidx, s, new_index, merged)
         except ValueError:
             # outgrew the tier's table capacity / leaf shapes / statics
@@ -295,6 +335,7 @@ class TunedTier:
         self.counters.shard_refreshes += 1
         self.counters.pending -= self._pending_count(s)
         self._pending[s] = []
+        self._bump_epoch()
 
     def retune(self) -> None:
         """Re-run the bi-criteria selection on the merged table and
@@ -309,12 +350,88 @@ class TunedTier:
             table_np, p.space_budget_pct, kinds=p.kinds, n_queries=p.n_queries, backend=p.backend
         )
 
-    def _restack(self, table_np: np.ndarray, spec: IndexSpec) -> None:
+    def _restack(self, table_np: np.ndarray, spec: IndexSpec, *, bounds=None) -> None:
         self.spec = spec
-        self.sidx = ShardedIndex.build(spec, table_np, n_shards=self.sidx.n_shards)
+        self.sidx = ShardedIndex.build(
+            spec, table_np, n_shards=self.sidx.n_shards, bounds=bounds
+        )
         self._pending = [[] for _ in range(self.sidx.n_shards)]
         self._since_retune = 0
         self.counters.pending = 0
+        self._rb_window = None  # fences moved: the drift window restarts
+        self._bump_epoch()
+
+    # -- skew-aware rebalancing (query-driven, zero retunes) ---------------
+    def maybe_rebalance(self) -> str | None:
+        """Rebalance the fences when routing drift is *sustained*.
+
+        Reads the tier's ``route_*`` / ``route_shard_queries`` registry
+        counters, windows them against the snapshot taken at the last
+        check, and triggers :meth:`rebalance` when the window spans at
+        least :attr:`RebuildPolicy.rebalance_min_lookups` lookups AND its
+        mean imbalance crosses :attr:`RebuildPolicy.rebalance_imbalance`
+        (or its drop rate crosses :attr:`RebuildPolicy.rebalance_drop_rate`).
+        Disabled (returns ``None`` immediately) while
+        ``rebalance_imbalance <= 0`` — the default, so plain tiers pay
+        zero snapshot cost per lookup."""
+        p = self.policy
+        if p.rebalance_imbalance <= 0:
+            return None
+        cur = _tier_counters_from_obs(self.name)
+        shw = shard_query_weights(self.name, self.sidx.n_shards)
+        if self._rb_window is None:
+            self._rb_window = (cur, shw)
+            return None
+        prev, shw0 = self._rb_window
+        if cur["lookups"] - prev["lookups"] < p.rebalance_min_lookups:
+            return None
+        d_even = cur["routed_even"] - prev["routed_even"]
+        d_q = cur["queries"] - prev["queries"]
+        imb = (cur["routed_max"] - prev["routed_max"]) / d_even if d_even > 0 else 0.0
+        drop = (cur["dropped"] - prev["dropped"]) / d_q if d_q > 0 else 0.0
+        self._rb_window = (cur, shw)
+        if imb < p.rebalance_imbalance and drop <= p.rebalance_drop_rate:
+            return None
+        self.rebalance(weights=np.maximum(shw - shw0, 0.0), imbalance=imb)
+        return "rebalance"
+
+    def rebalance(self, weights=None, *, imbalance: float | None = None) -> None:
+        """Recompute the router fences from the observed per-shard owner
+        histogram (weighted-quantile split) and re-shard through the
+        donated ``refresh_shard`` path — the tier's pinned spec is reused
+        as-is (zero full retunes), pending/delta keys merge into the new
+        partition, and answers stay bit-exact before and after.  Falls
+        back to a full restack *at the same skew-aware bounds* when a
+        rebuilt shard no longer fits the stacked structure."""
+        from repro import obs
+
+        merged = self._merged_table()
+        if weights is None:
+            weights = shard_query_weights(self.name, self.sidx.n_shards)
+        old_fences = np.asarray(self.sidx.fences)
+        bounds = weighted_quantile_bounds(merged, old_fences, weights)
+        S = self.sidx.n_shards
+        old_own = np.clip(np.searchsorted(old_fences, merged, side="right") - 1, 0, S - 1)
+        new_own = np.repeat(np.arange(S), np.diff(bounds))
+        moved = int((old_own != new_own).sum())
+        build = registry.entry(self.spec.kind).build
+        try:
+            self.sidx = rebalance_shards(
+                self.sidx, merged, bounds, lambda part: build(self.spec, part)
+            )
+        except ValueError:
+            self.counters.forced_restacks += 1
+            self._restack(merged, self.spec, bounds=bounds)
+        else:
+            self._pending = [[] for _ in range(S)]
+            self._since_retune = 0
+            self.counters.pending = 0
+            self._rb_window = None
+            self._bump_epoch()
+        obs.metric("rebalance_total").inc(tier=self.name)
+        obs.metric("rebalance_moved_keys").inc(moved, tier=self.name)
+        if imbalance is not None:
+            obs.metric("rebalance_last_imbalance").set(imbalance, tier=self.name)
 
     # -- deprecated aliases (one release) ----------------------------------
     def ingest(self, new_keys) -> None:
@@ -347,11 +464,16 @@ class TunedTier:
             f: int(obs.sample_value(snap, f"tier_{f}", tier=self.name))
             for f in _COUNTER_FIELDS
         }
+        rb = obs.snapshot(prefix="rebalance_")
         return {
             "spec": self.spec.display_name(),
             "n_shards": self.sidx.n_shards,
             "n_keys": int(self.sidx.counts.sum()),
             "space_bytes": int(self.sidx.space_bytes()),
             **counters,
+            "rebalances": int(obs.sample_value(rb, "rebalance_total", tier=self.name)),
+            "rebalance_moved_keys": int(
+                obs.sample_value(rb, "rebalance_moved_keys", tier=self.name)
+            ),
             "routing": derived_tier_metrics(_tier_counters_from_obs(self.name)),
         }

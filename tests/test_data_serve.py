@@ -139,3 +139,102 @@ def test_decode_engine_drives_tuned_tier():
     np.testing.assert_array_equal(
         np.asarray(tier.lookup(q2, mode="ref")), true_ranks(merged, q2)
     )
+
+
+def test_hotcache_coherent_through_mutation_lifecycle(rng):
+    """Cache-on answers must stay bit-identical to a cache-off tier on
+    the SAME state through every mutation arm: insert (host-buffered
+    pending on a static kind), shard refresh, and fence rebalance."""
+    from repro.core import as_table
+    from repro.index import RMISpec
+    from repro.serve.hotcache import HotKeyCache
+    from repro.tune import RebuildPolicy, TunedTier
+
+    table = as_table(rng.integers(1, 2**61, size=3000, dtype=np.uint64))
+    policy = RebuildPolicy(shard_refresh_frac=10.0, retune_frac=10.0)
+    tier = TunedTier(table, n_shards=4, policy=policy, spec=RMISpec(b=64))
+    cache = HotKeyCache(tier, capacity=256)
+    hot = rng.choice(table, size=200).astype(np.uint64)
+    cache.sketch.update(hot)
+    cache.rebuild()
+
+    def qs():
+        mix = np.concatenate(
+            [
+                rng.choice(table, size=64),
+                rng.choice(hot, size=32),
+                rng.integers(0, 2**61, size=32, dtype=np.uint64),
+            ]
+        )
+        mix[0] = np.uint64(0)  # below-min: NO_PRED must round-trip too
+        return mix
+
+    def assert_coherent():
+        q = qs()
+        np.testing.assert_array_equal(
+            np.asarray(cache.lookup(q, mode="ref")),
+            np.asarray(tier.lookup(q, mode="ref")),
+        )
+
+    assert_coherent()
+    # insert: static kind buffers host-side; pending keys are invisible
+    # to BOTH paths until a refresh lands them — coherence must hold on
+    # the tier's served (pre-refresh) state
+    new = np.unique(rng.integers(1, 2**61, size=200, dtype=np.uint64))
+    cache.insert_batch(new)
+    assert tier.counters.pending > 0
+    assert_coherent()
+    # refresh: pending keys land, epoch bumps, the next cached lookup
+    # detects staleness and rebuilds before serving
+    for s in range(tier.sidx.n_shards):
+        tier.refresh(s)
+    assert cache.stale()
+    assert_coherent()
+    assert not cache.stale()  # the coherence lookup itself rebuilt
+    # rebalance: fences move under the cache
+    tier.rebalance(weights=np.array([8.0, 1.0, 1.0, 1.0]))
+    assert cache.stale()
+    assert_coherent()
+
+
+def test_hotcache_stale_epoch_is_load_bearing(rng):
+    """Negative control for the epoch check: force the cache to skip
+    invalidation (rebuild_on_stale=False bypasses instead) and verify
+    (a) the epoch comparison flags staleness after a mutation, and
+    (b) with the check disabled entirely, served answers really would
+    diverge — the seam the soak suite's seeded-bug fixture leans on."""
+    from repro.core import as_table, true_ranks
+    from repro.index import GappedSpec
+    from repro.serve.hotcache import HotKeyCache
+    from repro.tune import RebuildPolicy, TunedTier
+
+    table = as_table(rng.integers(1, 2**61, size=2000, dtype=np.uint64))
+    tier = TunedTier(
+        table,
+        n_shards=2,
+        policy=RebuildPolicy(retune_frac=10.0),
+        spec=GappedSpec(leaf_cap=64, fill=0.5, delta_cap=256),
+    )
+    cache = HotKeyCache(tier, capacity=128, rebuild_on_stale=False)
+    hot = table[-64:].copy()
+    cache.sketch.update(hot)
+    cache.rebuild()
+    assert not cache.stale()
+    # a mutation bumps the epoch: the cache flags itself stale...
+    below = np.setdiff1d(
+        np.unique(rng.integers(1, int(table[0]), size=40, dtype=np.uint64)), table
+    )
+    cache.insert_batch(below)
+    merged = np.union1d(table, below)
+    assert cache.stale()
+    # ...and the bypass arm serves tier-fresh (correct) answers anyway
+    np.testing.assert_array_equal(
+        np.asarray(cache.lookup(hot, mode="ref")), true_ranks(merged, hot)
+    )
+    stale = int(cache.metrics()["hotcache"]["stale_detected"])
+    assert stale >= 1
+    # (b) the resident ranks really are stale: replaying them against the
+    # merged oracle diverges, so WITHOUT the epoch check these would have
+    # been served as wrong answers
+    resident = np.asarray(cache._ranks)[: cache.n_hot]
+    assert not (resident == true_ranks(merged, hot)).all()

@@ -326,8 +326,18 @@ def _slo_report(**over):
         "slo/p99_us": 400.0,
         "slo/drop_rate": 0.0,
         "slo/exact": 1.0,
+        "slo/cache_off/p50_us": 100.0,
+        "slo/cache_off/p99_us": 400.0,
+        "slo/cache/p50_us": 50.0,
+        "slo/cache/p99_us": 200.0,
+        "slo/cache/exact": 1.0,
+        "slo/adv/drop_rate": 0.0,
+        "slo/adv/retunes": 0.0,
+        "slo/adv/hammer/exact": 1.0,
     }
     metrics.update(over)
+    # drop a metric by passing <name>=None
+    metrics = {k: v for k, v in metrics.items() if v is not None}
     return {"metrics": metrics, "slo": {"drop_rate_max": 0.01}}
 
 
@@ -341,6 +351,13 @@ def test_serve_slo_absolute_gates():
     assert any("drop_rate" in f for f in check_slo(_slo_report(**{"slo/drop_rate": 0.5})))
     assert any("quantiles" in f for f in check_slo(_slo_report(**{"slo/p99_us": 1.0})))
     assert any("exact" in f for f in check_slo(_slo_report(**{"slo/exact": 0.0})))
+    # PR 9 gates: adversarial drop rate, the retune-free invariant, the
+    # cache leg's quantile sanity, and a leg dropped from the report
+    assert any("drop_rate" in f for f in check_slo(_slo_report(**{"slo/adv/drop_rate": 0.5})))
+    assert any("retunes" in f for f in check_slo(_slo_report(**{"slo/adv/retunes": 2.0})))
+    assert any("quantiles" in f for f in check_slo(_slo_report(**{"slo/cache/p99_us": 1.0})))
+    assert any("exact" in f for f in check_slo(_slo_report(**{"slo/adv/hammer/exact": 0.0})))
+    assert any("missing" in f for f in check_slo(_slo_report(**{"slo/adv/retunes": None})))
 
 
 def test_obs_cli_dump_and_diff(tmp_path):

@@ -1,0 +1,253 @@
+"""Stateful serving soak suite: cache-fronted tier vs a sorted-numpy oracle.
+
+The PR-9 acceptance harness: a :class:`SoakHarness` interleaves lookups,
+inserts, compactions, refreshes, fence rebalances, and hot-key-cache
+rebuilds against a plain sorted-numpy oracle, asserting bit-exactness
+(including the ``NO_PRED``/``DROPPED`` sentinels) and structural
+invariants after every operation.
+
+Three profiles:
+
+* **fast** (tier-1, hypothesis-free) — a deterministic scripted soak
+  covering every operation type, plus the seeded-coherence-bug
+  regression (the suite must *catch* a skipped cache invalidation).
+* **hypothesis** (tier-1 when hypothesis is installed) — a
+  ``RuleBasedStateMachine`` drawing random operation interleavings.
+* **deep** (``-m soak``, the scheduled CI lane) — the same machine and
+  script at much larger step counts.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import as_table, true_ranks
+from repro.dist.sharded_index import DROPPED
+from repro.index import GappedSpec
+from repro.serve.hotcache import HotKeyCache
+from repro.tune.rebuild import RebuildPolicy, TunedTier
+
+try:
+    from hypothesis import settings
+    from hypothesis import strategies as st
+    from hypothesis.stateful import (
+        RuleBasedStateMachine,
+        initialize,
+        invariant,
+        rule,
+        run_state_machine_as_test,
+    )
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # hypothesis is a [test] extra, not baked into the image
+    HAVE_HYPOTHESIS = False
+
+# stay well under 2**64: max-key is GAPPED's pad/route sentinel, and the
+# soak's near-miss probes (key+1) must never wrap
+_KEYSPACE = 2**61
+
+
+class SoakHarness:
+    """A hot-key-cache-fronted ``TunedTier`` plus the oracle key set.
+
+    Uses the updatable ``GAPPED`` kind so ingested keys are visible to
+    lookups immediately (device-side absorb) — the oracle is simply the
+    union of every key ever inserted, with no pending-visibility
+    bookkeeping.  Static-kind (buffered-pending) coherence is covered by
+    ``tests/test_data_serve.py``.
+    """
+
+    def __init__(self, seed: int, n0: int = 1200, n_shards: int = 4):
+        self.rng = np.random.default_rng(seed)
+        self.oracle = as_table(
+            self.rng.integers(1, _KEYSPACE, size=n0, dtype=np.uint64)
+        )
+        self.tier = TunedTier(
+            self.oracle,
+            n_shards=n_shards,
+            # retune_frac=10: the soak exercises refresh/rebalance/compact,
+            # never the (expensive, spec-changing) full re-tune sweep
+            policy=RebuildPolicy(retune_frac=10.0, shard_refresh_frac=0.25),
+            spec=GappedSpec(leaf_cap=64, fill=0.5, delta_cap=256),
+        )
+        self.cache = HotKeyCache(self.tier, capacity=256)
+
+    # -- operations (the state machine's rules call straight into these) --
+    def queries(self, n: int = 96) -> np.ndarray:
+        """A soak query mix: live keys, key+1 near-misses, uniform
+        randoms, and a below-minimum probe (the ``NO_PRED`` arm)."""
+        hits = self.rng.choice(self.oracle, size=n // 2)
+        probes = self.rng.choice(self.oracle, size=n // 4) + np.uint64(1)
+        rand = self.rng.integers(0, _KEYSPACE, size=n - len(hits) - len(probes))
+        qs = np.concatenate([hits, probes, rand.astype(np.uint64)])
+        qs[0] = np.uint64(0)  # below-min: the oracle answers NO_PRED (-1)
+        return qs
+
+    def do_lookup(self) -> None:
+        qs = self.queries()
+        want = true_ranks(self.oracle, qs)
+        got = np.asarray(self.cache.lookup(qs))
+        # the capacity-factored exchange may drop, but must never lie:
+        # every non-dropped answer is the oracle's, sentinels included
+        bad = (got != want) & (got != DROPPED)
+        assert not bad.any(), (qs[bad][:8], got[bad][:8], want[bad][:8])
+
+    def do_insert(self, n: int) -> None:
+        new = np.unique(self.rng.integers(1, _KEYSPACE, size=n, dtype=np.uint64))
+        self.cache.insert_batch(new)  # passthrough: tier absorbs device-side
+        self.oracle = np.union1d(self.oracle, new)
+
+    def do_compact(self) -> None:
+        self.cache.maybe_compact()
+
+    def do_refresh(self, s: int) -> None:
+        self.tier.refresh(s % self.tier.sidx.n_shards)
+
+    def do_rebalance(self) -> None:
+        # direct trigger with a random traffic histogram: the windowed
+        # drift detector is exercised separately (test_sharded_index)
+        self.tier.rebalance(weights=self.rng.random(self.tier.sidx.n_shards))
+
+    def do_cache_rebuild(self, n: int) -> None:
+        self.cache.sketch.update(self.rng.choice(self.oracle, size=max(n, 1)))
+        self.cache.rebuild()
+
+    # -- invariants (asserted after every rule) ---------------------------
+    def check(self) -> None:
+        sidx = self.tier.sidx
+        # the tier's merged live key set IS the oracle, bit for bit
+        np.testing.assert_array_equal(self.tier._merged_table(), self.oracle)
+        fences = np.asarray(sidx.fences)
+        assert (fences[:-1] < fences[1:]).all(), "fences must stay strictly increasing"
+        assert fences[0] == self.oracle[0], "first fence anchors the table minimum"
+        # a derived read structure can lag the tier, never lead it
+        assert self.cache.built_epoch <= self.tier.epoch
+        # the drop-free reference sweep is bit-exact, sentinels included
+        qs = self.queries(64)
+        np.testing.assert_array_equal(
+            np.asarray(self.tier.lookup(qs, mode="ref")), true_ranks(self.oracle, qs)
+        )
+
+
+def _scripted_soak(seed: int, rounds: int) -> SoakHarness:
+    """The deterministic soak script: every operation type, every round."""
+    h = SoakHarness(seed=seed)
+    h.do_cache_rebuild(64)
+    h.check()
+    for r in range(rounds):
+        h.do_lookup()
+        h.do_insert(48 + 16 * (r % 3))
+        h.check()
+        if r % 2 == 0:
+            h.do_compact()
+        if r % 3 == 1:
+            h.do_refresh(r)
+        if r % 3 == 2:
+            h.do_rebalance()
+        h.do_cache_rebuild(32)
+        h.check()
+    return h
+
+
+def test_scripted_soak_fast():
+    h = _scripted_soak(seed=11, rounds=4)
+    # the script must actually have exercised the mutation lifecycle
+    m = h.tier.metrics()
+    assert m["ingested"] > 0 and m["rebalances"] >= 1
+    assert h.cache.metrics()["hotcache"]["rebuilds"] >= 5
+
+
+@pytest.mark.soak
+def test_scripted_soak_deep():
+    h = _scripted_soak(seed=13, rounds=24)
+    assert h.tier.metrics()["rebalances"] >= 8
+
+
+def test_soak_catches_skipped_invalidation(monkeypatch):
+    """The seeded-coherence-bug regression: if a tier mutation skips the
+    epoch bump, the cache keeps serving pre-mutation ranks — and this
+    suite's oracle comparison must catch exactly that.  The positive
+    control (real epoch path) stays coherent on the same scenario."""
+    h = SoakHarness(seed=7)
+    hot = h.oracle[-64:].copy()  # top keys: any insert below them shifts their ranks
+    h.cache.sketch.update(hot)
+    h.cache.rebuild()
+    below = np.unique(
+        h.rng.integers(1, int(h.oracle[0]), size=32, dtype=np.uint64)
+    )
+    below = np.setdiff1d(below, h.oracle)
+    assert len(below) > 0
+
+    # positive control: the real epoch path detects the mutation and the
+    # cached answers track the oracle
+    h.do_insert(len(below) // 2 or 1)
+    want = true_ranks(h.oracle, hot)
+    np.testing.assert_array_equal(np.asarray(h.cache.lookup(hot)), want)
+
+    # seed the bug: mutations stop bumping the staleness epoch
+    stale_ranks = np.asarray(h.cache.lookup(hot)).copy()
+    monkeypatch.setattr(TunedTier, "_bump_epoch", lambda self: None)
+    h.cache.insert_batch(below)
+    h.oracle = np.union1d(h.oracle, below)
+    got = np.asarray(h.cache.lookup(hot))
+    want = true_ranks(h.oracle, hot)
+    assert not (got == want).all(), "soak oracle failed to catch the seeded bug"
+    # and the divergence is precisely the stale pre-mutation ranks
+    np.testing.assert_array_equal(got, stale_ranks)
+    assert h.cache.metrics()["hotcache"]["stale"] is False  # undetected, as seeded
+
+
+if HAVE_HYPOTHESIS:
+
+    class ServingSoakMachine(RuleBasedStateMachine):
+        """Random interleavings of the soak operations; every rule ends
+        in the full invariant check against the numpy oracle."""
+
+        @initialize(seed=st.integers(min_value=0, max_value=2**16))
+        def setup(self, seed):
+            self.h = SoakHarness(seed=seed, n0=600, n_shards=4)
+
+        @rule()
+        def lookup(self):
+            self.h.do_lookup()
+
+        @rule(n=st.integers(min_value=1, max_value=96))
+        def insert(self, n):
+            self.h.do_insert(n)
+
+        @rule()
+        def compact(self):
+            self.h.do_compact()
+
+        @rule(s=st.integers(min_value=0, max_value=7))
+        def refresh(self, s):
+            self.h.do_refresh(s)
+
+        @rule()
+        def rebalance(self):
+            self.h.do_rebalance()
+
+        @rule(n=st.integers(min_value=1, max_value=64))
+        def rebuild_cache(self, n):
+            self.h.do_cache_rebuild(n)
+
+        @invariant()
+        def oracle_invariants(self):
+            if hasattr(self, "h"):
+                self.h.check()
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not baked into the image")
+def test_soak_machine_fast():
+    run_state_machine_as_test(
+        ServingSoakMachine,
+        settings=settings(max_examples=3, stateful_step_count=6, deadline=None),
+    )
+
+
+@pytest.mark.soak
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not baked into the image")
+def test_soak_machine_deep():
+    run_state_machine_as_test(
+        ServingSoakMachine,
+        settings=settings(max_examples=15, stateful_step_count=30, deadline=None),
+    )

@@ -380,3 +380,165 @@ def test_sharded_collectives_subprocess():
     )
     assert res.returncode == 0, f"stdout:\n{res.stdout}\nstderr:\n{res.stderr[-4000:]}"
     assert "ALL SHARDED OK" in res.stdout
+
+
+# ---------------------------------------------------------------------------
+# Skew-aware rebalancing (PR 9): weighted-quantile fences + donated re-shard
+# ---------------------------------------------------------------------------
+
+
+def test_weighted_quantile_bounds_degenerate_skew():
+    """All observed traffic on one shard: the split must hand that
+    shard's keys out across every shard while staying a strictly
+    increasing >= 1-key partition; all-zero weights fall back even."""
+    rng = np.random.default_rng(51)
+    table, _ = _table_and_queries(rng, n=4096)
+    sidx = si.ShardedIndex.build("RMI", table, n_shards=4, b=64)
+    fences = np.asarray(sidx.fences)
+    bounds = si.weighted_quantile_bounds(table, fences, [1.0, 0.0, 0.0, 0.0])
+    assert bounds[0] == 0 and bounds[-1] == len(table)
+    assert (np.diff(bounds) >= 1).all()
+    # the hot shard's old key range (first quarter) is split across all
+    # shards: every inner bound lands inside it
+    assert (bounds[1:-1] <= len(table) // 4).all()
+    even = si.weighted_quantile_bounds(table, fences, [0.0, 0.0, 0.0, 0.0])
+    np.testing.assert_array_equal(even, [0, 1024, 2048, 3072, 4096])
+    # single-key-per-shard degenerate table still partitions
+    tiny = table[:4]
+    tb = si.weighted_quantile_bounds(tiny, tiny, [9.0, 0.0, 0.0, 0.0])
+    np.testing.assert_array_equal(tb, [0, 1, 2, 3, 4])
+
+
+def test_rebalance_shards_donated_path_exact(rng):
+    """Moderate skew on a tier with stacked-capacity slack: the pure
+    donated re-shard path (no restack) must produce bit-exact lookups
+    with zero drops, and move the fences to the new bounds."""
+    # 4 x 2176 resident keys, m = pow2ceil(2176) = 4096: every shard has
+    # slack, so moderate boundary moves install via refresh_shard alone
+    table, qs = _table_and_queries(rng, n=8704, nq=512)
+    sidx = si.ShardedIndex.build("RMI", table, n_shards=4, b=64)
+    spec = registry.spec_for("RMI", b=64)
+    build = registry.entry("RMI").build
+    bounds = si.weighted_quantile_bounds(
+        table, np.asarray(sidx.fences), [2.0, 1.0, 1.0, 1.0]
+    )
+    assert not np.array_equal(np.diff(bounds), np.asarray(sidx.counts))
+    s2 = si.rebalance_shards(sidx, table, bounds, lambda part: build(spec, part))
+    np.testing.assert_array_equal(np.asarray(s2.counts), np.diff(bounds))
+    np.testing.assert_array_equal(np.asarray(s2.fences), table[bounds[:-1]])
+    got = np.asarray(si.sharded_lookup(s2, qs))
+    assert (got != si.DROPPED).all()
+    np.testing.assert_array_equal(got, true_ranks(table, qs))
+
+
+def test_rebalance_boundary_fence_keys(rng):
+    """Queries exactly ON and adjacent to the rebalanced fences — the
+    routing seam a off-by-one in the new bounds would corrupt first."""
+    table, _ = _table_and_queries(rng, n=8704)
+    sidx = si.ShardedIndex.build("RMI", table, n_shards=4, b=64)
+    spec = registry.spec_for("RMI", b=64)
+    build = registry.entry("RMI").build
+    bounds = si.weighted_quantile_bounds(
+        table, np.asarray(sidx.fences), [3.0, 1.0, 2.0, 1.0]
+    )
+    s2 = si.rebalance_shards(sidx, table, bounds, lambda part: build(spec, part))
+    fence_keys = table[bounds[1:-1]]
+    qs = np.concatenate(
+        [fence_keys, fence_keys - np.uint64(1), fence_keys + np.uint64(1), table[:1]]
+    )
+    got = np.asarray(si.sharded_lookup(s2, qs, mode="ref"))
+    np.testing.assert_array_equal(got, true_ranks(table, qs))
+
+
+def test_tier_rebalance_with_populated_gapped_delta():
+    """Rebalancing a GAPPED tier whose delta buffers hold live overflow
+    keys: the re-shard must fold delta + leaves into the new partition
+    with zero key loss and exact answers."""
+    from repro.index import GappedSpec
+    from repro.tune import RebuildPolicy, TunedTier
+
+    rng = np.random.default_rng(57)
+    table = np.unique(rng.integers(1, 2**61, size=3000, dtype=np.uint64))
+    tier = TunedTier(
+        table,
+        n_shards=4,
+        policy=RebuildPolicy(retune_frac=10.0),
+        spec=GappedSpec(leaf_cap=64, fill=0.75, delta_cap=512),
+    )
+    # a dense cluster inside one leaf's key range exhausts its gaps and
+    # overflows into the shard's sorted delta
+    lo, hi = int(table[40]), int(table[41])
+    cluster = np.unique(
+        rng.integers(lo + 1, max(hi, lo + 2), size=120, dtype=np.uint64)
+    )
+    cluster = np.setdiff1d(cluster, table)
+    tier.insert_batch(cluster)
+    merged = np.union1d(table, cluster)
+    assert tier.counters.overflowed > 0, "cluster failed to reach the delta buffer"
+    delta_live = int(np.asarray(tier.sidx.index.arrays["delta_count"]).sum())
+    assert delta_live > 0
+    tier.rebalance(weights=np.array([6.0, 1.0, 1.0, 1.0]))
+    np.testing.assert_array_equal(tier._merged_table(), merged)
+    qs = np.concatenate([rng.choice(merged, 256), cluster[:32]])
+    got = np.asarray(tier.lookup(qs, mode="ref"))
+    np.testing.assert_array_equal(got, true_ranks(merged, qs))
+    assert tier.metrics()["rebalances"] >= 1
+    assert tier.metrics()["retunes"] == 0
+
+
+def test_tier_refresh_non_pow2_shard_regression():
+    """Regression: a refreshed shard whose resident count is not a power
+    of two must be FITTED on the padded capacity-m table.  The seed
+    built the replacement on the raw merged keys, so static-kind models
+    (which normalise predictions by lookup-time table length)
+    mispredicted against the stacked padded row the moment pad > 0."""
+    from repro.tune import RebuildPolicy, TunedTier
+
+    rng = np.random.default_rng(59)
+    # 500 keys/shard, m = 512: pad > 0, the seed-corrupting shape
+    table = np.unique(rng.integers(1, 2**61, size=1100, dtype=np.uint64))[:1000]
+    tier = TunedTier(
+        table,
+        n_shards=2,
+        policy=RebuildPolicy(retune_frac=10.0, shard_refresh_frac=10.0),
+        spec=ix.RMISpec(b=32),
+    )
+    assert int(tier.sidx.counts[0]) < int(tier.sidx.tables.shape[1])
+    for s in range(2):
+        tier.refresh(s)  # identity refresh: no pending keys land
+    assert tier.counters.forced_restacks == 0
+    qs = rng.choice(table, size=512).astype(np.uint64)
+    np.testing.assert_array_equal(
+        np.asarray(tier.lookup(qs, mode="ref")), true_ranks(table, qs)
+    )
+
+
+def test_tier_maybe_rebalance_windowed_trigger(rng):
+    """The drift window: sustained single-shard hammering must trip the
+    query-driven rebalance (and only after ``rebalance_min_lookups``),
+    serving every batch exactly throughout."""
+    from repro.dist import reset_tier_metrics
+    from repro.tune import RebuildPolicy, TunedTier
+
+    reset_tier_metrics()
+    table, _ = _table_and_queries(rng, n=8704)
+    tier = TunedTier(
+        table,
+        n_shards=4,
+        policy=RebuildPolicy(
+            retune_frac=10.0,
+            rebalance_imbalance=1.5,
+            rebalance_min_lookups=3,
+        ),
+        spec=ix.RMISpec(b=64),
+    )
+    hot = table[: len(table) // 4]  # every query owned by shard 0
+    for _ in range(8):
+        qs = rng.choice(hot, size=256).astype(np.uint64)
+        got = np.asarray(tier.lookup(qs, mode="ref"))
+        np.testing.assert_array_equal(got, true_ranks(table, qs))
+    m = tier.metrics()
+    assert m["rebalances"] >= 1, "sustained skew never tripped the rebalancer"
+    assert m["retunes"] == 0
+    # post-rebalance: shard 0 no longer owns the whole hot range
+    assert int(np.asarray(tier.sidx.counts)[0]) < len(hot)
