@@ -3,7 +3,7 @@
 ``PYTHONPATH=src python -m benchmarks.run [--only NAME]``
 prints ``name,us_per_call,derived`` CSV lines (common.emit).
 
-``--trend`` switches to the artifact pipeline: the five JSON-artifact
+``--trend`` switches to the artifact pipeline: the six JSON-artifact
 benchmarks run at the CI bench-smoke configuration (smoke scale, the
 same flags ``.github/workflows/ci.yml`` passes), artifacts land in
 ``--artifacts-dir``, and each is immediately diffed against the
@@ -27,6 +27,7 @@ from pathlib import Path
 SMOKE_ENV = {"REPRO_BENCH_SCALE": "0.01", "REPRO_BENCH_QUERIES": "4096"}
 SMOKE_SHARDED = dict(n=8192, n_queries=4096)
 SMOKE_PARETO = dict(tiers=("L1",), datasets=("osm",), n_queries=2048, fit="vmap")
+SMOKE_TRAIN = dict(n=8192, datasets=("osm",), queries=4096)
 
 
 def run_suites(only: str | None) -> None:
@@ -62,7 +63,7 @@ def run_suites(only: str | None) -> None:
 
 
 def run_trend(artifacts_dir: Path, baselines: Path, tolerance: float) -> int:
-    """Generate the five JSON artifacts at smoke scale, then diff each
+    """Generate the six JSON artifacts at smoke scale, then diff each
     against the committed baselines.  Returns the number of failures."""
     # common.py reads SCALE/N_QUERIES from the environment at import
     # time, so pin the smoke config BEFORE any benchmark module import
@@ -75,6 +76,7 @@ def run_trend(artifacts_dir: Path, baselines: Path, tolerance: float) -> int:
         pareto_frontier,
         serve_slo,
         sharded_lookup,
+        training_time,
         trend,
         write_workload,
     )
@@ -113,6 +115,7 @@ def run_trend(artifacts_dir: Path, baselines: Path, tolerance: float) -> int:
         return report
 
     produce("pareto_frontier", _pareto)
+    produce("training_time", lambda: training_time.run(**SMOKE_TRAIN))
     produce("kernel_roofline", kernel_roofline.run)
     produce("write_workload", write_workload.run)
 

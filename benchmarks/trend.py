@@ -4,8 +4,9 @@ baselines (``benchmarks/baselines/``).
 The repo's bench trajectory starts here: every ``bench-smoke`` CI run
 produces the same JSON artifacts the baselines were generated from
 (``sharded_lookup.json``, ``pareto_frontier.json``,
-``kernel_roofline.json``, ``write_workload.json`` at smoke scale), and
-this tool diffs them:
+``training_time.json``, ``kernel_roofline.json``,
+``write_workload.json``, ``serve_slo.json`` at smoke scale), and this
+tool diffs them:
 
 * **trace counts — exact.**  The one-trace-per-(kind, backend)
   invariant is the repo's core compile-cost contract; a silent retrace
@@ -150,8 +151,26 @@ def _check_serve_slo(name: str, fresh: dict, base: dict, tol: float) -> list:
     return fails
 
 
+def _check_training_time(name: str, fresh: dict, base: dict, tol: float) -> list:
+    """kernel_roofline gates plus the fit-depth self-gate: the analytic
+    compiled sequential depth of the ``fit="fast"`` corridor fit must
+    stay strictly below the exact scan's *within the fresh artifact* —
+    machine-independent (stage counts, not wall time), so it is exact.
+    The ``*/exact`` rule already pins ``fit_depth/fast_sublinear/exact``."""
+    fails = _check_kernel_roofline(name, fresh, base, tol)
+    m = fresh.get("metrics", {})
+    fast, scan = m.get("train/fit_depth/fast/stages"), m.get("train/fit_depth/scan/stages")
+    if fast is not None and scan is not None and not fast < scan:
+        fails.append(
+            f"{name}: fast fit depth {fast:.0f} is not below scan depth {scan:.0f} "
+            "(the O(log n) fit claim)"
+        )
+    return fails
+
+
 _CHECKERS = {
     "sharded_lookup": _check_sharded_lookup,
+    "training_time": _check_training_time,
     "pareto_frontier": _check_pareto_frontier,
     "kernel_roofline": _check_kernel_roofline,
     # same shape/gates as kernel_roofline: metric-set equality, */exact

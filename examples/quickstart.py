@@ -131,6 +131,52 @@ def main():
     print(f"\nbatched scan-fit build: {bm.n_tables} PGM shards, one fit trace,")
     print("one lookup trace — exact on every shard (fit='auto').")
 
+    # --- O(log n) fast fits ---------------------------------------------
+    # fit="fast" swaps the sequential corridor scan for the blocked +
+    # associative-merge fit (docs/build_pipeline.md): compiled depth
+    # O(chunk + log^2 n) instead of O(n).  Boundaries are not
+    # bit-identical to the greedy's, but the model is a verified
+    # ε-model (device re-measure, lazy host fallback on degenerate
+    # keys) — so predecessor ranks stay exact.
+    bf = tune.build_many(ix.PGMSpec(eps=64), [np.asarray(s) for s in shards], fit="fast")
+    assert np.array_equal(np.asarray(bf.lookup(queries[:4096])), outs)
+    print("fast fit (O(log n) compile depth): ranks still exact on every shard.")
+
+    # --- rebuild while serving: the device fit-to-serve pipeline --------
+    # RebuildPolicy(device_refresh=True) closes the host round-trip: a
+    # drift-triggered shard refresh compiles pad -> corridor fit ->
+    # level assembly -> kernel re-encoding -> ok-gated donated install
+    # as ONE device program.  A rejected build (ok=False) leaves the
+    # old model serving and falls back to the classic host refresh —
+    # device_fit="scan" keeps the demo deterministic (the default
+    # "fast" fit may trade a fallback for its O(log n) depth when the
+    # refit lands on a segment-capacity boundary).
+    from repro import obs
+
+    tier = tune.TunedTier(
+        table,
+        n_shards=4,
+        spec=ix.PGMSpec(eps=64),
+        policy=tune.RebuildPolicy(
+            shard_refresh_frac=0.005,
+            retune_frac=10.0,
+            device_refresh=True,
+            device_fit="scan",
+        ),
+    )
+    before = obs.metric("device_refreshes").value(kind="PGM", outcome="ok")
+    lo, hi = int(table[1_000]), int(table[40_000])
+    drift = np.unique(rng.integers(lo, hi, size=1_200, dtype=np.uint64))
+    tier.insert_batch(drift)
+    merged_t = np.union1d(table, drift)
+    probe_t = tables.make_queries(merged_t, 10_000, seed=5)
+    assert (np.asarray(tier.lookup(probe_t)) == true_ranks(merged_t, probe_t)).all()
+    done = obs.metric("device_refreshes").value(kind="PGM", outcome="ok") - before
+    print(
+        f"rebuild-while-serving: {len(drift)} drifted keys -> {done:.0f} device "
+        "refresh(es), zero host sync on the serve path, lookups exact."
+    )
+
 
 if __name__ == "__main__":
     main()

@@ -77,7 +77,97 @@ def ceil_log2(n: int) -> int:
     return max(1, int(np.ceil(np.log2(n)))) if n > 1 else 1
 
 
-def chunked_corridor_scan(step, init, inputs, n: int, chunk: int):
+def ceil_log2_device(x):
+    """Device form of :func:`ceil_log2`: smallest ``k >= 1`` with
+    ``2**k >= x``, computed with exact integer shifts (no float log —
+    ``f64`` cannot represent every ``uint64`` exactly).  Used by the
+    single-program device builds to compare *required* search trip
+    counts against a tier's bucketed statics."""
+    x = jnp.maximum(jnp.asarray(x, dtype=jnp.int64), 2)
+    bl = bit_length_device((x - 1).astype(jnp.uint64)).astype(jnp.int64)
+    return jnp.maximum(bl, 1)
+
+
+def bit_length_device(x):
+    """``int.bit_length`` for uint64 device scalars/arrays, via exact
+    binary-shift reduction (f64 ``log2`` rounds above 2**53)."""
+    x = jnp.asarray(x, dtype=jnp.uint64)
+    out = jnp.zeros(x.shape, dtype=jnp.int32)
+    for sh in (32, 16, 8, 4, 2, 1):
+        has = (x >> jnp.uint64(sh)) > 0
+        out = out + jnp.where(has, jnp.int32(sh), jnp.int32(0))
+        x = jnp.where(has, x >> jnp.uint64(sh), x)
+    return out + jnp.where(x > 0, jnp.int32(1), jnp.int32(0))
+
+
+def segment_ids(mask):
+    """``(seg, start)`` for a boolean segment-start ``mask`` of shape
+    ``(n,)``: per-element segment id (dense, 0-based) and the per-id
+    start *index* array (capacity ``n``; unused ids hold the sentinel
+    ``n``).  The id assignment is one ``lax.associative_scan`` (log-depth
+    prefix sum) — the workhorse of the O(log n) fast-fit passes."""
+    import jax
+    from jax import lax
+
+    n = mask.shape[0]
+    seg = lax.associative_scan(jnp.add, mask.astype(jnp.int32)) - 1
+    idx = jnp.arange(n, dtype=POS_DTYPE)
+    start = jax.ops.segment_min(
+        jnp.where(mask, idx, n), seg, num_segments=n, indices_are_sorted=True
+    )
+    return seg, start
+
+
+def blocked_corridor_scan(step, block_init, inputs, n: int, chunk: int, count=None):
+    """Run a greedy corridor recurrence *blockwise*: O(chunk) sequential
+    depth regardless of ``n`` (vs the O(n / chunk) outer-scan depth of
+    :func:`chunked_corridor_scan`).  ``count`` optionally restricts
+    validity to a traced prefix (the device build pipeline fits PGM
+    upper levels over fixed-capacity arrays with traced live counts).
+
+    Elements are padded up to a multiple of ``chunk`` and reshaped to
+    ``(n // chunk, chunk)`` blocks; every block runs the *exact* greedy
+    ``step`` recurrence over its own elements under ``vmap``, seeded by
+    ``block_init(first_elem_inputs) -> carry`` — i.e. each block is
+    forced to re-anchor at its boundary.  The result is a valid corridor
+    segmentation with up to ``n / chunk`` extra boundaries, which the
+    kind-specific merge rounds (``pgm_segments_fast`` /
+    ``rs_knots_fast``) collapse in O(log n) associative passes.  The
+    same carry-through validity convention as
+    :func:`chunked_corridor_scan` applies (``step`` sees a validity flag
+    as its last input).
+
+    Returns the ``(n,)`` per-element flag array.
+    """
+    import jax
+    from jax import lax
+
+    chunk = max(int(chunk), 1)
+    pad = (-n) % chunk
+    valid = jnp.arange(n + pad) < n
+    if count is not None:
+        valid = valid & (jnp.arange(n + pad) < count)
+    padded = [jnp.pad(jnp.asarray(a), (0, pad)) for a in inputs] + [valid]
+    blocks = [a.reshape(-1, chunk) for a in padded]
+
+    def one_block(*block):
+        init = block_init(tuple(b[0] for b in block))
+
+        def elem(j, st):
+            c, flags = st
+            c, f = step(c, tuple(b[j] for b in block))
+            return c, flags.at[j].set(f)
+
+        _, flags = lax.fori_loop(
+            0, chunk, elem, (init, jnp.zeros((chunk,), dtype=bool))
+        )
+        return flags
+
+    flags = jax.vmap(one_block)(*blocks)
+    return flags.reshape(-1)[:n]
+
+
+def chunked_corridor_scan(step, init, inputs, n: int, chunk: int, count=None):
     """Run a greedy corridor recurrence as a chunked ``lax.scan``.
 
     ``step(carry, inp) -> (carry, flag)`` is the per-element cone update
@@ -100,6 +190,8 @@ def chunked_corridor_scan(step, init, inputs, n: int, chunk: int):
     chunk = max(int(chunk), 1)
     pad = (-n) % chunk
     valid = jnp.arange(n + pad) < n
+    if count is not None:
+        valid = valid & (jnp.arange(n + pad) < count)
     padded = [jnp.pad(jnp.asarray(a), (0, pad)) for a in inputs] + [valid]
     blocks = [a.reshape(-1, chunk) for a in padded]
 

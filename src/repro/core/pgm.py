@@ -31,13 +31,24 @@ import jax.numpy as jnp
 
 from repro.obs.timing import stopwatch
 from . import search
-from .cdf import POS_DTYPE, chunked_corridor_scan
+from .cdf import (
+    POS_DTYPE,
+    blocked_corridor_scan,
+    ceil_log2,
+    chunked_corridor_scan,
+    segment_ids,
+)
 
 _CHUNK = 4096
 
 #: Block size of the device scan fit (``pgm_segments_scan``): the outer
 #: ``lax.scan`` streams the table in blocks of this many keys.
 SCAN_CHUNK = 128
+
+#: Block size of the O(log n)-depth fast fit (``pgm_fit_fast``): keys are
+#: fit greedily inside vmapped blocks of this many elements, then block
+#: boundaries are merged away with associative passes.
+FAST_CHUNK = 256
 
 
 def pla_segments(keys_f64: np.ndarray, eps: int):
@@ -86,7 +97,7 @@ def pla_segments(keys_f64: np.ndarray, eps: int):
     return np.asarray(starts, dtype=np.int64), np.asarray(slopes, dtype=np.float64)
 
 
-def pgm_segments_scan(keys_f64, eps, *, chunk: int = SCAN_CHUNK):
+def pgm_segments_scan(keys_f64, eps, *, chunk: int = SCAN_CHUNK, count=None):
     """Array-native anchored-cone greedy ε-PLA: the device form of
     :func:`pla_segments`, as a chunked ``lax.scan`` over the running
     min/max corridor.
@@ -107,6 +118,14 @@ def pgm_segments_scan(keys_f64, eps, *, chunk: int = SCAN_CHUNK):
     n = keys.shape[0]
     eps = jnp.asarray(eps, dtype=jnp.float64)
     ranks = jnp.arange(n, dtype=jnp.float64)
+    step, init = _pgm_corridor_step(eps)
+    return chunked_corridor_scan(step, init, (keys, ranks), n, chunk, count=count)
+
+
+def _pgm_corridor_step(eps):
+    """(step, init) of the anchored-cone recurrence, shared by the exact
+    chunked scan and the blocked fast fit.  ``init`` uses ``s = -1`` as
+    the no-anchor sentinel, so the first valid element always flags."""
 
     def step(carry, inp):
         x0, s, lo, hi = carry
@@ -127,7 +146,144 @@ def pgm_segments_scan(keys_f64, eps, *, chunk: int = SCAN_CHUNK):
         return carry, bad & v
 
     init = (jnp.float64(0.0), jnp.float64(-1.0), jnp.float64(0.0), jnp.float64(jnp.inf))
-    return chunked_corridor_scan(step, init, (keys, ranks), n, chunk)
+    return step, init
+
+
+def _pgm_merge_round(keys, ranks, mask, eps, count=None):
+    """One parity merge round: re-test every odd-id segment against its
+    even left neighbour's *anchor* cone (exact corridor feasibility over
+    the union) and drop the odd boundary where the merged cone is
+    non-empty.  All reductions are associative-scan / segment ops —
+    O(log n) depth.  Chains of k mergeable segments collapse in
+    ceil(log2 k) rounds because ids re-densify between rounds.
+    Elements at positions >= ``count`` (traced live prefix, capacity
+    builds) contribute identity bounds."""
+    import jax
+
+    n = keys.shape[0]
+    idx = jnp.arange(n, dtype=POS_DTYPE)
+    seg, start = segment_ids(mask)
+    pair = seg // 2
+    a_pos = jnp.take(start, 2 * pair)
+    xa = jnp.take(keys, a_pos)
+    dy = ranks - a_pos.astype(jnp.float64)
+    dx = keys - xa
+    anchor = idx == a_pos
+    lo_b = jnp.where(anchor, -jnp.inf, (dy - eps) / dx)
+    hi_b = jnp.where(anchor, jnp.inf, (dy + eps) / dx)
+    if count is not None:
+        live = idx < count
+        lo_b = jnp.where(live, lo_b, -jnp.inf)
+        hi_b = jnp.where(live, hi_b, jnp.inf)
+    lo = jax.ops.segment_max(lo_b, pair, num_segments=n, indices_are_sorted=True)
+    hi = jax.ops.segment_min(hi_b, pair, num_segments=n, indices_are_sorted=True)
+    # NaN bounds (colliding f64 keys) compare False -> merge vetoed.
+    ok_pair = lo <= hi
+    drop = mask & ((seg % 2) == 1) & jnp.take(ok_pair, pair)
+    return mask & ~drop
+
+
+def pgm_device_slopes(keys, mask, eps, count=None):
+    """Device counterpart of :func:`segment_slopes` over a start mask.
+
+    Returns ``(slopes, start, seg)``: per-segment slopes at capacity
+    ``n`` (entries past the live segment count are unused), the segment
+    start index array, and the per-element segment id.  Exact min/max
+    segment reductions reproduce ``np.minimum.reduceat`` bit-for-bit,
+    so a mask produced by the exact scan fit yields byte-identical
+    slopes to the host assembly.
+
+    Example::
+
+        mask, ok = pgm_fit_fast(keys_f64, eps=16)
+        slopes, start, seg = pgm_device_slopes(jnp.asarray(keys_f64), mask, 16.0)
+    """
+    import jax
+
+    keys = jnp.asarray(keys, dtype=jnp.float64)
+    n = keys.shape[0]
+    eps = jnp.asarray(eps, dtype=jnp.float64)
+    idx = jnp.arange(n, dtype=POS_DTYPE)
+    seg, start = segment_ids(mask)
+    a_pos = jnp.take(start, seg)
+    dy = idx.astype(jnp.float64) - a_pos.astype(jnp.float64)
+    dx = keys - jnp.take(keys, a_pos)
+    anchor = idx == a_pos
+    lo_b = jnp.where(anchor, -jnp.inf, (dy - eps) / dx)
+    hi_b = jnp.where(anchor, jnp.inf, (dy + eps) / dx)
+    ones = jnp.ones((n,), dtype=POS_DTYPE)
+    if count is not None:
+        live = idx < count
+        lo_b = jnp.where(live, lo_b, -jnp.inf)
+        hi_b = jnp.where(live, hi_b, jnp.inf)
+        ones = jnp.where(live, ones, 0)
+    lo = jax.ops.segment_max(lo_b, seg, num_segments=n, indices_are_sorted=True)
+    hi = jax.ops.segment_min(hi_b, seg, num_segments=n, indices_are_sorted=True)
+    length = jax.ops.segment_sum(
+        ones, seg, num_segments=n, indices_are_sorted=True
+    )
+    hi_f = jnp.where(jnp.isfinite(hi), hi, jnp.maximum(lo, 0.0) + 1.0)
+    slopes = jnp.maximum(0.5 * (jnp.maximum(lo, 0.0) + jnp.maximum(hi_f, 0.0)), 0.0)
+    slopes = jnp.where(length == 1, 0.0, slopes)
+    return slopes, start, seg
+
+
+def pgm_verified_eps(keys, mask, eps, count=None):
+    """Measured max |prediction - rank| of the PLA induced by ``mask``,
+    on device (the verified-ε re-measure backing ``fit="fast"``).  NaN
+    propagates (and compares False against any bound), so degenerate
+    fits always fail the ``measured <= eps`` check and fall back."""
+    keys = jnp.asarray(keys, dtype=jnp.float64)
+    n = keys.shape[0]
+    slopes, start, seg = pgm_device_slopes(keys, mask, eps, count=count)
+    a_pos = jnp.take(start, seg)
+    pred = a_pos.astype(jnp.float64) + jnp.take(slopes, seg) * (
+        keys - jnp.take(keys, a_pos)
+    )
+    err = jnp.abs(pred - jnp.arange(n, dtype=jnp.float64))
+    if count is not None:
+        err = jnp.where(jnp.arange(n, dtype=POS_DTYPE) < count, err, 0.0)
+    return jnp.max(err)
+
+
+def pgm_fit_fast(keys_f64, eps, *, chunk: int = FAST_CHUNK, rounds=None, count=None):
+    """O(log n)-depth ε-PLA fit: the ``fit="fast"`` PGM entry point.
+
+    Blocked vmapped greedy (exact corridor inside ``chunk``-sized
+    blocks, every block re-anchored at its boundary) followed by
+    associative parity merge rounds that collapse the spurious block
+    boundaries, then a device verified-ε re-measure.  The result is a
+    *valid* ε-PLA — every segment satisfies the corridor invariant —
+    but segment boundaries are NOT bit-identical to the greedy's
+    (typically a few % extra segments on curvy data).  Compiled
+    sequential depth is O(chunk + log² n), constant in the table size,
+    vs O(n / SCAN_CHUNK) for :func:`pgm_segments_scan`.
+
+    Returns ``(mask, ok)``: the boolean segment-start mask and a scalar
+    device bool — ``ok`` is False when the measured error exceeds
+    ``eps`` (degenerate f64 key collisions), in which case callers fall
+    back to the exact scan fit (:mod:`repro.tune.batched` does this
+    lazily on host).
+
+    Example::
+
+        mask, ok = pgm_fit_fast(table.astype(np.float64), eps=32)
+        starts = np.flatnonzero(np.asarray(mask))  # valid ε-PLA starts
+    """
+    keys = jnp.asarray(keys_f64, dtype=jnp.float64)
+    n = keys.shape[0]
+    eps = jnp.asarray(eps, dtype=jnp.float64)
+    ranks = jnp.arange(n, dtype=jnp.float64)
+    step, init = _pgm_corridor_step(eps)
+    mask = blocked_corridor_scan(
+        step, lambda first: init, (keys, ranks), n, chunk, count=count
+    )
+    nblocks = -(-n // max(int(chunk), 1))
+    r = int(rounds) if rounds is not None else ceil_log2(max(nblocks, 2)) + 1
+    for _ in range(r):
+        mask = _pgm_merge_round(keys, ranks, mask, eps, count=count)
+    ok = pgm_verified_eps(keys, mask, eps, count=count) <= eps
+    return mask, ok
 
 
 def segment_slopes(keys_f64: np.ndarray, starts: np.ndarray, eps) -> np.ndarray:

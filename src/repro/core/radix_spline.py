@@ -21,8 +21,8 @@ import jax.numpy as jnp
 
 from repro.obs.timing import stopwatch
 from . import search
-from .cdf import POS_DTYPE, chunked_corridor_scan
-from .pgm import SCAN_CHUNK
+from .cdf import POS_DTYPE, blocked_corridor_scan, ceil_log2, chunked_corridor_scan, segment_ids
+from .pgm import FAST_CHUNK, SCAN_CHUNK
 
 _CHUNK = 4096
 
@@ -86,6 +86,17 @@ def rs_knots_scan(keys_f64, eps, *, chunk: int = SCAN_CHUNK):
     x = keys[1 : n - 1]
     xprev = keys[0 : n - 2]
     ranks = jnp.arange(1, n - 1, dtype=jnp.float64)
+    step = _rs_corridor_step(eps)
+    init = (keys[0], jnp.float64(0.0), jnp.float64(-jnp.inf), jnp.float64(jnp.inf))
+    flags = chunked_corridor_scan(step, init, (x, xprev, ranks), n - 2, chunk)
+    # a violation at point i marks knot i-1; endpoints are always knots
+    mask = jnp.pad(flags, (0, 2))
+    return mask.at[0].set(True).at[n - 1].set(True)
+
+
+def _rs_corridor_step(eps):
+    """Per-point GreedySplineCorridor recurrence, shared by the exact
+    chunked scan and the blocked fast fit."""
 
     def step(carry, inp):
         x0, y0, lo, hi = carry
@@ -109,11 +120,112 @@ def rs_knots_scan(keys_f64, eps, *, chunk: int = SCAN_CHUNK):
         carry = tuple(jnp.where(v, a, b) for a, b in zip(nxt, carry))
         return carry, bad & v
 
-    init = (keys[0], jnp.float64(0.0), jnp.float64(-jnp.inf), jnp.float64(jnp.inf))
-    flags = chunked_corridor_scan(step, init, (x, xprev, ranks), n - 2, chunk)
-    # a violation at point i marks knot i-1; endpoints are always knots
-    mask = jnp.pad(flags, (0, 2))
-    return mask.at[0].set(True).at[n - 1].set(True)
+    return step
+
+
+def _rs_merge_round(keys, kmask, eps):
+    """One parity merge round over the knot mask: every odd-id knot is
+    a removal candidate; the chord from its left to its right neighbour
+    knot is re-measured over all spanned elements (associative segment
+    reductions, O(log n) depth) and the knot is dropped when the chord
+    error stays within ``eps``.  Endpoint knots (id 0 and the last id)
+    are never candidates."""
+    import jax
+
+    n = keys.shape[0]
+    idx = jnp.arange(n, dtype=POS_DTYPE)
+    kid, kpos = segment_ids(kmask)
+    last = kid[n - 1]
+    g = kid | 1  # the candidate knot this element's chord error tests
+    p0 = jnp.take(kpos, jnp.maximum(g - 1, 0))
+    p1 = jnp.take(kpos, jnp.minimum(g + 1, n - 1))
+    x0 = jnp.take(keys, jnp.clip(p0, 0, n - 1))
+    x1 = jnp.take(keys, jnp.clip(p1, 0, n - 1))
+    r0 = p0.astype(jnp.float64)
+    r1 = p1.astype(jnp.float64)
+    pred = r0 + (keys - x0) * (r1 - r0) / (x1 - x0)
+    err = jnp.abs(pred - idx.astype(jnp.float64))
+    maxerr = jax.ops.segment_max(err, g, num_segments=n, indices_are_sorted=True)
+    ok_g = maxerr <= eps  # NaN (colliding f64 keys) compares False
+    drop = kmask & ((kid % 2) == 1) & (kid < last) & jnp.take(ok_g, kid)
+    return kmask & ~drop
+
+
+def rs_verified_eps(keys, kmask):
+    """Measured max |chord prediction - rank| for the spline induced by
+    ``kmask``, on device — the same clipped-interpolation formula
+    :func:`build_rs` uses for its post-build ``eps_eff``, so given the
+    same knots the two agree bit-for-bit."""
+    keys = jnp.asarray(keys, dtype=jnp.float64)
+    n = keys.shape[0]
+    if n <= 2:
+        return jnp.float64(0.0)
+    idx = jnp.arange(n, dtype=POS_DTYPE)
+    kid, kpos = segment_ids(kmask)
+    last = kid[n - 1]
+    j = jnp.minimum(kid, last - 1)
+    p0 = jnp.take(kpos, j)
+    p1 = jnp.take(kpos, j + 1)
+    x1 = jnp.take(keys, jnp.clip(p0, 0, n - 1))
+    x2 = jnp.take(keys, jnp.clip(p1, 0, n - 1))
+    t = jnp.clip((keys - x1) / jnp.maximum(x2 - x1, 1.0), 0.0, 1.0)
+    pred = p0.astype(jnp.float64) + t * (p1 - p0).astype(jnp.float64)
+    return jnp.max(jnp.abs(pred - idx.astype(jnp.float64)))
+
+
+def rs_knots_fast(keys_f64, eps, *, chunk: int = FAST_CHUNK, rounds=None):
+    """O(log n)-depth GreedySplineCorridor fit: the ``fit="fast"`` RS
+    entry point.
+
+    Blocked vmapped greedy — block ``b`` re-anchors at element
+    ``b * chunk``, which becomes a forced knot — followed by
+    associative parity merge rounds that remove block-boundary knots
+    whose neighbour-to-neighbour chord stays within ``eps``, then a
+    device chord re-measure.  Knot placement is NOT bit-identical to
+    :func:`spline_knots` (a few % extra knots on curvy data) but the
+    corridor quality contract is re-checked: ``ok`` is True iff the
+    measured chord error is within ``eps``.  On ``ok == False`` callers
+    fall back to the exact scan fit; either way ``build_rs`` re-derives
+    ``eps_eff`` from the actual knots, so *correctness* never depends
+    on which fit produced them.  Compiled sequential depth is
+    O(chunk + log² n), constant in the table size.
+
+    Returns ``(mask, ok)`` — ``(n,)`` bool knot mask (always includes
+    0 and n-1) and the scalar device bool.
+
+    Example::
+
+        mask, ok = rs_knots_fast(table.astype(np.float64), eps=32)
+        model = build_rs(table, eps=32, knots=np.flatnonzero(np.asarray(mask)))
+    """
+    keys = jnp.asarray(keys_f64, dtype=jnp.float64)
+    n = keys.shape[0]
+    if n <= 2:
+        return jnp.ones((n,), dtype=bool), jnp.bool_(True)
+    chunk = max(int(chunk), 2)
+    eps = jnp.asarray(eps, dtype=jnp.float64)
+    # elements 1 .. n-1; block b anchors at element b*chunk (forced knot)
+    x = keys[1:]
+    xprev = keys[:-1]
+    ranks = jnp.arange(1, n, dtype=jnp.float64)
+    step = _rs_corridor_step(eps)
+
+    def block_init(first):
+        xi, xp, r, v = first
+        return (xp, r - 1.0, jnp.float64(-jnp.inf), jnp.float64(jnp.inf))
+
+    flags = blocked_corridor_scan(step, block_init, (x, xprev, ranks), n - 1, chunk)
+    # a violation flag at element i marks knot i-1 — i.e. mask position
+    # i-1, which is exactly the flag's own position in the shifted array
+    kmask = jnp.pad(flags, (0, 1))
+    kmask = kmask | (jnp.arange(n, dtype=POS_DTYPE) % chunk == 0)
+    kmask = kmask.at[n - 1].set(True)
+    nblocks = -(-n // chunk)
+    r = int(rounds) if rounds is not None else ceil_log2(max(nblocks, 2)) + 1
+    for _ in range(r):
+        kmask = _rs_merge_round(keys, kmask, eps)
+    ok = rs_verified_eps(keys, kmask) <= eps
+    return kmask, ok
 
 
 @dataclass

@@ -177,6 +177,103 @@ def pgm_kernel_arrays(model, table_np: np.ndarray):
     return arrays, steps
 
 
+def pgm_level_reencode_device(keys_l, slopes_l, start_l, nseg, child, child_count, kmin, span, inv_span):
+    """Device (jittable) counterpart of ONE level of
+    :func:`pgm_kernel_arrays`: re-encode a PGM level in the fused
+    kernel's f32 anchored arithmetic and re-measure its prediction error
+    at every *valid* child entry.
+
+    Arrays are fixed-capacity with traced live counts: ``keys_l`` /
+    ``slopes_l`` / ``start_l`` hold ``nseg`` valid segments (key pads
+    are the max-key sentinel, so the segment route stays exact — see
+    :func:`pgm_kernel_arrays` for the host-side arithmetic this
+    replicates operation-for-operation), and ``child`` holds
+    ``child_count`` valid entries whose errors count toward the bound.
+
+    Returns ``(u0_l, slope_u, max_err)``; the caller accumulates the
+    per-level errors into the widened ``pk_eps`` exactly as the host
+    re-encoder does.
+
+    Example::
+
+        u0, su, err = pgm_level_reencode_device(
+            lvl_keys, lvl_slopes, lvl_starts, nseg,
+            child_keys, child_count, kmin, span, inv_span)
+    """
+
+    def u_of(keys_u64):
+        u = (keys_u64.astype(jnp.float64) - kmin) * inv_span
+        return jnp.clip(u, 0.0, 1.0).astype(jnp.float32)
+
+    u0_l = u_of(keys_l)
+    slope_u = (slopes_l * span).astype(jnp.float32)
+    # exact segment assignment — max-key pads sort above every real child
+    s = jnp.clip(
+        jnp.searchsorted(keys_l, child, side="right") - 1, 0, jnp.maximum(nseg - 1, 0)
+    )
+    r0 = jnp.take(start_l, s).astype(jnp.float32)
+    du = jnp.maximum(u_of(child) - jnp.take(u0_l, s), jnp.float32(0.0))
+    pred = r0 + jnp.take(slope_u, s) * du  # the kernel's f32 arithmetic
+    cap = child.shape[0]
+    err = jnp.abs(pred.astype(jnp.float64) - jnp.arange(cap, dtype=jnp.float64))
+    err = jnp.where(jnp.arange(cap) < child_count, err, 0.0)
+    return u0_l, slope_u, jnp.max(err)
+
+
+def rs_kernel_arrays_device(knot_keys, knot_ranks, m_valid, table_row, kmin, span, inv_span):
+    """Device (jittable) counterpart of :func:`rs_kernel_arrays`:
+    re-encode a RadixSpline knot set in the fused kernel's f32 anchored
+    arithmetic and re-measure ε with that exact arithmetic.
+
+    ``knot_keys`` / ``knot_ranks`` are fixed-capacity rows with
+    ``m_valid`` live knots (max-key / edge sentinels beyond); every key
+    of ``table_row`` is treated as valid (device refreshes fit on the
+    padded capacity table, so ``n == table_row.shape[0]``).
+
+    Returns ``(u0, slope, rk_eps)`` with ``rk_eps`` the widened i32
+    bound — same ``ceil(max_err) + 2`` margin as the host re-encoder.
+
+    Example::
+
+        u0, sl, rk_eps = rs_kernel_arrays_device(
+            kk, kr, m_valid, padded_tab, kmin, span, inv_span)
+    """
+    n = table_row.shape[0]
+    cap = knot_keys.shape[0]
+
+    def u_of(keys_u64):
+        u = (keys_u64.astype(jnp.float64) - kmin) * inv_span
+        return jnp.clip(u, 0.0, 1.0).astype(jnp.float32)
+
+    u0 = u_of(knot_keys)
+    i = jnp.arange(cap)
+    nxt = jnp.minimum(i + 1, cap - 1)
+    dy = (jnp.take(knot_ranks, nxt) - knot_ranks).astype(jnp.float32)
+    du = jnp.take(u0, nxt) - u0
+    valid_pair = (i + 1) < m_valid
+    # u-collided knot pairs (f32 resolution) predict y1 flat, like host
+    slope = jnp.where(valid_pair & (du > 0), dy / jnp.where(du > 0, du, 1.0), 0.0).astype(
+        jnp.float32
+    )
+    j = jnp.clip(
+        jnp.searchsorted(knot_keys, table_row, side="right") - 1,
+        0,
+        jnp.maximum(m_valid - 2, 0),
+    )
+    y1 = jnp.take(knot_ranks, j).astype(jnp.float32)
+    pred = y1 + jnp.take(slope, j) * jnp.maximum(
+        u_of(table_row) - jnp.take(u0, j), jnp.float32(0.0)
+    )
+    err = jnp.abs(pred.astype(jnp.float64) - jnp.arange(n, dtype=jnp.float64))
+    # boundary extension: each knot under its left segment's model
+    pred_b = knot_ranks.astype(jnp.float32) + slope * jnp.maximum(du, jnp.float32(0.0))
+    err_b = jnp.abs(pred_b.astype(jnp.float64) - jnp.take(knot_ranks, nxt).astype(jnp.float64))
+    err_b = jnp.where(valid_pair, err_b, 0.0)
+    max_err = jnp.maximum(jnp.max(err), jnp.max(err_b))
+    rk_eps = jnp.minimum(jnp.ceil(max_err) + 2.0, float(n)).astype(jnp.int32)
+    return u0, slope, rk_eps
+
+
 def rs_kernel_arrays(model, table_np: np.ndarray):
     """Re-encode a :class:`repro.core.radix_spline.RSModel` for the fused
     Pallas lookup (:mod:`repro.kernels.rs_search`), re-verifying ε.

@@ -148,6 +148,10 @@ CATALOGUE: tuple = (
      "keys rejected as duplicates"),
     ("mutation_compactions", "counter", ("kind",),
      "compact() calls (explicit + auto)"),
+    ("fit_fast_fallbacks", "counter", ("kind",),
+     "fit='fast' verified-eps failures that fell back to the exact scan fit"),
+    ("device_refreshes", "counter", ("kind", "outcome"),
+     "single-program device shard refreshes (outcome=ok | fallback)"),
     ("serve_ticks", "counter", ("engine",),
      "DecodeEngine continuous-batching ticks"),
     ("serve_tokens_decoded", "counter", ("engine",),

@@ -15,9 +15,22 @@ the layer that decides *which* index to serve:
 * :mod:`~repro.tune.rebuild` — ``RebuildPolicy`` + ``TunedTier``:
   serving-side drift detection, donated shard hot-swaps, full
   re-tunes, and the counters ``DecodeEngine.metrics()`` reports.
+* :mod:`~repro.tune.device_fit` — the single-program device
+  fit-to-serve pipeline: ``device_refresh`` compiles fit → leaf
+  assembly → donated install as ONE jit for the PGM/RS kinds
+  (``RebuildPolicy(device_refresh=True)`` opts a tier in).
 """
 
-from .batched import BATCH_BACKENDS, FITS, VMAP_KINDS, BatchedIndexes, build_grid, build_many
+from .batched import (
+    BATCH_BACKENDS,
+    FAST_KINDS,
+    FITS,
+    VMAP_KINDS,
+    BatchedIndexes,
+    build_grid,
+    build_many,
+)
+from .device_fit import DEVICE_FITS, DEVICE_REFRESH_KINDS, device_refresh
 from .mining import cdfshop_grid, mine_sy_rmi
 from .pareto import (
     Candidate,
@@ -33,8 +46,12 @@ from .rebuild import RebuildPolicy, TunedTier
 
 __all__ = [
     "BATCH_BACKENDS",
+    "DEVICE_FITS",
+    "DEVICE_REFRESH_KINDS",
+    "FAST_KINDS",
     "FITS",
     "VMAP_KINDS",
+    "device_refresh",
     "BatchedIndexes",
     "build_grid",
     "build_many",

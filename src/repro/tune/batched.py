@@ -54,16 +54,18 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.obs import metric
 from repro.obs.timing import stopwatch
 from repro.core.cdf import POS_DTYPE
 from repro.core.pgm import (
     BICRITERIA_MAX_ITERS,
     bicriteria_eps_bounds,
     build_pgm,
+    pgm_fit_fast,
     pgm_segments_scan,
     segment_slopes,
 )
-from repro.core.radix_spline import build_rs, rs_knots_scan
+from repro.core.radix_spline import build_rs, rs_knots_fast, rs_knots_scan
 from repro.core.rmi import assemble_rmi, fit_root, rmi_leaf_fit
 from repro.dist.sharded_index import (
     _harmonize,
@@ -78,15 +80,27 @@ _MAXKEY = np.uint64(np.iinfo(np.uint64).max)
 
 #: Fit strategies: ``host`` loops the registered builder (bit-exact with
 #: per-table ``build``); ``vmap`` batches the kind's array-native fit
-#: stage (every learned family: RMI leaf fits, PGM/RS corridor scans);
-#: ``auto`` — the recommended batch-build mode — picks ``vmap`` where it
-#: applies and falls back to the host builder otherwise.
-FITS = ("host", "vmap", "auto")
+#: stage (every learned family: RMI leaf fits, PGM/RS corridor scans —
+#: bit-exact with the host greedy); ``fast`` uses the O(log n)-depth
+#: blocked/associative corridor fits (:func:`repro.core.pgm.pgm_fit_fast`
+#: / :func:`repro.core.radix_spline.rs_knots_fast`) — valid ε-models,
+#: boundaries explicitly NOT bit-identical, device verified-ε re-measure
+#: with lazy host fallback to the exact scan fit; ``auto`` — the
+#: recommended batch-build mode — picks ``vmap`` where it applies and
+#: falls back to the host builder otherwise.
+FITS = ("host", "vmap", "fast", "auto")
 
 #: Kinds with an array-native vmappable fit stage: the two-level RMI
 #: family (leaf least-squares) and the scan-formulated corridor fits
 #: (PGM greedy ε-PLA, bi-criteria PGM, RadixSpline).
 VMAP_KINDS = ("RMI", "SY-RMI", "PGM", "PGM_M", "RS")
+
+#: Kinds with an O(log n)-depth ``fit="fast"`` corridor fit (the
+#: ε-corridor families).  Always a subset of :data:`VMAP_KINDS` — the
+#: exact scan fit doubles as the fast fit's fallback.  The analyzer's R4
+#: registry probe asserts every kind claimed here passes the verified-ε
+#: check (or demonstrably falls back) on live probe tables.
+FAST_KINDS = ("PGM", "PGM_M", "RS")
 
 #: Backends the batched lookup supports — the full ``Index.lookup``
 #: set.  ``pallas`` dispatches the batched ``(table, q_tile)``-grid
@@ -127,6 +141,7 @@ def _leaf_fit_many(u, root_coefs, b: int):
 
 @jax.jit
 def _normalize_many(tables, kmin, inv_span):
+    count_trace("fit:RMI-normalize", "vmap")  # python side effect: per trace
     # identical expression to build_rmi/query: subtract then multiply by
     # the reciprocal — a divide here could flip a boundary key's leaf
     u = (tables.astype(jnp.float64) - kmin[:, None]) * inv_span[:, None]
@@ -203,6 +218,53 @@ def _rs_boundaries_many(tables_f64, eps_f64):
     return jax.vmap(rs_knots_scan, in_axes=(0, 0))(tables_f64, eps_f64)
 
 
+@jax.jit
+def _pgm_boundaries_fast_many(tables_f64, eps_f64):
+    """vmap of the O(log n) blocked PGM fit: returns (masks, oks)."""
+    count_trace("fit:PGM", "fast")  # python side effect: runs once per trace
+    return jax.vmap(pgm_fit_fast, in_axes=(0, 0))(tables_f64, eps_f64)
+
+
+@jax.jit
+def _rs_boundaries_fast_many(tables_f64, eps_f64):
+    """vmap of the O(log n) blocked RS fit: returns (masks, oks)."""
+    count_trace("fit:RS", "fast")  # python side effect: runs once per trace
+    return jax.vmap(rs_knots_fast, in_axes=(0, 0))(tables_f64, eps_f64)
+
+
+def _masks_pgm_scan(keys, eps_np):
+    return np.asarray(_pgm_boundaries_many(keys, jnp.asarray(eps_np)))
+
+
+def _masks_rs_scan(keys, eps_np):
+    return np.asarray(_rs_boundaries_many(keys, jnp.asarray(eps_np)))
+
+
+def _fast_masks(keys, eps_np, fast_many, scan_masks, kind: str):
+    """Fast boundary masks with the lazy verified-ε fallback: members
+    whose device re-measure failed (``ok == False``) are re-fit with the
+    exact scan — decided on host AFTER the fast program ran, so the fast
+    program never compiles the O(n)-depth exact path into itself."""
+    masks, oks = fast_many(keys, jnp.asarray(eps_np))
+    # np.array (copy): asarray of a device array is a read-only view,
+    # and the fallback arm writes the re-fit rows in place
+    masks, oks = np.array(masks), np.asarray(oks)
+    if not oks.all():
+        bad = np.flatnonzero(~oks)
+        metric("fit_fast_fallbacks").inc(len(bad), kind=kind)
+        exact = scan_masks(keys[bad], eps_np[bad])
+        masks[bad] = exact
+    return masks
+
+
+def _masks_pgm_fast(keys, eps_np):
+    return _fast_masks(keys, eps_np, _pgm_boundaries_fast_many, _masks_pgm_scan, "PGM")
+
+
+def _masks_rs_fast(keys, eps_np):
+    return _fast_masks(keys, eps_np, _rs_boundaries_fast_many, _masks_rs_scan, "RS")
+
+
 def _check_same_length(tables):
     n = len(tables[0])
     if any(len(t) != n for t in tables):
@@ -224,22 +286,23 @@ def _pgm_model_from_mask(table, eps: int, mask):
     return build_pgm(table, eps=eps, l0=(starts, slopes))
 
 
-def _vmap_fit_pgm(specs: list, tables: list) -> list:
+def _vmap_fit_pgm(specs: list, tables: list, *, masks_fn=_masks_pgm_scan) -> list:
     """Batched PGM build: ONE vmapped corridor-scan trace for the whole
     batch's leaf segmentation (per-member ε traced), host assembly —
-    bit-exact with the registered per-table builder."""
+    bit-exact with the registered per-table builder.  ``masks_fn`` swaps
+    in the O(log n) fast boundaries for ``fit="fast"``."""
     from repro.index import impls
 
     _check_same_length(tables)
     eps = np.asarray([max(int(s.eps), 1) for s in specs], dtype=np.float64)
-    masks = np.asarray(_pgm_boundaries_many(_stacked_f64(tables), jnp.asarray(eps)))
+    masks = masks_fn(_stacked_f64(tables), eps)
     return [
         impls.pgm_model_to_index(spec.kind, _pgm_model_from_mask(t, int(e), mask), t)
         for spec, t, e, mask in zip(specs, tables, eps, masks)
     ]
 
 
-def _vmap_fit_pgm_bicriteria(specs: list, tables: list) -> list:
+def _vmap_fit_pgm_bicriteria(specs: list, tables: list, *, masks_fn=_masks_pgm_scan) -> list:
     """Batched bi-criteria PGM: the per-member ε bisection of
     :func:`repro.core.pgm.build_pgm_bicriteria` run in lockstep, every
     step's segmentations answered by the shared vmapped scan trace
@@ -263,7 +326,7 @@ def _vmap_fit_pgm_bicriteria(specs: list, tables: list) -> list:
         eps_all = np.asarray(
             [float(eps_by_member.get(i, 1)) for i in range(n_members)], dtype=np.float64
         )
-        masks = np.asarray(_pgm_boundaries_many(keys, jnp.asarray(eps_all)))
+        masks = masks_fn(keys, eps_all)
         return {
             i: _pgm_model_from_mask(tables[i], e, masks[i]) for i, e in eps_by_member.items()
         }
@@ -293,16 +356,18 @@ def _vmap_fit_pgm_bicriteria(specs: list, tables: list) -> list:
     return out
 
 
-def _vmap_fit_rs(specs: list, tables: list) -> list:
+def _vmap_fit_rs(specs: list, tables: list, *, masks_fn=_masks_rs_scan) -> list:
     """Batched RadixSpline build: ONE vmapped corridor-scan trace for
     the whole batch's knot selection (per-member ε traced), host
     assembly (radix table + verified ε re-measure) — bit-exact with the
-    registered per-table builder."""
+    registered per-table builder.  ``masks_fn`` swaps in the O(log n)
+    fast knots for ``fit="fast"`` (``eps_eff`` is always re-measured
+    from the actual knots, so correctness is fit-mode independent)."""
     from repro.index import impls
 
     _check_same_length(tables)
     eps = np.asarray([int(s.eps) for s in specs], dtype=np.float64)
-    masks = np.asarray(_rs_boundaries_many(_stacked_f64(tables), jnp.asarray(eps)))
+    masks = masks_fn(_stacked_f64(tables), eps)
     out = []
     for spec, t, mask in zip(specs, tables, masks):
         knots = np.flatnonzero(mask).astype(np.int64)
@@ -320,6 +385,15 @@ _VMAP_FITS = {
     "RS": _vmap_fit_rs,
 }
 
+#: kind -> batched O(log n) fast fit (``fit="fast"``): the corridor fits
+#: with the fast boundary stage swapped in; assembly is shared with the
+#: exact path.
+_FAST_FITS = {
+    "PGM": partial(_vmap_fit_pgm, masks_fn=_masks_pgm_fast),
+    "PGM_M": partial(_vmap_fit_pgm_bicriteria, masks_fn=_masks_pgm_fast),
+    "RS": partial(_vmap_fit_rs, masks_fn=_masks_rs_fast),
+}
+
 
 def _vmap_fit(specs: list, tables: list) -> list:
     kind = specs[0].kind
@@ -329,6 +403,17 @@ def _vmap_fit(specs: list, tables: list) -> list:
             f"fit='vmap' is not supported for kind {kind!r}: it has no array-native "
             f"fit stage (vmappable kinds: {VMAP_KINDS}); use fit='auto' to vmap where "
             "supported and fall back to the host builder otherwise"
+        )
+    return fit_fn(specs, tables)
+
+
+def _fast_fit(specs: list, tables: list) -> list:
+    kind = specs[0].kind
+    fit_fn = _FAST_FITS.get(kind)
+    if fit_fn is None:
+        raise ValueError(
+            f"fit='fast' is not supported for kind {kind!r}: it has no O(log n) "
+            f"corridor fit (fast kinds: {FAST_KINDS}); use fit='vmap' or 'auto'"
         )
     return fit_fn(specs, tables)
 
@@ -521,6 +606,17 @@ def build_many(kind_or_spec, tables, *, fit: str = "host", **params) -> BatchedI
     the rest; explicit ``fit="vmap"`` on a kind without an array-native
     fit raises.
 
+    ``fit="fast"`` (corridor kinds only, :data:`FAST_KINDS`) uses the
+    O(log n)-depth blocked/associative fits: valid ε-models whose
+    boundaries are explicitly NOT bit-identical to the greedy's; a
+    device verified-ε re-measure falls back to the exact scan fit per
+    member when it fails (counted in the ``fit_fast_fallbacks``
+    metric).  Example::
+
+        bm = build_many(PGMSpec(eps=32), [t0, t1], fit="fast")
+        assert np.array_equal(bm.lookup(q), build_many(
+            PGMSpec(eps=32), [t0, t1]).lookup(q))  # ranks always exact
+
     Example — one spec, a tier of tables, every backend incl. the
     batched Pallas kernels::
 
@@ -543,7 +639,9 @@ def build_many(kind_or_spec, tables, *, fit: str = "host", **params) -> BatchedI
         fit_tables = [_pad_sorted_table(t, m) for t in tables]
     entry = registry.entry(spec.kind)
     use_vmap = fit == "vmap" or (fit == "auto" and spec.kind in VMAP_KINDS)
-    if use_vmap:
+    if fit == "fast":
+        per = _fast_fit([spec] * len(fit_tables), fit_tables)
+    elif use_vmap:
         per = _vmap_fit([spec] * len(fit_tables), fit_tables)
     else:
         per = [entry.build(spec, t) for t in fit_tables]
@@ -605,7 +703,7 @@ def build_grid(specs, table_np, *, fit: str = "auto") -> list:
     n = len(table_np)
     out: dict[int, Index] = {}
     groups: dict[tuple, list] = {}
-    if fit in ("auto", "vmap"):
+    if fit in ("auto", "vmap", "fast"):
         for i, spec in enumerate(specs):
             if spec.kind in ("RMI", "SY-RMI"):
                 b, _ = _rmi_plan(spec, n)
@@ -614,10 +712,12 @@ def build_grid(specs, table_np, *, fit: str = "auto") -> list:
                 # scan-fit kinds: ε is traced, so every member of a kind
                 # shares one vmapped corridor-scan call
                 groups.setdefault((spec.kind,), []).append((i, spec))
-    for members in groups.values():
-        if len(members) < 2:
+    for key, members in groups.items():
+        use_fast = fit == "fast" and key[0] in FAST_KINDS
+        if len(members) < 2 and not use_fast:
             continue  # a lone entry gains nothing from the batch axis
-        built = _vmap_fit([s for _, s in members], [table_np] * len(members))
+        fit_fn = _fast_fit if use_fast else _vmap_fit
+        built = fit_fn([s for _, s in members], [table_np] * len(members))
         for (i, _), idx in zip(members, built):
             out[i] = idx
     for i, spec in enumerate(specs):

@@ -91,6 +91,15 @@ class RebuildPolicy:
     rebalance_drop_rate: float = 0.002
     #: lookups a drift window must span before it counts as *sustained*
     rebalance_min_lookups: int = 8
+    #: run shard refreshes as ONE donated device program (fit → leaf
+    #: assembly → install, :func:`repro.tune.device_fit.device_refresh`)
+    #: for the kinds that support it; a failed device build (verified-ε
+    #: miss, capacity, fences) falls back to the classic host path and
+    #: counts in the ``device_refreshes`` obs metric
+    device_refresh: bool = False
+    #: fit mode of the device refresh program: ``"fast"`` (O(log n)
+    #: depth, verified-ε) or ``"scan"`` (exact, O(n / chunk) depth)
+    device_fit: str = "fast"
 
 
 #: lifecycle counter fields, in the order metrics() reports them.  Each
@@ -316,8 +325,18 @@ class TunedTier:
     def refresh(self, s: int) -> None:
         """Rebuild shard ``s`` with the tier's spec and hot-swap it via
         the donated ``refresh_shard`` path; fall back to a full restack
-        when the rebuilt shard no longer fits the stacked structure."""
+        when the rebuilt shard no longer fits the stacked structure.
+
+        With ``policy.device_refresh`` enabled (and a supporting kind),
+        the rebuild first attempts the single-program device pipeline —
+        fit, leaf assembly and install compiled as one donated jit
+        (:func:`repro.tune.device_fit.device_refresh`); a build the
+        device program rejects (verified-ε miss, capacity, fences,
+        trip-count budgets) leaves the tier untouched and falls through
+        to the classic host path below."""
         merged = np.unique(np.concatenate([self._shard_keys(s)] + self._pending[s]))
+        if self._try_device_refresh(s, merged):
+            return
         try:
             # static kinds must be FITTED on the padded resident row
             # (shard_build_table), or the installed model mispredicts
@@ -336,6 +355,35 @@ class TunedTier:
         self.counters.pending -= self._pending_count(s)
         self._pending[s] = []
         self._bump_epoch()
+
+    def _try_device_refresh(self, s: int, merged: np.ndarray) -> bool:
+        """The device-program arm of :meth:`refresh`.  Returns True when
+        the donated single-program pipeline installed the shard; False
+        routes the caller to the classic host path (a build the device
+        program *rejected* additionally counts a ``fallback`` outcome in
+        the ``device_refreshes`` obs metric — the tier content is
+        untouched in that case, so the host path starts clean)."""
+        p = self.policy
+        if not p.device_refresh:
+            return False
+        from repro import obs
+
+        from .device_fit import DEVICE_REFRESH_KINDS, device_refresh
+
+        kind = self.spec.kind
+        m = int(self.sidx.tables.shape[1])
+        if kind not in DEVICE_REFRESH_KINDS or m < 2 or not 0 < len(merged) <= m:
+            return False
+        self.sidx, ok = device_refresh(self.sidx, s, merged, self.spec.eps, fit=p.device_fit)
+        if not bool(ok):  # lazy host sync, off the serve path
+            obs.metric("device_refreshes").inc(kind=kind, outcome="fallback")
+            return False
+        obs.metric("device_refreshes").inc(kind=kind, outcome="ok")
+        self.counters.shard_refreshes += 1
+        self.counters.pending -= self._pending_count(s)
+        self._pending[s] = []
+        self._bump_epoch()
+        return True
 
     def retune(self) -> None:
         """Re-run the bi-criteria selection on the merged table and

@@ -1,0 +1,181 @@
+"""The single-program device fit-to-serve pipeline and the fast-fit
+fallback machinery (no hypothesis needed — these run everywhere).
+
+Covers the fit="fast" verified-ε contract's failure arm (f64-colliding
+keys must veto, and build_many must re-fit just the bad members with
+the exact scan), plus tune.device_refresh: ok installs serve the merged
+keys exactly, rejected builds leave the tier bit-identically serving
+the old model, and the TunedTier policy arm counts both outcomes in the
+``device_refreshes`` metric.
+"""
+
+import numpy as np
+import pytest
+
+from repro import obs, tune
+from repro import index as ix
+from repro.core.cdf import true_ranks
+from repro.core.pgm import pgm_fit_fast
+from repro.core.radix_spline import rs_knots_fast
+from repro.data import distributions
+from repro.dist import sharded_index as si
+from repro.tune.device_fit import DEVICE_REFRESH_KINDS, device_refresh
+
+# adjacent keys at 2^60 collide in f64 (53-bit mantissa): the corridor
+# sees dx = 0, slopes go NaN, and the verified-ε re-measure must veto
+_COLLIDING = (np.uint64(1) << np.uint64(60)) + np.arange(1024, dtype=np.uint64)
+
+# 2000 keys/shard in a pow2-2048 stacked table: headroom for drift
+_N, _SHARDS = 8000, 4
+
+_SPECS = {
+    "PGM": ix.PGMSpec(eps=32),
+    "RS": ix.RSSpec(eps=16, r_bits=8),
+}
+
+
+def _drifted(sidx, shard, n_new, seed=1):
+    """``n_new``-ish fresh keys strictly inside ``shard``'s key range,
+    plus the shard's merged keyset."""
+    cnt = int(sidx.counts[shard])
+    old = np.asarray(sidx.tables[shard][:cnt])
+    rng = np.random.default_rng(seed)
+    drift = np.unique(rng.integers(int(old[10]), int(old[-10]), n_new, dtype=np.uint64))
+    return drift, np.union1d(old, drift)
+
+
+# ---------------------------------------------------------------------------
+# fit="fast" fallback machinery
+# ---------------------------------------------------------------------------
+
+
+def test_fast_fit_rejects_f64_collisions():
+    """Fallback-trigger regression: on a table whose u64 keys collide
+    after the f64 cast, both fast fits must return ``ok == False``
+    (NaN propagates through the re-measure and compares False against
+    any bound) — never a silently invalid model."""
+    keys = _COLLIDING.astype(np.float64)
+    assert len(np.unique(keys)) < len(keys)  # the collision premise
+    _, ok = pgm_fit_fast(keys, 16.0)
+    assert not bool(ok)
+    _, ok = rs_knots_fast(keys, 16.0)
+    assert not bool(ok)
+
+
+def test_build_many_fast_falls_back_per_member():
+    """The lazy host fallback: in a mixed fit="fast" batch the
+    colliding member is re-fit with the exact scan (counted once in the
+    fit_fast_fallbacks metric, per kind) while the healthy member keeps
+    its fast fit — and the healthy member's ranks stay exact."""
+    good = distributions.generate("osm", 1024, seed=3)
+    qs = np.sort(np.random.default_rng(0).choice(good, 256))
+    for spec, kind in ((ix.PGMSpec(eps=16), "PGM"), (ix.RSSpec(eps=16, r_bits=8), "RS")):
+        before = obs.metric("fit_fast_fallbacks").value(kind=kind)
+        bm = tune.build_many(spec, [_COLLIDING, good], fit="fast")
+        assert obs.metric("fit_fast_fallbacks").value(kind=kind) - before == 1
+        got = np.asarray(bm.lookup(qs))[1]
+        np.testing.assert_array_equal(got, true_ranks(good, qs))
+
+
+# ---------------------------------------------------------------------------
+# tune.device_refresh: the ok-gated single-program install
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", sorted(DEVICE_REFRESH_KINDS))
+@pytest.mark.parametrize("fit", ("fast", "scan"))
+def test_device_refresh_contract(kind, fit):
+    """The install contract, both arms: on ``ok`` the tier serves the
+    merged keyset exactly; on rejection every leaf kept its old value,
+    so lookups stay exact against the *original* table.  The exact scan
+    fit must always install here (ample capacity headroom); the fast
+    fit may trade a rejection for its O(log n) depth when the refit
+    lands on a capacity/trip-budget boundary — either arm is correct,
+    and both are asserted."""
+    table = distributions.generate("osm", _N, seed=0)
+    spec = _SPECS[kind]
+    sidx = si.ShardedIndex.build(spec, table, n_shards=_SHARDS)
+    drift, merged = _drifted(sidx, shard=1, n_new=40)
+    # sidx is DONATED to the refresh program: no reads after this call
+    s2, ok = device_refresh(sidx, 1, merged, eps=spec.eps, fit=fit)
+    if fit == "scan":
+        assert bool(ok)
+    served = np.union1d(table, drift) if bool(ok) else table
+    if bool(ok):
+        assert int(s2.counts[1]) == len(merged)
+    qs = np.sort(np.random.default_rng(2).choice(served, 512))
+    got = np.asarray(si.sharded_lookup(s2, qs))
+    np.testing.assert_array_equal(got, true_ranks(served, qs))
+
+
+def test_device_refresh_host_side_rejections():
+    """Conditions that need a restack anyway raise host-side instead of
+    burning a device program: unsupported kinds and over-capacity
+    merges (same cues as refresh_shard)."""
+    table = distributions.generate("osm", _N, seed=0)
+    rmi = si.ShardedIndex.build(ix.RMISpec(b=64), table, n_shards=_SHARDS)
+    with pytest.raises(ValueError, match="device_refresh supports"):
+        device_refresh(rmi, 0, table[:100], eps=32)
+    sidx = si.ShardedIndex.build(_SPECS["PGM"], table, n_shards=_SHARDS)
+    cap = int(sidx.tables.shape[1])
+    over = np.arange(1, cap + 2, dtype=np.uint64)
+    with pytest.raises(ValueError, match="restack the tier"):
+        device_refresh(sidx, 0, over, eps=32)
+    with pytest.raises(ValueError, match="unknown device fit"):
+        device_refresh(sidx, 0, table[:100], eps=32, fit="greedy")
+
+
+# ---------------------------------------------------------------------------
+# TunedTier policy arm: ok / fallback outcomes
+# ---------------------------------------------------------------------------
+
+
+def _tier(kind, device_fit):
+    table = distributions.generate("osm", _N, seed=0)
+    tier = tune.TunedTier(
+        table,
+        n_shards=_SHARDS,
+        spec=_SPECS[kind],
+        policy=tune.RebuildPolicy(
+            shard_refresh_frac=0.015,  # 30 pending keys per 2000-key shard
+            retune_frac=10.0,
+            device_refresh=True,
+            device_fit=device_fit,
+        ),
+    )
+    return table, tier
+
+
+def test_tuned_tier_device_refresh_ok():
+    """Drift past shard_refresh_frac with device_refresh=True runs the
+    single-program path: the ok outcome is counted, the pending buffer
+    drains, and lookups are exact on the merged keyset."""
+    table, tier = _tier("PGM", device_fit="scan")
+    # stay under the 2048 pow2 capacity: merged <= 2000 + ~35
+    drift, _ = _drifted(tier.sidx, shard=1, n_new=35)
+    before = obs.metric("device_refreshes").value(kind="PGM", outcome="ok")
+    tier.insert_batch(drift)
+    assert obs.metric("device_refreshes").value(kind="PGM", outcome="ok") - before == 1
+    assert tier.counters.pending == 0
+    merged = np.union1d(table, drift)
+    qs = np.sort(np.random.default_rng(3).choice(merged, 512))
+    np.testing.assert_array_equal(np.asarray(tier.lookup(qs)), true_ranks(merged, qs))
+
+
+def test_tuned_tier_device_refresh_fallback_stays_exact():
+    """A rejected device build (fast fit on a capacity boundary) counts
+    the fallback outcome and the classic host refresh still lands the
+    drift — the tier never serves a stale or invalid model."""
+    table, tier = _tier("RS", device_fit="fast")
+    # stay under the 2048 pow2 capacity: merged <= 2000 + ~35
+    drift, _ = _drifted(tier.sidx, shard=1, n_new=35)
+    fb = obs.metric("device_refreshes").value(kind="RS", outcome="fallback")
+    ok = obs.metric("device_refreshes").value(kind="RS", outcome="ok")
+    tier.insert_batch(drift)
+    fb = obs.metric("device_refreshes").value(kind="RS", outcome="fallback") - fb
+    ok = obs.metric("device_refreshes").value(kind="RS", outcome="ok") - ok
+    assert fb + ok == 1  # exactly one device attempt, outcome recorded
+    assert tier.counters.pending == 0
+    merged = np.union1d(table, drift)
+    qs = np.sort(np.random.default_rng(4).choice(merged, 512))
+    np.testing.assert_array_equal(np.asarray(tier.lookup(qs)), true_ranks(merged, qs))

@@ -187,6 +187,82 @@ def test_rs_knots_scan_matches_greedy(data):
     assert np.array_equal(np.flatnonzero(mask), knots)
 
 
+# ---------------------------------------------------------------------------
+# O(log n) fast fits: valid ε-models, verified-ε fallback on degenerate keys
+# ---------------------------------------------------------------------------
+
+
+def _fast_table(data) -> np.ndarray:
+    """A table for the fast-fit validity tests: the benchmark
+    distributions plus constant-gap runs (f64-exact keys, so the
+    verified-ε re-measure must pass).  The degenerate dup-tail shape is
+    exercised by the deterministic fallback tests below instead — f64
+    key collisions are *supposed* to fail the re-measure."""
+    from repro.data import distributions
+
+    kind = data.draw(st.sampled_from(_SCAN_DISTS + ("const-gap",)), label="dist")
+    n = data.draw(st.integers(min_value=3, max_value=700), label="n")
+    seed = data.draw(st.integers(min_value=0, max_value=2**16), label="seed")
+    if kind == "const-gap":
+        gap = data.draw(st.integers(min_value=1, max_value=1 << 20), label="gap")
+        start = data.draw(st.integers(min_value=0, max_value=1 << 40), label="start")
+        return np.uint64(start) + np.arange(n, dtype=np.uint64) * np.uint64(gap)
+    return as_table(distributions.generate(kind, n, seed=seed))
+
+
+@settings(max_examples=25, deadline=None)
+@given(data=st.data())
+def test_pgm_fit_fast_is_valid_eps_pla(data):
+    """pgm_fit_fast returns ``ok`` and a mask whose induced PLA (with
+    the shared segment_slopes) predicts every rank within ε — the
+    fit="fast" contract: a *valid* ε-model, not a bit-identical one.
+    The check recomputes the error on host, independently of the
+    device verified-ε re-measure that produced ``ok``."""
+    from repro.core.pgm import pgm_fit_fast, segment_slopes
+
+    table = _fast_table(data)
+    eps = data.draw(st.sampled_from((8, 32, 128)), label="eps")
+    keys = table.astype(np.float64)
+    mask, ok = pgm_fit_fast(keys, float(eps))
+    assert bool(ok)
+    starts = np.flatnonzero(np.asarray(mask))
+    assert starts[0] == 0
+    slopes = segment_slopes(keys, starts, eps)
+    seg_of = np.searchsorted(starts, np.arange(len(keys)), side="right") - 1
+    pred = starts[seg_of] + slopes[seg_of] * (keys - keys[starts[seg_of]])
+    assert np.all(np.abs(pred - np.arange(len(keys))) <= eps + 1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(data=st.data())
+def test_rs_knots_fast_is_valid_spline(data):
+    """rs_knots_fast returns ``ok`` and a knot mask whose chord
+    interpolation (the same clipped formula build_rs re-measures with)
+    predicts every rank within ε; first and last key are always
+    knots."""
+    from repro.core.radix_spline import rs_knots_fast
+
+    table = _fast_table(data)
+    eps = data.draw(st.sampled_from((8, 32, 128)), label="eps")
+    keys = table.astype(np.float64)
+    kmask, ok = rs_knots_fast(keys, float(eps))
+    assert bool(ok)
+    knots = np.flatnonzero(np.asarray(kmask))
+    n = len(keys)
+    assert knots[0] == 0 and knots[-1] == n - 1
+    j = np.searchsorted(knots, np.arange(n), side="right") - 1
+    j = np.minimum(j, max(len(knots) - 2, 0))
+    p0, p1 = knots[j], knots[np.minimum(j + 1, len(knots) - 1)]
+    t = np.clip((keys - keys[p0]) / np.maximum(keys[p1] - keys[p0], 1.0), 0.0, 1.0)
+    pred = p0 + t * (p1 - p0)
+    assert np.all(np.abs(pred - np.arange(n)) <= eps + 1e-6)
+
+
+# The deterministic fallback-trigger regressions (f64-colliding keys ->
+# ok=False -> per-member scan re-fit) live in tests/test_device_fit.py:
+# they need no hypothesis, so they run even where it isn't installed.
+
+
 @settings(max_examples=20, deadline=None)
 @given(st.data())
 def test_searchsorted_segments(data):

@@ -26,6 +26,14 @@ registry and probing each registered kind:
   deep inside a tier refresh;
 * ``space_bytes() <= nbytes()`` on the built artifact (the PR 3
   model-constituent accounting invariant);
+* the **fit-mode probe**: the batched-build capability ladder must
+  nest — ``DEVICE_REFRESH_KINDS ⊆ FAST_KINDS ⊆ VMAP_KINDS ⊆ kinds()``
+  (a kind cannot claim the O(log n) fast fit without the scan fallback
+  the fast path re-fits with, nor a device refresh without a fast
+  fit) — and each FAST kind's corridor fit honours the verified-ε
+  contract: ``ok`` on a well-conditioned probe table, ``ok == False``
+  on f64-colliding keys (the NaN veto that triggers the lazy scan
+  fallback);
 * the **mutation probe**: every kind in ``updatable_kinds()`` must
   absorb/overflow an insert batch with a coherent
   :class:`~repro.index.mutation.InsertReport`, stay bit-exact against
@@ -123,6 +131,67 @@ class RegistryContractRule(ProjectRule):
         "backend (BATCH_BACKENDS/TIER_BACKENDS ⊆ BACKENDS)"
     )
 
+    def _check_fit_modes(self, kinds, registry, np):
+        """The batched-build capability ladder and the fit="fast"
+        verified-ε contract, probed against the live registry."""
+        try:
+            from repro.core.pgm import pgm_fit_fast
+            from repro.core.radix_spline import rs_knots_fast
+            from repro.tune.batched import FAST_KINDS, VMAP_KINDS
+            from repro.tune.device_fit import DEVICE_REFRESH_KINDS
+        except Exception as e:  # pragma: no cover - partial tree
+            yield _finding(f"fit-mode probe could not import repro.tune ({e!r})")
+            return
+
+        ladder = (
+            ("DEVICE_REFRESH_KINDS", DEVICE_REFRESH_KINDS, "FAST_KINDS", FAST_KINDS),
+            ("FAST_KINDS", FAST_KINDS, "VMAP_KINDS", VMAP_KINDS),
+            ("VMAP_KINDS", VMAP_KINDS, "registry.kinds()", kinds),
+        )
+        for lo_name, lo, hi_name, hi in ladder:
+            extra = set(lo) - set(hi)
+            if extra:
+                yield _finding(
+                    f"{lo_name} claims kind(s) {sorted(extra)} outside {hi_name} "
+                    f"— the fit capability ladder must nest (a fast fit needs "
+                    f"the scan fallback; a device refresh needs a fast fit)"
+                )
+
+        # verified-ε contract per fast corridor fit (by query_key: PGM_M
+        # produces PGM-shaped indexes and shares PGM's fit)
+        fits = {"pgm": pgm_fit_fast, "rs": rs_knots_fast}
+        well = np.arange(1, 513, dtype=np.uint64) * np.uint64(977)
+        # adjacent u64 keys at 2^60 collide after the f64 cast
+        colliding = (np.uint64(1) << np.uint64(60)) + np.arange(512, dtype=np.uint64)
+        for kind in FAST_KINDS:
+            if kind not in kinds:
+                continue  # already reported by the ladder check
+            fit = fits.get(registry.entry(kind).query_key)
+            if fit is None:
+                yield _finding(
+                    f"kind {kind!r} is in FAST_KINDS but no fast corridor fit "
+                    f"is known for its query_key — wire it in repro.tune.batched"
+                )
+                continue
+            try:
+                _, ok_good = fit(well.astype(np.float64), 32.0)
+                _, ok_bad = fit(colliding.astype(np.float64), 32.0)
+            except Exception as e:
+                yield _finding(f"kind {kind!r}: fast fit probe raised {e!r}")
+                continue
+            if not bool(ok_good):
+                yield _finding(
+                    f"kind {kind!r}: fast fit returned ok=False on a "
+                    f"well-conditioned table — every fit='fast' build would "
+                    f"silently pay the scan fallback"
+                )
+            if bool(ok_bad):
+                yield _finding(
+                    f"kind {kind!r}: fast fit returned ok=True on f64-colliding "
+                    f"keys — the verified-ε re-measure lost its NaN veto and "
+                    f"invalid models would install",
+                )
+
     def check_project(self, root: Path):
         src = root / "src"
         if str(src) not in sys.path:
@@ -165,6 +234,9 @@ class RegistryContractRule(ProjectRule):
                 "a kind answered batched must be answerable in a tier (both run "
                 "the same batched kernels)",
             )
+        # --- fit-mode capability ladder + verified-ε probe ---
+        yield from self._check_fit_modes(kinds, registry, np)
+
         # --- probe tables: one easy (near-uniform), one hard (clustered) ---
         t_easy = distributions.generate("face", 512, seed=11)
         t_hard = distributions.generate("osm", 512, seed=13)

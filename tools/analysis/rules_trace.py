@@ -21,6 +21,11 @@ trace happens:
   mutations after the first trace are silently invisible.  (The
   deliberate ``count_trace`` python-side-effect idiom routes through a
   function call and is not flagged.)
+* **Unledgered fit/refresh programs** — every *module-level* jitted
+  function in ``src/repro/tune/`` must call ``count_trace`` in its
+  body: the bench-trend baselines diff trace counts exactly, so a new
+  batched-fit or device-refresh program that skips the ledger ships a
+  blind spot the trend gate can never catch.
 """
 
 from __future__ import annotations
@@ -70,6 +75,8 @@ class TraceDisciplineRule(AstRule):
     def check_module(self, mod: Module):
         mutable_globals = _module_mutable_globals(mod.tree)
         jit_wrapped = astutil.module_jit_wrapped(mod.tree)
+        if mod.rel.replace("\\", "/").startswith("src/repro/tune/"):
+            yield from self._check_tune_trace_ledger(mod, jit_wrapped)
         for fn in ast.walk(mod.tree):
             if not isinstance(fn, astutil.FuncDef):
                 continue
@@ -86,6 +93,32 @@ class TraceDisciplineRule(AstRule):
                 traced = astutil.kernel_traced_params(fn)
                 kind = "kernel body"
             yield from self._check_fn(mod, fn, traced, mutable_globals, kind)
+
+    def _check_tune_trace_ledger(self, mod: Module, jit_wrapped):
+        """Module-level jitted functions in repro.tune must count their
+        traces: the bench-trend baselines diff ``trace_counts()``
+        exactly, so an unledgered fit/refresh program is invisible to
+        the trend gate."""
+        for fn in mod.tree.body:
+            if not isinstance(fn, astutil.FuncDef):
+                continue
+            if astutil.jit_static_info(fn) is None and fn.name not in jit_wrapped:
+                continue
+            calls = (
+                astutil.call_name(n)
+                for n in ast.walk(fn)
+                if isinstance(n, ast.Call)
+            )
+            if "count_trace" not in calls:
+                yield mod.finding(
+                    self.id,
+                    fn,
+                    f"module-level jitted function `{fn.name}` in repro.tune "
+                    f"never calls count_trace — its compiles are invisible to "
+                    f"the trace ledger and the bench-trend baselines",
+                    "add count_trace(<name>, <backend>) as the first statement "
+                    "(python side effect: runs once per trace)",
+                )
 
     def _check_fn(self, mod: Module, fn, traced, mutable_globals, kind):
         # nested defs (shard_map blocks, fori bodies) are walked in place:

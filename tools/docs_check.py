@@ -1,7 +1,7 @@
 #!/usr/bin/env python
 """Docs consistency gate (the CI ``docs-check`` step).
 
-Four checks, all stdlib + repro only:
+Five checks, all stdlib + repro only:
 
 1. **Backend support matrix** — the table tagged
    ``<!-- docs-check:backend-matrix -->`` in ``docs/backends.md`` must
@@ -19,7 +19,15 @@ Four checks, all stdlib + repro only:
    ``docs/observability.md`` must have one row per metric in
    ``repro.obs.metric_catalogue()`` with the matching type and label
    set — register a metric, document it, or CI fails.
-4. **Links and anchors** — every relative markdown link in README.md
+4. **Fit-mode matrix** — the table tagged
+   ``<!-- docs-check:fit-modes -->`` in ``docs/build_pipeline.md``
+   must have one row per registered kind and one column per build fit
+   capability (``host``, ``vmap``, ``fast``, ``device refresh``), and
+   each cell's support claim (anything not starting with ``n/a``)
+   must match the live capability tuples ``repro.tune.VMAP_KINDS`` /
+   ``FAST_KINDS`` / ``DEVICE_REFRESH_KINDS`` — documenting a fit mode
+   the code does not register (or vice versa) fails CI.
+5. **Links and anchors** — every relative markdown link in README.md
    and docs/*.md must resolve to an existing file, and ``#anchor``
    fragments must match a heading in the target (GitHub slugification).
 
@@ -38,6 +46,7 @@ ROOT = Path(__file__).resolve().parents[1]
 MATRIX_TAG = "<!-- docs-check:backend-matrix -->"
 RULES_TAG = "<!-- docs-check:analysis-rules -->"
 METRICS_TAG = "<!-- docs-check:metric-catalogue -->"
+FIT_MODES_TAG = "<!-- docs-check:fit-modes -->"
 LINK_RE = re.compile(r"(?<!!)\[[^\]]*\]\(([^)\s]+)\)")
 HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
 
@@ -150,6 +159,57 @@ def check_metric_catalogue() -> list:
     return errors
 
 
+def check_fit_modes() -> list:
+    """docs/build_pipeline.md's fit-mode matrix == the live capability
+    tuples: a cell not starting with ``n/a`` claims support, and the
+    claim set per column must equal the corresponding registry tuple
+    (``host`` = every registered kind)."""
+    from repro.index import registry
+    from repro.tune import DEVICE_REFRESH_KINDS, FAST_KINDS, VMAP_KINDS
+
+    errors = []
+    try:
+        columns, rows = parse_matrix(
+            (ROOT / "docs" / "build_pipeline.md").read_text(), FIT_MODES_TAG
+        )
+    except (OSError, ValueError) as e:
+        return [f"docs/build_pipeline.md fit-mode matrix: {e}"]
+    kinds = registry.kinds()
+    capability = {
+        "host": tuple(kinds),
+        "vmap": VMAP_KINDS,
+        "fast": FAST_KINDS,
+        "device refresh": DEVICE_REFRESH_KINDS,
+    }
+    for col in capability:
+        if col not in columns:
+            errors.append(f"fit-mode matrix is missing the {col!r} column")
+    for kind in kinds:
+        if kind not in rows:
+            errors.append(f"registered kind {kind!r} has no row in the fit-mode matrix")
+            continue
+        for col, supported in capability.items():
+            cell = rows[kind].get(col, "")
+            if not cell:
+                errors.append(f"fit-mode matrix cell ({kind}, {col}) is empty")
+                continue
+            claims = not cell.lower().startswith("n/a")
+            if claims and kind not in supported:
+                errors.append(
+                    f"fit-mode matrix claims {col!r} support for {kind!r}; the code "
+                    f"registers {supported}"
+                )
+            if not claims and kind in supported:
+                errors.append(
+                    f"fit-mode matrix marks ({kind}, {col}) n/a; the code registers "
+                    f"{kind!r} in {supported}"
+                )
+    for kind in rows:
+        if kind not in kinds:
+            errors.append(f"fit-mode matrix documents unregistered kind {kind!r}")
+    return errors
+
+
 def slugify(heading: str) -> str:
     """GitHub-style heading -> anchor slug."""
     h = re.sub(r"[`*_]", "", heading.strip().lower())
@@ -191,6 +251,7 @@ def main() -> int:
         check_backend_matrix()
         + check_analysis_rules()
         + check_metric_catalogue()
+        + check_fit_modes()
         + check_links()
     )
     for e in errors:
